@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: CSV emission, timing, graph suite access."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+import jax
+
+QUICK = os.environ.get("BENCH_QUICK", "1") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock seconds of a jit'd callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def suite_graphs(scale_div: int | None = None):
+    """Reduced-scale stand-ins for G1..G8 (generator-matched to Table 1)."""
+    from repro.graphs.generators import GRAPH_SUITE
+
+    div = scale_div if scale_div is not None else (4 if QUICK else 1)
+    out = {}
+    for gid, spec in GRAPH_SUITE.items():
+        n = max(2048, spec.n_reduced // div)
+        out[gid] = (spec, spec.make(n, 0))
+    return out

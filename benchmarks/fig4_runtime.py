@@ -1,0 +1,53 @@
+"""Fig. 4: end-to-end runtime, TC-MIS vs ECL-MIS (and Luby) across the suite.
+
+Two evidence levels:
+  * CPU wall-clock of the full jitted algorithms (structural sanity — shows
+    rounds-to-convergence and relative algorithm cost, NOT TC speedups);
+  * roofline-projected TPU step times read from the dry-run JSONs when
+    present (experiments/dryrun/tcmis__G*__single.json) — the real per-round
+    performance model on the target hardware.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit, suite_graphs, time_fn
+from repro.core import TCMISConfig, build_block_tiles, ecl_mis, luby_mis, tc_mis
+
+
+def main() -> None:
+    for gid, (spec, g) in suite_graphs(scale_div=8).items():
+        tiled = build_block_tiles(g, tile_size=64)
+        key = jax.random.key(0)
+
+        t_luby = time_fn(lambda: luby_mis(g, key))
+        t_ecl = time_fn(lambda: ecl_mis(g, key))
+        t_tc = time_fn(
+            lambda: tc_mis(g, tiled, key, TCMISConfig(heuristic="h3"))
+        )
+        emit(f"fig4.{gid}.luby", 1e6 * t_luby, "")
+        emit(f"fig4.{gid}.ecl", 1e6 * t_ecl, "")
+        emit(
+            f"fig4.{gid}.tcmis", 1e6 * t_tc,
+            f"cpu_ratio_vs_ecl={t_ecl/t_tc:.2f}x",
+        )
+
+    # roofline-projected TPU per-round times from the dry-run
+    for path in sorted(glob.glob("experiments/dryrun/tcmis__G*__single.json")):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        emit(
+            f"fig4.tpu_projection.{rec['shape']}",
+            1e6 * r["step_time_s"],
+            f"dominant={r['dominant']};mfu={r['mfu']:.4f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

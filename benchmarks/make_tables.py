@@ -1,0 +1,85 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.make_tables experiments/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def fmt_s(s):
+    if s == 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s*1e6:.0f}µs"
+    if s < 1:
+        return f"{s*1e3:.1f}ms"
+    return f"{s:.2f}s"
+
+
+def load(out_dir):
+    recs = []
+    for p in sorted(glob.glob(f"{out_dir}/*.json")):
+        recs.append(json.load(open(p)))
+    return recs
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | status | GiB/dev | compile | collectives (GiB/dev) |")
+    print("|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | N/A | — | — | "
+                  f"{r['skip_reason'][:60]}… |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **{r['status']}** | — | — | {r.get('error','')[:60]} |")
+            continue
+        colls = ", ".join(
+            f"{k.replace('all-','a').replace('reduce-scatter','rs').replace('collective-permute','cp')}:{v/2**30:.2f}"
+            for k, v in sorted(r["cost"]["collectives"].items())
+        ) or "none"
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {fmt_bytes(r['memory']['total_per_device'])} "
+            f"| {r['times']['compile_s']}s | {colls} |"
+        )
+
+
+def roofline_table(recs):
+    print("| arch | shape | compute | memory | collective | dominant | model/HLO | MFU |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "single":
+            continue
+        rf = r["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} | **{rf['dominant']}** "
+            f"| {rf['useful_flop_fraction']:.3f} | {rf['mfu']:.4f} |"
+        )
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(out_dir)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    na = sum(1 for r in recs if r["status"] == "skipped")
+    err = sum(1 for r in recs if r["status"] not in ("ok", "skipped"))
+    print(f"### cells: {ok} ok, {na} N/A (documented skips), {err} errors\n")
+    print("#### Dry-run\n")
+    dryrun_table(recs)
+    print("\n#### Roofline (single-pod, per-device terms)\n")
+    roofline_table(recs)
+
+
+if __name__ == "__main__":
+    main()

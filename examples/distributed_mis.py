@@ -1,0 +1,48 @@
+"""Multi-chip TC-MIS: row-partitioned BSR + bit-packed frontier gathers,
+verified bit-identical to the single-device run.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_mis.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DistConfig, TCMISConfig, build_block_tiles, build_distributed_mis,
+    cardinality, is_valid_mis, make_priorities, shard_tiled, tc_mis,
+)
+from repro.graphs.generators import GRAPH_SUITE
+
+
+def main() -> None:
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh(
+        (2, n_dev // 2), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    g = GRAPH_SUITE["G5"].make(10_000, 0)  # web-Google stand-in
+    tiled = build_block_tiles(g, tile_size=64)
+    sharded = shard_tiled(tiled, n_shards=n_dev)
+    print(f"|V|={g.n_nodes:,}; {tiled.n_tiles:,} tiles -> "
+          f"{sharded.tiles.shape[1]:,}/shard × {n_dev} shards")
+
+    key = jax.random.key(0)
+    pri = make_priorities("h3", key, g.n_nodes, g.degrees())
+    run = build_distributed_mis(sharded, mesh, DistConfig(bitpack=True))
+    res = run(pri)
+    in_mis = res.in_mis[: g.n_nodes]
+    print(f"distributed: |MIS|={cardinality(in_mis):,} rounds={int(res.rounds)}"
+          f" valid={is_valid_mis(g, in_mis)}")
+
+    single = tc_mis(g, tiled, key, TCMISConfig(heuristic="h3"))
+    print("matches single-device bit-for-bit:",
+          bool(jnp.all(in_mis == single.in_mis)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Batched serving example: prefill + KV-cache decode (ring buffer for SWA,
+latent cache for MLA).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b --gen 24
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.exit(serve.main())

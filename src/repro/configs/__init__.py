@@ -1,0 +1,29 @@
+"""Architecture registry: importing this package registers every assigned
+arch (and the paper's own tcmis suite) into `REGISTRY`.
+
+  from repro.configs import REGISTRY
+  REGISTRY["qwen3-0.6b"].cells["train_4k"].build(mesh)
+"""
+from repro.configs.common import REGISTRY, ArchDef, Cell
+
+# importing each module registers its ArchDef
+from repro.configs import (  # noqa: F401
+    qwen15_0_5b,
+    qwen3_0_6b,
+    nemotron4_340b,
+    mixtral_8x22b,
+    deepseek_v3_671b,
+    egnn,
+    gin_tu,
+    pna,
+    mace,
+    deepfm,
+    tcmis,
+)
+
+ASSIGNED_ARCHS = [
+    "qwen1.5-0.5b", "qwen3-0.6b", "nemotron-4-340b", "mixtral-8x22b",
+    "deepseek-v3-671b", "egnn", "gin-tu", "pna", "mace", "deepfm",
+]
+
+__all__ = ["REGISTRY", "ArchDef", "Cell", "ASSIGNED_ARCHS"]

@@ -1,0 +1,331 @@
+"""Cell machinery: every (architecture × input-shape) pair is a `Cell` that
+knows how to build its step function, ShapeDtypeStruct inputs, and shardings
+for any mesh.  launch/dryrun.py iterates cells; tests smoke the reduced
+configs; benchmarks reuse the same builders.
+
+A Cell's `build(mesh)` returns (fn, example_inputs, in_shardings) where
+`example_inputs` is a tuple of ShapeDtypeStructs (NO allocation) and
+`jax.jit(fn, in_shardings=...).lower(*example_inputs).compile()` is the
+dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (
+    batch_spec,
+    cache_specs,
+    data_axes,
+    deepfm_specs,
+    lm_param_specs,
+)
+from repro.models.lm_config import LMConfig
+from repro.models import transformer as tf
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str                               # train | prefill | decode | serve
+    build: Callable[..., Tuple[Callable, tuple, Any]]  # (mesh, variant=...)
+    model_flops: float                      # analytic useful FLOPs per step
+    note: str = ""
+    skip_reason: Optional[str] = None       # e.g. long_500k on full attention
+    # LM cells: cost passes compile unrolled REDUCED-depth models and the
+    # runner extrapolates affinely in layer count (costs of a homogeneous
+    # stack are exactly a + b·L; validated in EXPERIMENTS.md §Dry-run).
+    extrapolate: Optional[dict] = None      # {"la": 2, "lb": 4, "lfull": L}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    arch_id: str
+    family: str                             # lm | gnn | recsys | mis
+    cells: Dict[str, Cell]
+    smoke: Callable[[], None]               # CPU-runnable reduced-config step
+    config: Any = None
+
+
+REGISTRY: Dict[str, ArchDef] = {}
+
+
+def register(arch: ArchDef) -> ArchDef:
+    REGISTRY[arch.arch_id] = arch
+    return arch
+
+
+def named_shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------------------
+# LM cell builders (shared by all five transformer archs)
+# --------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def _lm_param_shapes(cfg: LMConfig):
+    return jax.eval_shape(lambda k: tf.init_lm(k, cfg), jax.random.key(0))
+
+
+def _dryrun_cfg(
+    cfg: LMConfig, mesh: Mesh, *, unroll: bool, seq: int = 4096
+) -> LMConfig:
+    """Dry-run variant (two-pass methodology, EXPERIMENTS.md §Dry-run):
+
+    * variant='cost'   -> unroll=True: XLA cost_analysis counts loop bodies
+      ONCE, so rolled scans undercount flops/bytes/collectives by the trip
+      count; the cost pass must unroll.  Inner chunk sizes are raised so the
+      unrolled HLO stays compilable (flash/xent FLOPs are chunk-invariant).
+    * variant='memory' -> unroll=False: the rolled program is what actually
+      runs (loop buffers reused); its memory_analysis is the fits-on-chip
+      evidence.
+    """
+    moe = None
+    if cfg.moe:
+        model_size = dict(mesh.shape).get("model", 1)
+        dp = tuple(data_axes(mesh))
+        if cfg.moe.n_experts % max(model_size, 1) == 0:
+            # expert parallel on 'model', capacity sharded over pod×data
+            buf_pspec = ("model", dp, None)
+        else:
+            # few big experts (Mixtral): DP over capacity, D kept local so the
+            # expert GEMM contracts without gathering (TP lives in the F dim
+            # of the expert weights)
+            buf_pspec = (None, dp, None)
+        moe = dataclasses.replace(cfg.moe, buf_pspec=buf_pspec)
+    kw = {}
+    if unroll:
+        kw = dict(
+            attn_chunk=max(cfg.attn_chunk, seq // 8),
+            loss_chunk=max(cfg.loss_chunk, seq // 8),
+        )
+    return dataclasses.replace(
+        cfg, unroll=unroll, dp_axes=tuple(data_axes(mesh)), moe=moe, **kw
+    )
+
+
+def _needs_fsdp(cfg: LMConfig, mesh: Mesh) -> bool:
+    """Model-parallel-only weights must fit a 16 GB v5e with headroom;
+    otherwise shard params over pod×data too (ZeRO-3/FSDP)."""
+    model_size = dict(mesh.shape).get("model", 1)
+    bytes_per_dev = cfg.param_count() * 2 / max(model_size, 1)
+    return bytes_per_dev > 6e9
+
+
+def _with_stack_layers(cfg: LMConfig, k: int) -> LMConfig:
+    """Reduce the scanned stack to k layers (dense archs: k total; MoE
+    archs: n_dense_layers kept + k MoE layers)."""
+    if cfg.moe is not None:
+        return dataclasses.replace(cfg, n_layers=cfg.n_dense_layers + k)
+    return dataclasses.replace(cfg, n_layers=k)
+
+
+def _lm_stack_size(cfg: LMConfig) -> int:
+    return (cfg.n_layers - cfg.n_dense_layers) if cfg.moe else cfg.n_layers
+
+
+def _lm_extrapolate(cfg: LMConfig) -> dict:
+    return {"la": 2, "lb": 4, "lfull": _lm_stack_size(cfg)}
+
+
+def lm_train_flops(cfg: LMConfig, batch: int, seq: int) -> float:
+    """MODEL_FLOPS = 6·N_active·D tokens (fwd 2ND + bwd 4ND)."""
+    return 6.0 * cfg.active_param_count() * batch * seq
+
+
+def lm_decode_flops(cfg: LMConfig, batch: int, cache: int) -> float:
+    """Per decode step: 2·N_active per token + attention reads over cache."""
+    n = cfg.active_param_count()
+    if cfg.mla is not None:
+        attn = cfg.n_layers * cfg.n_heads * cache * 2 * (
+            cfg.mla.kv_lora_rank + cfg.mla.d_rope + cfg.mla.kv_lora_rank
+        )
+    else:
+        attn = cfg.n_layers * cfg.n_heads * cache * 2 * 2 * cfg.d_head
+    return batch * (2.0 * n + attn)
+
+
+def make_lm_train_step(cfg: LMConfig, opt_cfg: OptConfig):
+    def train_step(params, opt_state, tokens, targets):
+        (loss, metrics), grads = jax.value_and_grad(
+            tf.lm_loss, has_aux=True
+        )(params, cfg, tokens, targets)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, loss, metrics["xent"]
+
+    return train_step
+
+
+def _lm_train_cell(arch_id: str, cfg: LMConfig, shape_name: str) -> Cell:
+    s = LM_SHAPES[shape_name]
+    B, S = s["global_batch"], s["seq_len"]
+
+    def build(mesh: Mesh, variant: str = "memory"):
+        if variant == "memory":
+            rcfg = _dryrun_cfg(cfg, mesh, unroll=False, seq=S)
+        else:
+            k = 2 if variant == "cost_a" else 4
+            rcfg = _dryrun_cfg(
+                _with_stack_layers(cfg, k), mesh, unroll=True, seq=S
+            )
+        params_sh = _lm_param_shapes(rcfg)
+        opt_sh = jax.eval_shape(adamw_init, params_sh)
+        p_specs = lm_param_specs(params_sh, mesh, fsdp=_needs_fsdp(cfg, mesh))
+        # ZeRO-1: optimizer moments additionally sharded over pod×data
+        from repro.train.optimizer import AdamWState, zero1_specs
+        from repro.dist.sharding import _axis_size
+
+        dp = data_axes(mesh)
+        m_specs = zero1_specs(
+            p_specs, params_sh, mesh_axis=dp, mesh_size=_axis_size(mesh, dp)
+        )
+        opt_specs = AdamWState(step=P(), m=m_specs, v=m_specs)
+        tok_spec = batch_spec(mesh, extra_dims=1)
+        fn = make_lm_train_step(rcfg, OptConfig(total_steps=10000))
+        inputs = (
+            params_sh,
+            opt_sh,
+            jax.ShapeDtypeStruct((B, S), jnp.int32),
+            jax.ShapeDtypeStruct((B, S), jnp.int32),
+        )
+        in_shardings = (p_specs, opt_specs, tok_spec, tok_spec)
+        return fn, inputs, named_shardings(mesh, in_shardings)
+
+    return Cell(
+        arch=arch_id, shape=shape_name, kind="train", build=build,
+        model_flops=lm_train_flops(cfg, B, S),
+        extrapolate=_lm_extrapolate(cfg),
+    )
+
+
+def _lm_prefill_cell(arch_id: str, cfg: LMConfig, shape_name: str) -> Cell:
+    s = LM_SHAPES[shape_name]
+    B, S = s["global_batch"], s["seq_len"]
+
+    def build(mesh: Mesh, variant: str = "memory"):
+        if variant == "memory":
+            rcfg = _dryrun_cfg(cfg, mesh, unroll=False, seq=S)
+        else:
+            k = 2 if variant == "cost_a" else 4
+            rcfg = _dryrun_cfg(
+                _with_stack_layers(cfg, k), mesh, unroll=True, seq=S
+            )
+        params_sh = _lm_param_shapes(rcfg)
+        p_specs = lm_param_specs(params_sh, mesh, fsdp=_needs_fsdp(cfg, mesh))
+        tok_spec = batch_spec(mesh, extra_dims=1)
+
+        def prefill_step(params, tokens):
+            logits, cache = tf.prefill(params, rcfg, tokens, max_len=S)
+            return logits, cache
+
+        inputs = (params_sh, jax.ShapeDtypeStruct((B, S), jnp.int32))
+        return prefill_step, inputs, named_shardings(mesh, (p_specs, tok_spec))
+
+    # prefill ~ forward only: 2·N·D
+    return Cell(
+        arch=arch_id, shape=shape_name, kind="prefill", build=build,
+        model_flops=lm_train_flops(cfg, B, S) / 3.0,
+        extrapolate=_lm_extrapolate(cfg),
+    )
+
+
+def _lm_decode_cell(
+    arch_id: str, cfg: LMConfig, shape_name: str, skip_reason=None
+) -> Cell:
+    s = LM_SHAPES[shape_name]
+    B, S = s["global_batch"], s["seq_len"]
+
+    def build(mesh: Mesh, variant: str = "memory"):
+        if variant == "memory":
+            rcfg = _dryrun_cfg(cfg, mesh, unroll=False, seq=S)
+        else:
+            k = 2 if variant == "cost_a" else 4
+            rcfg = _dryrun_cfg(
+                _with_stack_layers(cfg, k), mesh, unroll=True, seq=S
+            )
+        params_sh = _lm_param_shapes(rcfg)
+        p_specs = lm_param_specs(params_sh, mesh, fsdp=_needs_fsdp(cfg, mesh))
+        cache_sh = jax.eval_shape(
+            lambda: tf.init_decode_cache(rcfg, B, S)
+        )
+        c_specs = cache_specs(rcfg, mesh, B, cache_sh.length)
+        c_specs = tf.DecodeCache(
+            data=c_specs.data, pos=P(), length=cache_sh.length
+        )
+
+        def serve_step(params, cache, tokens):
+            return tf.decode_step(params, rcfg, cache, tokens)
+
+        inputs = (params_sh, cache_sh, jax.ShapeDtypeStruct((B,), jnp.int32))
+        tok_spec = P(data_axes(mesh)) if B % np.prod(
+            [mesh.shape[a] for a in data_axes(mesh)]
+        ) == 0 else P()
+        shardings = (p_specs, c_specs, tok_spec)
+        return serve_step, inputs, named_shardings(mesh, shardings)
+
+    return Cell(
+        arch=arch_id, shape=shape_name, kind="decode", build=build,
+        model_flops=lm_decode_flops(cfg, B, min(S, cfg.window or S)),
+        skip_reason=skip_reason,
+        extrapolate=_lm_extrapolate(cfg),
+    )
+
+
+def lm_cells(arch_id: str, cfg: LMConfig) -> Dict[str, Cell]:
+    full_attention = cfg.window is None
+    return {
+        "train_4k": _lm_train_cell(arch_id, cfg, "train_4k"),
+        "prefill_32k": _lm_prefill_cell(arch_id, cfg, "prefill_32k"),
+        "decode_32k": _lm_decode_cell(arch_id, cfg, "decode_32k"),
+        "long_500k": _lm_decode_cell(
+            arch_id, cfg, "long_500k",
+            skip_reason=(
+                "full-attention arch: 500k-token decode requires sub-quadratic "
+                "attention structure (DESIGN.md §8)" if full_attention else None
+            ),
+        ),
+    }
+
+
+def lm_smoke(cfg_small: LMConfig):
+    """One CPU train step on the reduced config; asserts shapes + finiteness."""
+    import numpy as np
+
+    params = tf.init_lm(jax.random.key(0), cfg_small)
+    opt = adamw_init(params)
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg_small.vocab, dtype=jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+    step = jax.jit(make_lm_train_step(cfg_small, OptConfig(total_steps=100)))
+    params2, opt2, loss, xent = step(params, opt, tokens, targets)
+    assert np.isfinite(float(loss)), f"loss not finite: {loss}"
+    assert jax.tree.structure(params2) == jax.tree.structure(params)
+    # decode path
+    logits, cache = jax.jit(
+        lambda p, t: tf.prefill(p, cfg_small, t, max_len=S + 4)
+    )(params2, tokens)
+    logits2, _ = jax.jit(
+        lambda p, c, t: tf.decode_step(p, cfg_small, c, t)
+    )(params2, cache, tokens[:, -1])
+    assert logits2.shape == (B, cfg_small.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2)))

@@ -1,0 +1,39 @@
+"""egnn [arXiv:2102.09844]: 4 layers, d_hidden=64, E(n) equivariance."""
+from repro.configs.common import ArchDef, register
+from repro.configs.gnn_cells import GNNArch, gnn_cells, gnn_smoke
+from repro.models.gnn.common import mlp_apply
+from repro.models.gnn.egnn import egnn_apply, egnn_init
+
+D_HIDDEN, N_LAYERS = 64, 4
+
+
+def _init(key, d_in, n_out):
+    return egnn_init(key, d_in, d_hidden=D_HIDDEN, n_layers=N_LAYERS, n_out=n_out)
+
+
+def _node_logits(params, feats, coords, s, r, mask):
+    h, _, _ = egnn_apply(params, feats, coords, s, r, mask)
+    return mlp_apply(params["head"], h)
+
+
+def _graph_energy(params, feats, coords, s, r, mask):
+    _, _, energy = egnn_apply(params, feats, coords, s, r, mask)
+    return energy
+
+
+def _fwd_flops(n, e, d_feat):
+    d = d_feat
+    f = 0.0
+    for _ in range(N_LAYERS):
+        f += 2.0 * e * (2 * d + 1) * D_HIDDEN + 2.0 * e * D_HIDDEN * D_HIDDEN
+        f += 2.0 * e * D_HIDDEN * D_HIDDEN            # phi_x
+        f += 2.0 * n * (d + D_HIDDEN) * D_HIDDEN + 2.0 * n * D_HIDDEN * D_HIDDEN
+        d = D_HIDDEN
+    return f
+
+
+GNN = GNNArch("egnn", _init, _node_logits, _graph_energy, _fwd_flops)
+ARCH = register(ArchDef(
+    arch_id="egnn", family="gnn", cells=gnn_cells(GNN),
+    smoke=lambda: gnn_smoke(GNN), config=GNN,
+))

@@ -1,0 +1,39 @@
+"""gin-tu [arXiv:1810.00826]: 5 layers, d_hidden=64, sum aggregator,
+learnable ε.  Sum aggregation = A × H, so this arch additionally exposes the
+paper's tiled-SpMM backend (exercised in tests + the fig4 benchmark)."""
+from functools import partial
+
+from repro.configs.common import ArchDef, register
+from repro.configs.gnn_cells import GNNArch, gnn_cells, gnn_smoke
+from repro.models.gnn.gin import gin_apply, gin_init
+
+D_HIDDEN, N_LAYERS = 64, 5
+
+
+def _init(key, d_in, n_out):
+    return gin_init(key, d_in, d_hidden=D_HIDDEN, n_layers=N_LAYERS, n_out=n_out)
+
+
+def _node_logits(params, feats, coords, s, r, mask):
+    del coords
+    _, logits = gin_apply(params, feats, s, r, mask)
+    return logits
+
+
+def _graph_energy(params, feats, coords, s, r, mask):
+    return _node_logits(params, feats, coords, s, r, mask)[:, 0].sum()
+
+
+def _fwd_flops(n, e, d_feat):
+    f = 2.0 * e * d_feat + 2.0 * n * (d_feat * D_HIDDEN + D_HIDDEN * D_HIDDEN)
+    f += (N_LAYERS - 1) * (
+        2.0 * e * D_HIDDEN + 4.0 * n * D_HIDDEN * D_HIDDEN
+    )
+    return f
+
+
+GNN = GNNArch("gin-tu", _init, _node_logits, _graph_energy, _fwd_flops)
+ARCH = register(ArchDef(
+    arch_id="gin-tu", family="gnn", cells=gnn_cells(GNN),
+    smoke=lambda: gnn_smoke(GNN), config=GNN,
+))

@@ -1,0 +1,268 @@
+"""Cell builders for the GNN family (full-graph, sampled-minibatch, molecule).
+
+Each GNN arch file supplies:
+  node_logits(params, feats, coords, s, r, mask) -> (N, n_out)
+  graph_energy(params, feats, coords, s, r, mask) -> scalar
+  init(key, d_in, n_out) -> params
+and gets the four assigned shapes wired identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.common import Cell, named_shardings
+from repro.dist.sharding import batch_spec, data_axes
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+def _pad512(n: int) -> int:
+    """Dry-run shapes must shard over up to 512 chips; graphs keep their
+    true size via edge/node masks, the arrays are zero-padded."""
+    return -(-n // 512) * 512
+
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_out=7),
+    "minibatch_lg": dict(
+        n_nodes=232965, n_edges=114_615_892, d_feat=602, n_out=41,
+        batch_nodes=1024, fanout=(15, 10),
+    ),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_out=47),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNArch:
+    arch_id: str
+    init: Callable          # (key, d_in, n_out) -> params
+    node_logits: Callable   # (params, feats, coords, s, r, mask) -> (N, n_out)
+    graph_energy: Callable  # (params, feats, coords, s, r, mask) -> scalar
+    fwd_flops: Callable     # (n_nodes, n_edges, d_feat) -> float
+
+
+def _xent(logits, labels):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logits.astype(jnp.float32), labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - tgt)
+
+
+def _full_graph_cell(a: GNNArch, shape_name: str) -> Cell:
+    s = GNN_SHAPES[shape_name]
+    N, E, DF, NO = s["n_nodes"], s["n_edges"], s["d_feat"], s["n_out"]
+    E2 = 2 * E  # both directions
+
+    NP, EP = _pad512(N), _pad512(E2)
+
+    def build(mesh: Mesh, variant: str = "memory"):
+        params_sh = jax.eval_shape(lambda k: a.init(k, DF, NO), jax.random.key(0))
+        opt_sh = jax.eval_shape(adamw_init, params_sh)
+        flat = tuple(mesh.axis_names)
+        p_specs = jax.tree.map(lambda _: P(), params_sh)
+        from repro.train.optimizer import AdamWState
+
+        o_specs = AdamWState(step=P(), m=p_specs, v=p_specs)
+        opt_cfg = OptConfig(total_steps=1000)
+
+        def train_step(params, opt, feats, coords, senders, receivers, mask, labels):
+            def loss_fn(p):
+                logits = a.node_logits(p, feats, coords, senders, receivers, mask)
+                return _xent(logits, labels)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt, _ = adamw_update(opt_cfg, grads, opt, params)
+            return params, opt, loss
+
+        inputs = (
+            params_sh, opt_sh,
+            jax.ShapeDtypeStruct((NP, DF), jnp.float32),
+            jax.ShapeDtypeStruct((NP, 3), jnp.float32),
+            jax.ShapeDtypeStruct((EP,), jnp.int32),
+            jax.ShapeDtypeStruct((EP,), jnp.int32),
+            jax.ShapeDtypeStruct((EP,), jnp.bool_),
+            jax.ShapeDtypeStruct((NP,), jnp.int32),
+        )
+        shardings = (
+            p_specs, o_specs,
+            P(flat, None), P(flat, None), P(flat), P(flat), P(flat), P(flat),
+        )
+        return train_step, inputs, named_shardings(mesh, shardings)
+
+    return Cell(
+        arch=a.arch_id, shape=shape_name, kind="train", build=build,
+        model_flops=3.0 * a.fwd_flops(N, E2, DF),
+    )
+
+
+def _minibatch_cell(a: GNNArch) -> Cell:
+    s = GNN_SHAPES["minibatch_lg"]
+    N, E, DF, NO = s["n_nodes"], s["n_edges"], s["d_feat"], s["n_out"]
+    B, fanout = s["batch_nodes"], s["fanout"]
+    # sampled tree size: B + B·f1 + B·f1·f2 nodes, B·f1 + B·f1·f2 edges
+    n_tree = B * (1 + fanout[0] + fanout[0] * fanout[1])
+    e_tree = B * (fanout[0] + fanout[0] * fanout[1])
+
+    def build(mesh: Mesh, variant: str = "memory"):
+        params_sh = jax.eval_shape(lambda k: a.init(k, DF, NO), jax.random.key(0))
+        opt_sh = jax.eval_shape(adamw_init, params_sh)
+        p_specs = jax.tree.map(lambda _: P(), params_sh)
+        from repro.train.optimizer import AdamWState
+
+        o_specs = AdamWState(step=P(), m=p_specs, v=p_specs)
+        d = data_axes(mesh)
+        opt_cfg = OptConfig(total_steps=1000)
+        f1, f2 = fanout
+
+        def train_step(params, opt, key, indptr, indices, feats_tab, coords_tab,
+                       labels_tab, seeds):
+            # --- neighbour sampling (on device, static shapes) -------------
+            def sample(frontier, k):
+                start = indptr[frontier]
+                deg = indptr[frontier + 1] - start
+                fan = f1 if frontier.ndim == 1 else f2
+                u = jax.random.randint(
+                    k, frontier.shape + (fan,),
+                    0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+                offs = u % jnp.maximum(deg, 1)[..., None]
+                nbr = indices[jnp.minimum(start[..., None] + offs, indices.shape[0] - 1)]
+                m = jnp.broadcast_to(deg[..., None] > 0, nbr.shape)
+                return jnp.where(m, nbr, 0), m
+
+            k1, k2 = jax.random.split(key)
+            l1, m1 = sample(seeds, k1)                    # (B, f1)
+            l2, m2 = sample(l1, k2)                       # (B, f1, f2)
+            m2 = m2 & m1[..., None]
+            # --- flatten to tree edges ------------------------------------
+            ids = jnp.concatenate([seeds, l1.reshape(-1), l2.reshape(-1)])
+            off1, off2 = B, B + B * f1
+            snd = jnp.concatenate([
+                off1 + jnp.arange(B * f1, dtype=jnp.int32),
+                off2 + jnp.arange(B * f1 * f2, dtype=jnp.int32),
+            ])
+            rcv = jnp.concatenate([
+                jnp.repeat(jnp.arange(B, dtype=jnp.int32), f1),
+                off1 + jnp.repeat(jnp.arange(B * f1, dtype=jnp.int32), f2),
+            ])
+            emask = jnp.concatenate([m1.reshape(-1), m2.reshape(-1)])
+            feats = feats_tab[ids]
+            coords = coords_tab[ids]
+
+            def loss_fn(p):
+                logits = a.node_logits(p, feats, coords, snd, rcv, emask)
+                return _xent(logits[:B], labels_tab[seeds])
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt, _ = adamw_update(opt_cfg, grads, opt, params)
+            return params, opt, loss
+
+        NP, EP = _pad512(N + 1), _pad512(E)
+        inputs = (
+            params_sh, opt_sh,
+            jax.ShapeDtypeStruct((2,), jnp.uint32),          # raw PRNG key
+            jax.ShapeDtypeStruct((NP,), jnp.int32),
+            jax.ShapeDtypeStruct((EP,), jnp.int32),
+            jax.ShapeDtypeStruct((NP, DF), jnp.float32),
+            jax.ShapeDtypeStruct((NP, 3), jnp.float32),
+            jax.ShapeDtypeStruct((NP,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        )
+        flat = tuple(mesh.axis_names)
+        shardings = (
+            p_specs, o_specs, P(),
+            P(), P(flat), P(flat, None), P(flat, None), P(flat), P(d),
+        )
+
+        def step_with_key(params, opt, key_data, *rest):
+            key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+            return train_step(params, opt, key, *rest)
+
+        return step_with_key, inputs, named_shardings(mesh, shardings)
+
+    return Cell(
+        arch=a.arch_id, shape="minibatch_lg", kind="train", build=build,
+        model_flops=3.0 * a.fwd_flops(n_tree, e_tree, DF),
+        note="fixed-fanout 15×10 neighbour sampling on device",
+    )
+
+
+def _molecule_cell(a: GNNArch) -> Cell:
+    s = GNN_SHAPES["molecule"]
+    N, E, B, DF = s["n_nodes"], s["n_edges"], s["batch"], s["d_feat"]
+
+    def build(mesh: Mesh, variant: str = "memory"):
+        params_sh = jax.eval_shape(lambda k: a.init(k, DF, 1), jax.random.key(0))
+        opt_sh = jax.eval_shape(adamw_init, params_sh)
+        p_specs = jax.tree.map(lambda _: P(), params_sh)
+        from repro.train.optimizer import AdamWState
+
+        o_specs = AdamWState(step=P(), m=p_specs, v=p_specs)
+        d = data_axes(mesh)
+        opt_cfg = OptConfig(total_steps=1000)
+
+        def train_step(params, opt, feats, coords, senders, receivers, mask, energy):
+            def loss_fn(p):
+                e = jax.vmap(
+                    lambda f, c, sd, rc, mk: a.graph_energy(p, f, c, sd, rc, mk)
+                )(feats, coords, senders, receivers, mask)
+                return jnp.mean((e - energy) ** 2)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt, _ = adamw_update(opt_cfg, grads, opt, params)
+            return params, opt, loss
+
+        inputs = (
+            params_sh, opt_sh,
+            jax.ShapeDtypeStruct((B, N, DF), jnp.float32),
+            jax.ShapeDtypeStruct((B, N, 3), jnp.float32),
+            jax.ShapeDtypeStruct((B, E), jnp.int32),
+            jax.ShapeDtypeStruct((B, E), jnp.int32),
+            jax.ShapeDtypeStruct((B, E), jnp.bool_),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        )
+        shardings = (
+            p_specs, o_specs,
+            P(d, None, None), P(d, None, None), P(d, None), P(d, None),
+            P(d, None), P(d),
+        )
+        return train_step, inputs, named_shardings(mesh, shardings)
+
+    return Cell(
+        arch=a.arch_id, shape="molecule", kind="train", build=build,
+        model_flops=3.0 * B * a.fwd_flops(N, E, DF),
+    )
+
+
+def gnn_cells(a: GNNArch) -> Dict[str, Cell]:
+    return {
+        "full_graph_sm": _full_graph_cell(a, "full_graph_sm"),
+        "minibatch_lg": _minibatch_cell(a),
+        "ogb_products": _full_graph_cell(a, "ogb_products"),
+        "molecule": _molecule_cell(a),
+    }
+
+
+def gnn_smoke(a: GNNArch):
+    """Reduced full-graph + molecule steps on CPU."""
+    from repro.graphs.generators import erdos_renyi
+
+    g = erdos_renyi(120, avg_deg=5.0, seed=0)
+    s = jnp.where(g.edge_mask, g.senders, 0)
+    r = jnp.where(g.edge_mask, g.receivers, 0)
+    feats = jax.random.normal(jax.random.key(0), (g.n_nodes, 8))
+    coords = jax.random.normal(jax.random.key(1), (g.n_nodes, 3))
+    labels = jax.random.randint(jax.random.key(2), (g.n_nodes,), 0, 4, dtype=jnp.int32)
+    params = a.init(jax.random.key(3), 8, 4)
+    logits = jax.jit(a.node_logits)(params, feats, coords, s, r, g.edge_mask)
+    assert logits.shape == (g.n_nodes, 4)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, grads = jax.value_and_grad(
+        lambda p: _xent(a.node_logits(p, feats, coords, s, r, g.edge_mask), labels)
+    )(params)
+    assert np.isfinite(float(loss))
+    e = jax.jit(a.graph_energy)(params, feats, coords, s, r, g.edge_mask)
+    assert np.isfinite(float(e))

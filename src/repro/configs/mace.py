@@ -1,0 +1,52 @@
+"""mace [arXiv:2206.07697]: 2 layers, 128 channels, l_max=2, correlation
+order 3, n_rbf=8, E(3)-ACE product basis."""
+from repro.configs.common import ArchDef, register
+from repro.configs.gnn_cells import GNNArch, gnn_cells, gnn_smoke
+from repro.models.gnn.common import mlp_apply
+from repro.models.gnn.mace import coupling_tensors, mace_apply, mace_init
+
+CHANNELS, N_LAYERS, N_RBF = 128, 2, 8
+
+
+def _init(key, d_in, n_out):
+    params = mace_init(key, d_in, channels=CHANNELS, n_layers=N_LAYERS, n_rbf=N_RBF)
+    if n_out != 1:
+        # classification head replaces the scalar energy readout
+        from repro.models.gnn.common import mlp_init
+        import jax
+
+        params["readout"] = mlp_init(
+            jax.random.fold_in(key, 99), (CHANNELS, 16, n_out)
+        )
+    return params
+
+
+def _node_logits(params, feats, coords, s, r, mask):
+    h, _ = mace_apply(params, feats, coords, s, r, mask, n_rbf=N_RBF)
+    return mlp_apply(params["readout"], h[0][:, 0, :])
+
+
+def _graph_energy(params, feats, coords, s, r, mask):
+    _, energy = mace_apply(params, feats, coords, s, r, mask, n_rbf=N_RBF)
+    return energy
+
+
+def _fwd_flops(n, e, d_feat):
+    cts = coupling_tensors()
+    path_flops = sum(
+        2.0 * (2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1) for l1, l2, l3, _ in cts
+    )
+    f = 2.0 * n * d_feat * CHANNELS
+    for _ in range(N_LAYERS):
+        f += 2.0 * e * (N_RBF * 64 + 64 * len(cts) * CHANNELS)   # radial MLP
+        f += e * path_flops * CHANNELS                           # interaction
+        f += 2.0 * n * path_flops * CHANNELS                     # B2 + B3
+        f += 2.0 * n * 9 * 3 * CHANNELS * CHANNELS               # mixes (Σ_l (2l+1)·3C·C)
+    return f
+
+
+GNN = GNNArch("mace", _init, _node_logits, _graph_energy, _fwd_flops)
+ARCH = register(ArchDef(
+    arch_id="mace", family="gnn", cells=gnn_cells(GNN),
+    smoke=lambda: gnn_smoke(GNN), config=GNN,
+))

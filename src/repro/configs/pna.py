@@ -1,0 +1,39 @@
+"""pna [arXiv:2004.05718]: 4 layers, d_hidden=75,
+aggregators mean/max/min/std, scalers identity/amplification/attenuation."""
+from repro.configs.common import ArchDef, register
+from repro.configs.gnn_cells import GNNArch, gnn_cells, gnn_smoke
+from repro.models.gnn.pna import pna_apply, pna_init
+
+D_HIDDEN, N_LAYERS = 75, 4
+
+
+def _init(key, d_in, n_out):
+    return pna_init(key, d_in, d_hidden=D_HIDDEN, n_layers=N_LAYERS, n_out=n_out)
+
+
+def _node_logits(params, feats, coords, s, r, mask):
+    del coords
+    _, logits = pna_apply(params, feats, s, r, mask)
+    return logits
+
+
+def _graph_energy(params, feats, coords, s, r, mask):
+    return _node_logits(params, feats, coords, s, r, mask)[:, 0].sum()
+
+
+def _fwd_flops(n, e, d_feat):
+    d = d_feat
+    f = 0.0
+    for _ in range(N_LAYERS):
+        f += 2.0 * e * (2 * d) * D_HIDDEN          # edge message MLP
+        f += 4.0 * e * D_HIDDEN                    # 4 segment reductions
+        f += 2.0 * n * (12 * D_HIDDEN + d) * D_HIDDEN  # mix layer
+        d = D_HIDDEN
+    return f
+
+
+GNN = GNNArch("pna", _init, _node_logits, _graph_energy, _fwd_flops)
+ARCH = register(ArchDef(
+    arch_id="pna", family="gnn", cells=gnn_cells(GNN),
+    smoke=lambda: gnn_smoke(GNN), config=GNN,
+))

@@ -1,0 +1,27 @@
+"""qwen1.5-0.5b [hf:Qwen/Qwen1.5-0.5B]: 24L d=1024 16H (GQA kv=16 ≡ MHA)
+d_ff=2816 vocab=151936, QKV bias, SwiGLU, RoPE."""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchDef, lm_cells, lm_smoke, register
+from repro.models.lm_config import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen1.5-0.5b",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_head=64,
+    d_ff=2816, vocab=151936, qkv_bias=True, act="swiglu",
+    rope_theta=10_000.0, dtype=jnp.bfloat16, loss_chunk=512,
+)
+
+SMOKE = LMConfig(
+    name="qwen1.5-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    d_ff=128, vocab=128, qkv_bias=True, act="swiglu",
+    dtype=jnp.float32, attn_chunk=16, loss_chunk=16,
+)
+
+ARCH = register(ArchDef(
+    arch_id="qwen1.5-0.5b", family="lm",
+    cells=lm_cells("qwen1.5-0.5b", CONFIG),
+    smoke=lambda: lm_smoke(SMOKE),
+    config=CONFIG,
+))

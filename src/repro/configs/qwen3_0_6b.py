@@ -1,0 +1,27 @@
+"""qwen3-0.6b [hf:Qwen/Qwen3-0.6B family]: 28L d=1024 16H (GQA kv=8)
+d_ff=3072 vocab=151936, qk-norm, head_dim=128, SwiGLU."""
+import jax.numpy as jnp
+
+from repro.configs.common import ArchDef, lm_cells, lm_smoke, register
+from repro.models.lm_config import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen3-0.6b",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, d_head=128,
+    d_ff=3072, vocab=151936, qk_norm=True, act="swiglu",
+    rope_theta=1_000_000.0, dtype=jnp.bfloat16, loss_chunk=512,
+)
+
+SMOKE = LMConfig(
+    name="qwen3-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=128, vocab=128, qk_norm=True, act="swiglu",
+    dtype=jnp.float32, attn_chunk=16, loss_chunk=16,
+)
+
+ARCH = register(ArchDef(
+    arch_id="qwen3-0.6b", family="lm",
+    cells=lm_cells("qwen3-0.6b", CONFIG),
+    smoke=lambda: lm_smoke(SMOKE),
+    config=CONFIG,
+))

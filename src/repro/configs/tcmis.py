@@ -1,0 +1,133 @@
+"""tcmis — the paper's own configuration: distributed TC-MIS over the eight
+SuiteSparse graphs of Table 1, at full |V|/|E| scale (dry-run shapes).
+
+Tile-count estimation: full-scale graphs are never materialised; the BSR
+size is extrapolated from the *measured* block occupancy of the structurally
+matched reduced-scale stand-in:  n_tiles ≈ ratio · min(E, nb²), where ratio
+is measured at build time (cached).  Tile size is chosen per graph as the
+largest T ∈ {128, 64, 32, 16} whose estimated BSR fits a per-chip budget —
+this is the paper's §3.2 memory/regularity trade-off made explicit: hub-less
+meshes (road, delaunay) take full 128×128 MXU tiles, hub-heavy power-law
+graphs (wiki-Talk, kron) fall back to smaller tiles exactly as the paper's
+16×16 WMMA does.  The chosen T is recorded in the dry-run JSON and the
+roofline table (§Perf hillclimbs the choice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.common import ArchDef, Cell, named_shardings, register
+from repro.core.distributed import DistConfig, make_mis_step_fn
+from repro.core.tiling import build_block_tiles
+from repro.graphs.generators import GRAPH_SUITE
+
+# Table 1 edge counts (stored/directed), used for full-scale extrapolation.
+TABLE1_E = {
+    "G1": 2_350_000, "G2": 2_930_000, "G3": 3_000_000, "G4": 9_540_000,
+    "G5": 9_700_000, "G6": 14_440_000, "G7": 68_990_000, "G8": 182_080_000,
+}
+
+PER_CHIP_TILE_BUDGET = 512 << 20      # 512 MiB of BSR payload per chip
+DRYRUN_LANES = 8                      # lanes carrying data (C, alive, spares)
+
+
+RCM = False  # set True to estimate with RCM locality reordering (§Perf H-A)
+
+
+@lru_cache(maxsize=None)
+def _occupancy_ratio(paper_id: str, tile_size: int, rcm: bool = False) -> float:
+    """Measured block occupancy of the reduced-scale stand-in."""
+    g = GRAPH_SUITE[paper_id].reduced(seed=0)
+    t = build_block_tiles(g, tile_size=tile_size,
+                          reorder="rcm" if rcm else None)
+    nb = t.n_block_rows
+    return t.n_tiles / max(min(g.n_edges, nb * nb), 1)
+
+
+def estimate_tiles(paper_id: str, tile_size: int) -> int:
+    spec = GRAPH_SUITE[paper_id]
+    nb = -(-spec.n_full // tile_size)
+    e_dir = TABLE1_E[paper_id]
+    return int(_occupancy_ratio(paper_id, tile_size, RCM) * min(e_dir, nb * nb)) + 1
+
+
+def choose_tile_size(paper_id: str, n_chips: int) -> int:
+    """Largest MXU-friendly T whose estimated BSR fits the per-chip budget."""
+    for T in (128, 64, 32, 16):
+        est = estimate_tiles(paper_id, T)
+        if est * T * T / n_chips <= PER_CHIP_TILE_BUDGET:
+            return T
+    return 16
+
+
+def _mis_cell(paper_id: str) -> Cell:
+    spec = GRAPH_SUITE[paper_id]
+
+    def build(mesh: Mesh, variant: str = "memory"):
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        T = choose_tile_size(paper_id, n_chips)
+        est_tiles = estimate_tiles(paper_id, T)
+        nb = -(-spec.n_full // T)
+        rps = -(-nb // n_chips)
+        # per-shard tile budget with 15% imbalance headroom, lane-aligned
+        nt_pad = (int(est_tiles / n_chips * 1.15) + 8) // 8 * 8
+
+        fn = make_mis_step_fn(
+            mesh, DistConfig(bitpack=True, lanes=DRYRUN_LANES),
+            n_nodes=spec.n_full, tile_size=T, rows_per_shard=rps,
+            two_pass=True,                       # H3 (the paper's default)
+        )
+        n_padded = n_chips * rps * T
+        inputs = (
+            jax.ShapeDtypeStruct((n_chips, nt_pad, T, T), jnp.int8),
+            jax.ShapeDtypeStruct((n_chips, nt_pad), jnp.int32),
+            jax.ShapeDtypeStruct((n_chips, nt_pad), jnp.int32),
+            jax.ShapeDtypeStruct((n_padded,), jnp.int32),
+            jax.ShapeDtypeStruct((n_padded,), jnp.int32),
+        )
+        flat = tuple(mesh.axis_names)
+        shardings = (
+            P(flat, None, None, None), P(flat, None), P(flat, None), P(), P(),
+        )
+        return fn, inputs, named_shardings(mesh, shardings)
+
+    # PER-ROUND useful work: one SpMV (2E MACs) + one neighbour-max (E cmp).
+    # The while-loop body is counted once by cost_analysis, so the roofline
+    # for MIS cells is per-round by construction — model_flops matches.
+    e_dir = TABLE1_E[paper_id]
+    return Cell(
+        arch="tcmis", shape=paper_id, kind="mis", build=build,
+        model_flops=3.0 * e_dir,
+        note=f"{spec.name}: |V|={spec.n_full:,} |E|={e_dir:,}",
+    )
+
+
+def _smoke():
+    """Reduced-scale end-to-end TC-MIS on CPU (single device)."""
+    import jax.numpy as jnp
+
+    from repro.core import (
+        TCMISConfig, build_block_tiles, is_valid_mis, tc_mis,
+    )
+    from repro.graphs.generators import erdos_renyi
+
+    g = erdos_renyi(500, avg_deg=6.0, seed=0)
+    tiled = build_block_tiles(g, tile_size=32)
+    res = tc_mis(g, tiled, jax.random.key(0), TCMISConfig(heuristic="h3"))
+    assert bool(res.converged)
+    assert is_valid_mis(g, res.in_mis)
+
+
+ARCH = register(ArchDef(
+    arch_id="tcmis", family="mis",
+    cells={gid: _mis_cell(gid) for gid in GRAPH_SUITE},
+    smoke=_smoke,
+    config=None,
+))

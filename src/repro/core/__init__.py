@@ -1,0 +1,29 @@
+"""TC-MIS core: the paper's contribution as composable JAX modules."""
+from repro.core.heuristics import HEURISTICS, Priorities, make_priorities
+from repro.core.luby import MISResult, luby_mis
+from repro.core.ecl_mis import ecl_mis
+from repro.core.tc_mis import TCMISConfig, tc_mis, run_phases
+from repro.core.tiling import (
+    BlockTiledGraph,
+    build_block_tiles,
+    pack_vertex_vector,
+    tile_stats,
+    unpack_vertex_vector,
+)
+from repro.core.validate import cardinality, is_independent, is_maximal, is_valid_mis
+from repro.core.distributed import (
+    DistConfig,
+    ShardedTiledGraph,
+    build_distributed_mis,
+    shard_tiled,
+)
+
+__all__ = [
+    "HEURISTICS", "Priorities", "make_priorities",
+    "MISResult", "luby_mis", "ecl_mis",
+    "TCMISConfig", "tc_mis", "run_phases",
+    "BlockTiledGraph", "build_block_tiles", "pack_vertex_vector",
+    "unpack_vertex_vector", "tile_stats",
+    "cardinality", "is_independent", "is_maximal", "is_valid_mis",
+    "DistConfig", "ShardedTiledGraph", "build_distributed_mis", "shard_tiled",
+]

@@ -1,0 +1,63 @@
+"""ECL-MIS baseline (Burtscher et al., TOPC'18) — the paper's comparison point.
+
+Random-permutation variant of Luby: degree-aware priorities (Eq. 1, scaled and
+discretised, hashed tie-break) are assigned **once** and reused across rounds.
+Candidate selection and neighbour elimination run on the edge-list/segment
+path — the JAX analogue of ECL's CSR traversal on CUDA cores (we cannot, and
+do not, emulate its asynchronous lock-free races; see DESIGN.md §4).
+
+With a static total order the algorithm is fully deterministic given the key,
+and — because TC-MIS with the same priorities computes exactly the same
+candidate sets — `tc_mis(heuristic='ecl')` must produce the *identical* MIS.
+The test suite asserts this bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.heuristics import make_priorities
+from repro.core.luby import MISResult
+from repro.core.spmv import neighbor_any_segment, neighbor_max_segment
+from repro.graphs.graph import Graph
+
+
+def ecl_mis(
+    g: Graph,
+    key: jax.Array,
+    *,
+    heuristic: str = "ecl",
+    max_rounds: int = 1024,
+) -> MISResult:
+    n = g.n_nodes
+    deg = g.degrees()
+    pri = make_priorities(heuristic, key, n, deg)
+    select = pri.select
+
+    def cond(state):
+        alive, _, rnd = state
+        return jnp.any(alive) & (rnd < max_rounds)
+
+    def body(state):
+        alive, in_mis, rnd = state
+        # ① neighbour max over live vertices, candidate test
+        max_np = neighbor_max_segment(g, select, alive)
+        if pri.resolve is None:
+            cand = alive & (select > max_np)
+        else:
+            pending = alive & (select >= max_np)
+            max_res = neighbor_max_segment(g, pri.resolve, pending)
+            cand = pending & (pri.resolve > max_res)
+        # ② neighbour elimination (irregular traversal path)
+        hit = neighbor_any_segment(g, cand)
+        # ③ state update
+        in_mis = in_mis | cand
+        alive = alive & ~cand & ~hit
+        return alive, in_mis, rnd + 1
+
+    alive0 = jnp.ones((n,), dtype=bool)
+    in_mis0 = jnp.zeros((n,), dtype=bool)
+    alive, in_mis, rounds = jax.lax.while_loop(
+        cond, body, (alive0, in_mis0, jnp.int32(0))
+    )
+    return MISResult(in_mis=in_mis, rounds=rounds, converged=~jnp.any(alive))

@@ -1,0 +1,119 @@
+"""Priority-assignment heuristics H1/H2/H3 (paper §3.3) + ECL's Eq. (1).
+
+All heuristics produce **int32 total orders**: the high bits carry the
+structural bias (quantised Eq. 1), the low 23 bits carry a random permutation
+of vertex ids so priorities are *globally distinct*.  Distinctness is what
+makes phase ③ lock-free-by-construction exact: two adjacent vertices can never
+both satisfy ``P(v) > Max_Np(v)``, so candidates are guaranteed independent
+and the algorithm is deterministic given the key.
+
+Execution-semantics modelling (see DESIGN.md §4): the paper's H2-vs-H3 quality
+gap arises from priority inversions during warp-asynchronous tile execution.
+A JAX array program is synchronous, so we model the same effect where it
+actually lives — in the *resolution order of ties of the quantised priority*:
+
+  H1  pure random permutation                       (paper: hash(v))
+  H2  coarse 4-bit Eq. 1 ‖ random tie resolution    (ties resolved by chance,
+      mirroring the paper's unordered premature eliminations)
+  H3  8-bit Eq. 1 ‖ *ordered* resolution on the pending set: remaining ties
+      resolve deterministically by (lower degree, then id) before C is
+      finalised — the paper's "Alive → conflict resolution → candidate
+      finalisation → state update" pipeline.
+
+ECL-MIS itself uses Eq. 1 at its native ~8-bit discretisation with hashed tie
+break, which is what `ecl_priorities` provides.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# low-bit budget for the distinctness permutation: supports |V| < 2^23 ≈ 8.4M,
+# which covers the paper's whole suite (max 4.85M vertices).
+_LOW_BITS = 23
+_LOW_MASK = (1 << _LOW_BITS) - 1
+
+
+class Priorities(NamedTuple):
+    """Total-order priorities plus (for H3) the two-pass resolution key.
+
+    select:  (n,) int32 — used for the phase-① candidate test.
+    resolve: optional (n,) int32 — when set, candidate generation runs the
+             H3 two-pass: pending by quantised `select`, finalise by strict
+             `resolve` order among pending vertices.
+    """
+    select: jnp.ndarray
+    resolve: Optional[jnp.ndarray] = None
+
+
+def _perm(key: jax.Array, n: int) -> jnp.ndarray:
+    return jax.random.permutation(key, jnp.arange(n, dtype=jnp.int32))
+
+
+def eq1_quantized(
+    deg: jnp.ndarray, key: jax.Array, bits: int
+) -> jnp.ndarray:
+    """Paper Eq. (1): P(v) = d̄ / (d̄ + deg(v) − ε(v)), discretised to ``bits``."""
+    deg_f = deg.astype(jnp.float32)
+    dbar = jnp.mean(deg_f)
+    eps = jax.random.uniform(key, deg.shape, minval=0.0, maxval=1.0)
+    p = dbar / (dbar + deg_f - eps)
+    levels = (1 << bits) - 1
+    return jnp.clip((p * levels).astype(jnp.int32), 0, levels)
+
+
+def h1_priorities(key: jax.Array, n: int, deg: jnp.ndarray) -> Priorities:
+    """H1: random priority — maximal parallelism, no structural bias."""
+    del deg
+    return Priorities(select=_perm(key, n))
+
+
+def h2_priorities(key: jax.Array, n: int, deg: jnp.ndarray) -> Priorities:
+    """H2: coarse degree-aware priority, ties broken by chance."""
+    kq, kp = jax.random.split(key)
+    q = eq1_quantized(deg, kq, bits=4)
+    return Priorities(select=(q << _LOW_BITS) | _perm(kp, n))
+
+
+def h3_priorities(key: jax.Array, n: int, deg: jnp.ndarray) -> Priorities:
+    """H3: fine degree-aware priority + ordered conflict resolution.
+
+    ``select`` keeps only the quantised structural priority (ties allowed —
+    tied vertices enter the *pending* set); ``resolve`` is the deterministic
+    ordered key (degree-major, id-minor) that finalises C conflict-free.
+    """
+    kq, _ = jax.random.split(key)
+    q = eq1_quantized(deg, kq, bits=8)
+    # ordered resolution: lower degree wins, then lower id — encode as a
+    # strictly decreasing function so "larger key wins" stays the convention.
+    n_arr = jnp.int32(n)
+    rank = (-deg.astype(jnp.int32)) * n_arr - jnp.arange(n, dtype=jnp.int32)
+    return Priorities(select=(q << _LOW_BITS), resolve=rank)
+
+
+def ecl_priorities(key: jax.Array, n: int, deg: jnp.ndarray) -> Priorities:
+    """ECL-MIS native priority: 8-bit Eq. (1) with hashed low bits."""
+    kq, kp = jax.random.split(key)
+    q = eq1_quantized(deg, kq, bits=8)
+    return Priorities(select=(q << _LOW_BITS) | _perm(kp, n))
+
+
+HEURISTICS = {
+    "h1": h1_priorities,
+    "h2": h2_priorities,
+    "h3": h3_priorities,
+    "ecl": ecl_priorities,
+}
+
+
+def make_priorities(
+    heuristic: str, key: jax.Array, n: int, deg: jnp.ndarray
+) -> Priorities:
+    try:
+        fn = HEURISTICS[heuristic]
+    except KeyError:
+        raise ValueError(f"unknown heuristic {heuristic!r}; options {list(HEURISTICS)}")
+    return fn(key, n, deg)

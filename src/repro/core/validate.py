@@ -1,0 +1,38 @@
+"""MIS solution validators — the invariants every algorithm must satisfy.
+
+Used by tests (property-based, vs networkx) and by the benchmark harness as a
+post-condition on every reported number.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spmv import neighbor_any_segment
+from repro.graphs.graph import Graph
+
+
+@jax.jit
+def _checks(senders, receivers, edge_mask, in_mis, n_nodes_arr):
+    del n_nodes_arr
+    return in_mis
+
+
+def is_independent(g: Graph, in_mis: jnp.ndarray) -> bool:
+    """No edge has both endpoints selected."""
+    both = g.edge_mask & in_mis[g.senders] & in_mis[g.receivers]
+    return not bool(jnp.any(both))
+
+
+def is_maximal(g: Graph, in_mis: jnp.ndarray) -> bool:
+    """Every unselected vertex has a selected neighbour."""
+    covered = in_mis | neighbor_any_segment(g, in_mis)
+    return bool(jnp.all(covered))
+
+
+def is_valid_mis(g: Graph, in_mis: jnp.ndarray) -> bool:
+    return is_independent(g, in_mis) and is_maximal(g, in_mis)
+
+
+def cardinality(in_mis: jnp.ndarray) -> int:
+    return int(jnp.sum(in_mis))

@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    ClickStream,
+    GraphBatchStream,
+    TokenStream,
+    prefetch,
+)
+
+__all__ = ["TokenStream", "ClickStream", "GraphBatchStream", "prefetch"]

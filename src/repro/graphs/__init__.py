@@ -1,0 +1,30 @@
+"""Graph substrate: CSR/edge-list structures, generators, sampling, partitioning.
+
+This is the data layer shared by the MIS core (the paper's algorithm), the GNN
+model family, and the distributed runtime.  Everything device-side is a
+registered pytree with static shapes so it jits / shards cleanly.
+"""
+from repro.graphs.graph import Graph, build_csr, from_edges, pad_graph
+from repro.graphs.generators import (
+    GraphSpec,
+    GRAPH_SUITE,
+    generate,
+    grid2d,
+    rmat,
+    powerlaw,
+    delaunay_like,
+    random_regular,
+    web_like,
+    preferential_attachment,
+)
+from repro.graphs.sampler import NeighborSampler, SampledSubgraph
+from repro.graphs.partition import partition_edges, partition_rows, pad_to_multiple
+
+__all__ = [
+    "Graph", "build_csr", "from_edges", "pad_graph",
+    "GraphSpec", "GRAPH_SUITE", "generate",
+    "grid2d", "rmat", "powerlaw", "delaunay_like", "random_regular", "web_like",
+    "preferential_attachment",
+    "NeighborSampler", "SampledSubgraph",
+    "partition_edges", "partition_rows", "pad_to_multiple",
+]

@@ -1,0 +1,142 @@
+"""Core graph container.
+
+Graphs are stored twice, because the two MIS execution paths want different
+layouts (this mirrors the paper's CSR-for-CC vs tiles-for-TC split):
+
+* **edge list** (``senders``/``receivers``): the substrate for the
+  ``segment_max`` / ``segment_sum`` path (ECL-MIS baseline, GNN message
+  passing).  Both directions of every undirected edge are materialised so a
+  single gather+segment pass sees the full neighbourhood.
+* **CSR** (``indptr``/``indices``): host-side build artefact, used by the
+  neighbour sampler and the BSR tile builder.
+
+Padding convention: edge arrays may be padded to a static size with the
+sentinel ``sender == n_nodes`` pointing at a dummy node slot; every consumer
+masks on ``senders < n_nodes``.  This keeps shapes static under jit and lets
+shards be rectangular.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A static-shape undirected graph on device.
+
+    Attributes:
+      senders:   (E_pad,) int32 — source of each directed half-edge.
+      receivers: (E_pad,) int32 — destination of each directed half-edge.
+      n_nodes:   static int — number of real vertices (dummy slot excluded).
+      n_edges:   static int — number of real directed half-edges (≤ E_pad).
+    """
+    senders: jnp.ndarray
+    receivers: jnp.ndarray
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def e_pad(self) -> int:
+        return int(self.senders.shape[0])
+
+    @property
+    def edge_mask(self) -> jnp.ndarray:
+        """(E_pad,) bool — True for real edges."""
+        return jnp.arange(self.e_pad, dtype=jnp.int32) < self.n_edges
+
+    def degrees(self) -> jnp.ndarray:
+        """(n_nodes,) int32 — undirected degree of every vertex."""
+        ones = self.edge_mask.astype(jnp.int32)
+        return jax.ops.segment_sum(ones, self.receivers, num_segments=self.n_nodes + 1)[
+            : self.n_nodes
+        ]
+
+
+def _symmetrize(src: np.ndarray, dst: np.ndarray, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Drop self loops, dedupe, and materialise both directions."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    key = lo * n + hi
+    _, uniq = np.unique(key, return_index=True)
+    lo, hi = lo[uniq], hi[uniq]
+    s = np.concatenate([lo, hi])
+    r = np.concatenate([hi, lo])
+    order = np.lexsort((r, s))
+    return s[order].astype(np.int32), r[order].astype(np.int32)
+
+
+def from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_nodes: int,
+    *,
+    pad_to: Optional[int] = None,
+) -> Graph:
+    """Build an undirected :class:`Graph` from a (possibly noisy) edge list.
+
+    Self-loops are dropped, duplicates removed, both directions materialised,
+    and half-edges sorted by sender (so CSR falls out of a cumsum).
+    """
+    s, r = _symmetrize(src, dst, n_nodes)
+    n_edges = int(s.shape[0])
+    e_pad = n_edges if pad_to is None else max(pad_to, n_edges)
+    if e_pad > n_edges:
+        pad = np.full(e_pad - n_edges, n_nodes, dtype=np.int32)
+        s = np.concatenate([s, pad])
+        r = np.concatenate([r, pad])
+    return Graph(
+        senders=jnp.asarray(s),
+        receivers=jnp.asarray(r),
+        n_nodes=int(n_nodes),
+        n_edges=n_edges,
+    )
+
+
+def build_csr(g: Graph) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR (indptr, indices) from the (sender-sorted) edge list."""
+    s = np.asarray(g.senders)[: g.n_edges]
+    r = np.asarray(g.receivers)[: g.n_edges]
+    order = np.argsort(s, kind="stable")
+    s, r = s[order], r[order]
+    counts = np.bincount(s, minlength=g.n_nodes)
+    indptr = np.zeros(g.n_nodes + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, r.astype(np.int32)
+
+
+def pad_graph(g: Graph, e_pad: int) -> Graph:
+    """Return a copy padded (with the dummy-node sentinel) to ``e_pad`` edges."""
+    if e_pad < g.n_edges:
+        raise ValueError(f"pad {e_pad} < real edges {g.n_edges}")
+    if e_pad == g.e_pad:
+        return g
+    extra = e_pad - g.e_pad
+    pad = jnp.full((extra,), g.n_nodes, dtype=jnp.int32)
+    return Graph(
+        senders=jnp.concatenate([g.senders, pad]),
+        receivers=jnp.concatenate([g.receivers, pad]),
+        n_nodes=g.n_nodes,
+        n_edges=g.n_edges,
+    )
+
+
+def to_networkx(g: Graph):
+    """Small-graph escape hatch for oracle comparisons in tests."""
+    import networkx as nx
+
+    s = np.asarray(g.senders)[: g.n_edges]
+    r = np.asarray(g.receivers)[: g.n_edges]
+    G = nx.Graph()
+    G.add_nodes_from(range(g.n_nodes))
+    G.add_edges_from(zip(s.tolist(), r.tolist()))
+    return G

@@ -1,0 +1,128 @@
+"""Fixed-fanout neighbour sampling (the `minibatch_lg` shape's requirement).
+
+Layered fixed-fanout sampling à la GraphSAGE: for a batch of seed vertices we
+draw ``fanout[0]`` neighbours each, then ``fanout[1]`` neighbours of those, …
+Fixed fanout (sampling with replacement, masked for isolated vertices) keeps
+every shape static, so the whole sampler jits and the sampled step compiles
+once for the lifetime of a training run.
+
+The sampler holds the CSR arrays on device; sampling one minibatch is a pure
+function of (rng key, seed ids) — re-sampling under a restored checkpoint with
+the same key is bitwise reproducible, which the fault-tolerance tests rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.graph import Graph, build_csr
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SampledSubgraph:
+    """Layered fixed-fanout sample.
+
+    layers[k] has shape (batch, fanout[0], …, fanout[k-1]) of *global* vertex
+    ids; masks[k] marks slots backed by a real neighbour.  layers[0] is the
+    seed batch itself.
+    """
+    layers: Tuple[jnp.ndarray, ...]
+    masks: Tuple[jnp.ndarray, ...]
+
+    @property
+    def batch(self) -> int:
+        return int(self.layers[0].shape[0])
+
+
+class NeighborSampler:
+    """Uniform neighbour sampler over a CSR graph."""
+
+    def __init__(self, g: Graph, fanout: Sequence[int]):
+        indptr, indices = build_csr(g)
+        self.indptr = jnp.asarray(indptr, dtype=jnp.int32)
+        self.indices = jnp.asarray(indices, dtype=jnp.int32)
+        self.fanout = tuple(int(f) for f in fanout)
+        self.n_nodes = g.n_nodes
+
+    @partial(jax.jit, static_argnums=0)
+    def sample(self, key: jax.Array, seeds: jnp.ndarray) -> SampledSubgraph:
+        layers = [seeds]
+        masks = [jnp.ones(seeds.shape, dtype=bool)]
+        frontier = seeds
+        fmask = masks[0]
+        for hop, f in enumerate(self.fanout):
+            key, sub = jax.random.split(key)
+            start = self.indptr[frontier]
+            deg = self.indptr[frontier + 1] - start
+            # one uniform draw per slot, with replacement
+            u = jax.random.randint(
+                sub, frontier.shape + (f,), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+            )
+            safe_deg = jnp.maximum(deg, 1)
+            offs = u % safe_deg[..., None]
+            nbr = self.indices[jnp.minimum(start[..., None] + offs, self.indices.shape[0] - 1)]
+            mask = jnp.broadcast_to(
+                (deg[..., None] > 0) & fmask[..., None], nbr.shape
+            )
+            nbr = jnp.where(mask, nbr, 0)
+            layers.append(nbr)
+            masks.append(mask)
+            frontier, fmask = nbr, mask
+        return SampledSubgraph(layers=tuple(layers), masks=tuple(masks))
+
+
+def aggregate_mean(
+    child_feats: jnp.ndarray, child_mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Masked mean over the innermost fanout axis: (…, F, D) -> (…, D)."""
+    w = child_mask[..., None].astype(child_feats.dtype)
+    s = (child_feats * w).sum(axis=-2)
+    cnt = jnp.maximum(w.sum(axis=-2), 1.0)
+    return s / cnt
+
+
+def tree_edges(sub: SampledSubgraph):
+    """Flatten a layered sample into (global_ids, senders, receivers, mask).
+
+    Node slots are the union of all layers (seeds first); each sampled child
+    slot contributes one *directed* edge child→parent — exactly the
+    information flow of sampled-GraphSAGE training.  The flat form lets every
+    GNN `apply` (which consumes raw edge arrays) run unchanged on minibatches.
+    """
+    ids = [sub.layers[0].reshape(-1)]
+    masks = [sub.masks[0].reshape(-1)]
+    offsets = [0]
+    total = ids[0].shape[0]
+    for lay, msk in zip(sub.layers[1:], sub.masks[1:]):
+        offsets.append(total)
+        ids.append(lay.reshape(-1))
+        masks.append(msk.reshape(-1))
+        total += lay.size
+    global_ids = jnp.concatenate(ids)
+    node_mask = jnp.concatenate(masks)
+
+    senders, receivers, emask = [], [], []
+    for k in range(1, len(sub.layers)):
+        child = sub.layers[k]
+        fan = child.shape[-1]
+        n_parents = int(np.prod(child.shape[:-1]))
+        child_slots = offsets[k] + jnp.arange(n_parents * fan, dtype=jnp.int32)
+        parent_slots = offsets[k - 1] + jnp.repeat(
+            jnp.arange(n_parents, dtype=jnp.int32), fan
+        )
+        senders.append(child_slots)
+        receivers.append(parent_slots)
+        emask.append(sub.masks[k].reshape(-1))
+    return (
+        global_ids,
+        node_mask,
+        jnp.concatenate(senders),
+        jnp.concatenate(receivers),
+        jnp.concatenate(emask),
+    )

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+kernels/<name>.py  — pl.pallas_call + BlockSpec (TPU target, interpret on CPU)
+kernels/ops.py     — jit'd public wrappers (backend auto-dispatch)
+kernels/ref.py     — pure-jnp oracles, the allclose targets for tests
+"""
+from repro.kernels.ops import embedding_bag, tc_neighbor_max, tc_spmv
+
+__all__ = ["tc_spmv", "tc_neighbor_max", "embedding_bag"]

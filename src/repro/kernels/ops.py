@@ -1,0 +1,115 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on CPU (this container) kernels run `interpret=True`, which
+executes the kernel body in Python per grid step — bit-identical semantics to
+the TPU lowering, minus performance.  On TPU the same call sites compile the
+real Mosaic kernels.  `interpret=None` means "auto by backend".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import BlockTiledGraph
+from repro.kernels.tc_spmv import tc_spmv_pallas
+from repro.kernels.tc_neighbor_max import tc_neighbor_max_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+
+_NEG = jnp.int32(-(1 << 30))
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def tc_spmv(
+    tiled: BlockTiledGraph,
+    rhs: jnp.ndarray,
+    *,
+    col_flags: jnp.ndarray | None = None,
+    interpret: Optional[bool] = None,
+    skip_dma: bool = False,
+) -> jnp.ndarray:
+    """Paper phase ②: N = A × rhs on the block-tiled adjacency."""
+    return tc_spmv_pallas(
+        tiled.tiles,
+        tiled.tile_rows,
+        tiled.tile_cols,
+        rhs,
+        tiled.n_block_rows,
+        col_flags=col_flags,
+        interpret=_auto_interpret(interpret),
+        skip_dma=skip_dma,
+    )
+
+
+def tc_neighbor_max(
+    tiled: BlockTiledGraph,
+    p: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Beyond-paper phase ①: Max_Np on the same tile schedule."""
+    pm = jnp.where(mask, p, _NEG)
+    return tc_neighbor_max_pallas(
+        tiled.tiles,
+        tiled.tile_rows,
+        tiled.tile_cols,
+        pm,
+        tiled.n_block_rows,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Recsys embedding-bag (weighted sum over a bag of rows)."""
+    if weights is None:
+        weights = jnp.ones(indices.shape, dtype=jnp.float32)
+    return embedding_bag_pallas(
+        table, indices, weights, interpret=_auto_interpret(interpret)
+    )
+
+
+def tc_spmv_fused(
+    tiled: BlockTiledGraph,
+    rhs: jnp.ndarray,
+    cand: jnp.ndarray,          # (n_padded,) bool
+    alive: jnp.ndarray,         # (n_padded,) bool
+    *,
+    interpret: Optional[bool] = None,
+):
+    """Fused phase ②+③ (DESIGN.md §6.3): one kernel pass emits N_c AND the
+    updated (alive, in_mis_add) masks.
+
+    Block-rows with no stored tiles never enter the kernel grid, so their
+    epilogue is patched here from the trivial rule (no neighbours ⇒ n_c=0 ⇒
+    alive' = alive ∧ ¬cand, mis_add = cand).
+    """
+    from repro.kernels.tc_spmv import tc_spmv_fused_pallas
+
+    T = tiled.tile_size
+    n_c, new_alive, mis_add = tc_spmv_fused_pallas(
+        tiled.tiles, tiled.tile_rows, tiled.tile_cols, rhs,
+        cand.astype(jnp.int8), alive.astype(jnp.int8), tiled.n_block_rows,
+        interpret=_auto_interpret(interpret),
+    )
+    # static per-graph coverage: which block-rows own at least one tile
+    covered_rows = jnp.zeros((tiled.n_block_rows,), bool).at[
+        tiled.tile_rows[: max(tiled.n_tiles, 1)]
+    ].set(tiled.n_tiles > 0)
+    covered = jnp.repeat(covered_rows, T)
+    new_alive_b = jnp.where(covered, new_alive != 0, alive & ~cand)
+    mis_add_b = jnp.where(covered, mis_add != 0, cand)
+    n_c = jnp.where(covered[:, None], n_c, 0.0)
+    return n_c, new_alive_b, mis_add_b

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the `assert_allclose` targets).
+
+These are intentionally naive — materialise-gather-einsum-segment — so they
+are obviously correct and serve as the numerical ground truth for the
+shape/dtype sweeps in tests/test_kernels_*.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = jnp.int32(-(1 << 30))
+
+
+def tc_spmv_ref(
+    tiles: jnp.ndarray,
+    tile_rows: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    rhs: jnp.ndarray,
+    n_block_rows: int,
+    *,
+    col_flags: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Oracle for tc_spmv_pallas (col_flags only gates *empty* slabs, so the
+    result is identical with or without them — asserted in tests)."""
+    nt, T, _ = tiles.shape
+    L = rhs.shape[-1]
+    blocks = rhs.reshape(-1, T, L)
+    gathered = blocks[tile_cols].astype(jnp.float32)
+    prod = jnp.einsum("ijk,ikl->ijl", tiles.astype(jnp.float32), gathered)
+    out = jax.ops.segment_sum(prod, tile_rows, num_segments=n_block_rows)
+    return out.reshape(n_block_rows * T, L)
+
+
+def tc_neighbor_max_ref(
+    tiles: jnp.ndarray,
+    tile_rows: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    pm: jnp.ndarray,
+    n_block_rows: int,
+) -> jnp.ndarray:
+    """Oracle for tc_neighbor_max_pallas."""
+    nt, T, _ = tiles.shape
+    pm2 = pm.reshape(-1, T)
+    gathered = pm2[tile_cols]                                # (nt, T)
+    vals = jnp.where(tiles != 0, gathered[:, None, :], _NEG)  # (nt, T, T)
+    tile_max = vals.max(axis=2)                              # (nt, T)
+    out = jax.ops.segment_max(tile_max, tile_rows, num_segments=n_block_rows)
+    return out.reshape(n_block_rows * T)
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,      # (V, D)
+    indices: jnp.ndarray,    # (B, K) int32
+    weights: jnp.ndarray,    # (B, K) float — 0 masks a slot
+) -> jnp.ndarray:
+    """Oracle for the recsys embedding-bag: Σ_k w[b,k] · table[idx[b,k]]."""
+    rows = table[indices]                                    # (B, K, D)
+    return (rows * weights[..., None]).sum(axis=1)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: tiled masked neighbour-max (beyond-paper phase ①).
+
+The paper leaves phase ① (`Max_Np(v) = max_{u∈N(v)∩A} P(u)`) on CUDA cores —
+and its own profile shows that after phase ② is tensorised, phase ① dominates
+(83.1 % of TC-MIS runtime on G3/H200).  This kernel moves phase ① onto the
+*same* BSR schedule as the SpMV: one grid step per tile, masked max over the
+tile's columns, max-accumulated into a resident (1, T) output block.
+
+Max has no MXU form, so this is VPU work — but it reads the identical tile
+stream as `tc_spmv`, so on TPU the two kernels are bandwidth-twins and the
+whole MIS round becomes tile-regular (DESIGN.md §6.1).
+
+Priorities are int32; "dead" columns are encoded by the caller as _NEG
+(−2^30) *before* the call, which keeps the kernel a pure max-reduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -(1 << 30)  # plain int: jnp scalars would be captured as kernel consts
+
+
+def _nbr_max_kernel(rows_ref, cols_ref, tiles_ref, pm_ref, out_ref):
+    i = pl.program_id(0)
+    row = rows_ref[i]
+    prev = rows_ref[jnp.maximum(i - 1, 0)]
+
+    @pl.when((i == 0) | (prev != row))
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _NEG)
+
+    tile = tiles_ref[0]                       # (T, T): row v, col u
+    pm = pm_ref[...]                          # (1, T) masked priorities
+    vals = jnp.where(tile != 0, pm, _NEG)     # broadcast over rows
+    out_ref[...] = jnp.maximum(out_ref[...], vals.max(axis=1, keepdims=True).T)
+
+
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "interpret"))
+def tc_neighbor_max_pallas(
+    tiles: jnp.ndarray,       # (nt, T, T) int8, block-row-major
+    tile_rows: jnp.ndarray,   # (nt,) int32, non-decreasing
+    tile_cols: jnp.ndarray,   # (nt,) int32
+    pm: jnp.ndarray,          # (nbc*T,) int32 — priorities, _NEG where masked
+    n_block_rows: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Max_Np over BSR tiles. Returns (n_block_rows*T,) int32 (_NEG = none)."""
+    nt, T, _ = tiles.shape
+    pm2 = pm.reshape(-1, T)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, T, T), lambda i, rows, cols: (i, 0, 0)),
+            pl.BlockSpec((1, T), lambda i, rows, cols: (cols[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T), lambda i, rows, cols: (rows[i], 0)),
+    )
+    out = pl.pallas_call(
+        _nbr_max_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_block_rows, T), jnp.int32),
+        interpret=interpret,
+    )(tile_rows, tile_cols, tiles, pm2)
+    return out.reshape(n_block_rows * T)

@@ -1,0 +1,192 @@
+"""Pallas TPU kernel: block-tiled SpMV (the paper's phase-② WMMA listing).
+
+One grid step per stored BSR tile, in block-row-major order:
+
+  HBM layout                          VMEM working set per step
+  tiles      (nt, T, T)   int8   ->   (1, T, T)  one adjacency tile
+  rhs        (nbc·T, L)   f32    ->   (T, L)     the tile's RHS slab
+  out        (nbr·T, L)   f32    ->   (T, L)     resident accumulator
+
+With the default T=128, L=128 the working set is 128·128·(1+4+4) ≈ 144 KiB —
+comfortably inside a v5e core's ~128 KiB/slot double-buffered VMEM budget at
+bf16 RHS (switch `rhs` to bf16 to halve it; accumulation stays f32 via
+`preferred_element_type`).  Both matmul dims are 128-multiples, so every
+`jnp.dot` is exactly one MXU pass — the TPU equivalent of the paper's one
+`mma_sync` per WMMA fragment.
+
+TPU-native replacements for the paper's GPU mechanics (DESIGN.md §2):
+  * per-row-per-tile atomics  -> tiles sorted by block-row; consecutive grid
+    steps hitting the same output block accumulate in VMEM; `@pl.when` on the
+    row transition zero-initialises the accumulator.
+  * warp-level wave scheduling -> Pallas pipelines the HBM→VMEM DMAs of step
+    i+1 under the MXU work of step i (automatic double buffering).
+  * empty-C tile skipping      -> `col_flags` scalar prefetch: tiles whose RHS
+    slab is all-zero skip the MXU op (`@pl.when`).  The DMA itself is also
+    skippable by pointing the index_map at the previous block — that variant
+    is `skip_dma=True` (hill-climb knob; both validated against the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmv_kernel(rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, out_ref):
+    i = pl.program_id(0)
+    row = rows_ref[i]
+    prev = rows_ref[jnp.maximum(i - 1, 0)]
+
+    @pl.when((i == 0) | (prev != row))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(flags_ref[cols_ref[i]] != 0)
+    def _mma():
+        a = tiles_ref[0].astype(jnp.float32)       # (T, T) 0/1 adjacency tile
+        b = rhs_ref[...].astype(jnp.float32)       # (T, L) packed RHS lanes
+        out_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_block_rows", "interpret", "skip_dma")
+)
+def tc_spmv_pallas(
+    tiles: jnp.ndarray,       # (nt, T, T) int8, block-row-major
+    tile_rows: jnp.ndarray,   # (nt,) int32, non-decreasing
+    tile_cols: jnp.ndarray,   # (nt,) int32
+    rhs: jnp.ndarray,         # (nbc*T, L) float
+    n_block_rows: int,
+    *,
+    col_flags: jnp.ndarray | None = None,  # (nbc,) int32; None = all active
+    interpret: bool = True,
+    skip_dma: bool = False,
+) -> jnp.ndarray:
+    """N = A @ rhs over BSR tiles. Returns (n_block_rows*T, L) float32."""
+    nt, T, _ = tiles.shape
+    L = rhs.shape[-1]
+    nbc = rhs.shape[0] // T
+    if col_flags is None:
+        col_flags = jnp.ones((nbc,), dtype=jnp.int32)
+
+    if skip_dma:
+        # point the RHS DMA at block 0 when the slab is empty — the MXU op is
+        # predicated off anyway, so correctness is unchanged but the HBM read
+        # is saved on TPU.  (Interpret mode validates the indexing only.)
+        def rhs_index(i, rows, cols, flags):
+            c = cols[i]
+            return (jnp.where(flags[c] != 0, c, 0), 0)
+    else:
+        def rhs_index(i, rows, cols, flags):
+            return (cols[i], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, T, T), lambda i, rows, cols, flags: (i, 0, 0)),
+            pl.BlockSpec((T, L), rhs_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (T, L), lambda i, rows, cols, flags: (rows[i], 0)
+        ),
+    )
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_block_rows * T, L), jnp.float32),
+        interpret=interpret,
+    )(tile_rows, tile_cols, col_flags, tiles, rhs)
+
+
+# ---------------------------------------------------------------------------
+# fused phase ②+③ variant (DESIGN.md §6.3): the state update is applied in
+# the SpMV epilogue on the LAST visit to each output block, so N_c never
+# round-trips through HBM — the kernel emits the new (alive, in_mis) masks
+# directly.
+# ---------------------------------------------------------------------------
+
+def _spmv_fused_kernel(
+    rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, cand_ref, alive_ref,
+    nc_ref, alive_out_ref, mis_out_ref,
+):
+    i = pl.program_id(0)
+    nt = pl.num_programs(0)
+    row = rows_ref[i]
+    prev = rows_ref[jnp.maximum(i - 1, 0)]
+    nxt = rows_ref[jnp.minimum(i + 1, nt - 1)]
+
+    @pl.when((i == 0) | (prev != row))
+    def _init():
+        nc_ref[...] = jnp.zeros_like(nc_ref)
+
+    @pl.when(flags_ref[cols_ref[i]] != 0)
+    def _mma():
+        a = tiles_ref[0].astype(jnp.float32)
+        b = rhs_ref[...].astype(jnp.float32)
+        nc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when((i == nt - 1) | (nxt != row))
+    def _epilogue():
+        # phase ③, paper's three rules — lock-free: own row block only
+        cand = cand_ref[...] != 0                      # (T, 1) lanes
+        alive = alive_ref[...] != 0
+        hit = nc_ref[..., 0:1] > 0
+        mis_out_ref[...] = cand.astype(jnp.int8)
+        alive_out_ref[...] = (alive & ~cand & ~hit).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_block_rows", "interpret")
+)
+def tc_spmv_fused_pallas(
+    tiles: jnp.ndarray,
+    tile_rows: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    rhs: jnp.ndarray,          # (nbc*T, L): lane 0 = C, lane 1 = alive
+    cand: jnp.ndarray,         # (nbr*T,) int8 — candidate mask per row block
+    alive: jnp.ndarray,        # (nbr*T,) int8
+    n_block_rows: int,
+    *,
+    col_flags: jnp.ndarray | None = None,
+    interpret: bool = True,
+):
+    """Fused phase ②+③: returns (n_c (nbr*T, L) f32, new_alive i8, mis_add i8)."""
+    nt, T, _ = tiles.shape
+    L = rhs.shape[-1]
+    nbc = rhs.shape[0] // T
+    if col_flags is None:
+        col_flags = jnp.ones((nbc,), dtype=jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, T, T), lambda i, rows, cols, flags: (i, 0, 0)),
+            pl.BlockSpec((T, L), lambda i, rows, cols, flags: (cols[i], 0)),
+            pl.BlockSpec((T, 1), lambda i, rows, cols, flags: (rows[i], 0)),
+            pl.BlockSpec((T, 1), lambda i, rows, cols, flags: (rows[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, L), lambda i, rows, cols, flags: (rows[i], 0)),
+            pl.BlockSpec((T, 1), lambda i, rows, cols, flags: (rows[i], 0)),
+            pl.BlockSpec((T, 1), lambda i, rows, cols, flags: (rows[i], 0)),
+        ],
+    )
+    n_c, new_alive, mis_add = pl.pallas_call(
+        _spmv_fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_block_rows * T, L), jnp.float32),
+            jax.ShapeDtypeStruct((n_block_rows * T, 1), jnp.int8),
+            jax.ShapeDtypeStruct((n_block_rows * T, 1), jnp.int8),
+        ],
+        interpret=interpret,
+    )(
+        tile_rows, tile_cols, col_flags, tiles, rhs,
+        cand.reshape(-1, 1), alive.reshape(-1, 1),
+    )
+    return n_c, new_alive[:, 0], mis_add[:, 0]

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell,
+record memory/cost analysis, collective schedule, and roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+        --out experiments/dryrun --skip-existing
+
+Methodology (EXPERIMENTS.md §Dry-run):
+* memory pass — the production program (rolled scans, loop buffers reused):
+  memory_analysis is the fits-on-chip evidence; also the compile-OK gate.
+* cost passes — XLA cost_analysis counts loop bodies ONCE, so LM cells
+  compile UNROLLED reduced-depth twins (L=2, L=4) and extrapolate affinely
+  in layer count (homogeneous stacks ⇒ cost = a + b·L exactly).  Non-LM
+  cells have no layer scans (GNN layers are a python loop; the MIS
+  while-loop is intentionally counted per-round), so their memory pass
+  doubles as the cost pass.
+
+Failures (sharding mismatch, OOM-at-compile, unsupported collective) are
+bugs — the run records them and exits non-zero.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+def _compile_pass(cell, mesh, variant):
+    fn, inputs, in_shardings = cell.build(mesh, variant=variant)
+    t0 = time.time()
+    lowered = jax.jit(fn, in_shardings=in_shardings).lower(*inputs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _cost_record(compiled):
+    from benchmarks.roofline import parse_collective_bytes
+
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collective_bytes(compiled.as_text())
+    return dict(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collectives={k: int(v) for k, v in colls.items()},
+    )
+
+
+def _affine(a: dict, b: dict, la: int, lb: int, lfull: int) -> dict:
+    """Per-key affine extrapolation X(L) = Xa + (Xb-Xa)/(lb-la)·(L-la)."""
+    t = (lfull - la) / (lb - la)
+
+    def ext(xa, xb):
+        return xa + (xb - xa) * t
+
+    colls = {}
+    for k in set(a["collectives"]) | set(b["collectives"]):
+        colls[k] = int(max(0, ext(a["collectives"].get(k, 0), b["collectives"].get(k, 0))))
+    return dict(
+        flops=ext(a["flops"], b["flops"]),
+        bytes_accessed=ext(a["bytes_accessed"], b["bytes_accessed"]),
+        collectives=colls,
+    )
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str, out_dir: str,
+             skip_existing: bool) -> dict:
+    from repro.configs import REGISTRY
+    from repro.launch.mesh import make_production_mesh
+    from benchmarks.roofline import RooflineTerms, HBM_BW, ICI_BW, PEAK_FLOPS
+
+    tag = f"{arch_id}__{shape}__{mesh_kind}".replace("/", "_")
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[skip] {tag}", flush=True)
+            return rec
+
+    cell = REGISTRY[arch_id].cells[shape]
+    rec = dict(arch=arch_id, shape=shape, mesh=mesh_kind, kind=cell.kind,
+               note=cell.note)
+    if cell.skip_reason:
+        rec.update(status="skipped", skip_reason=cell.skip_reason)
+        _write(path, rec)
+        print(f"[N/A ] {tag}: {cell.skip_reason}", flush=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    try:
+        with mesh:
+            # ---- memory pass (production program) -------------------------
+            compiled, t_lower, t_compile = _compile_pass(cell, mesh, "memory")
+            ma = compiled.memory_analysis()
+            mem = dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+                total_per_device=ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes
+                + ma.output_size_in_bytes
+                - ma.alias_size_in_bytes,
+            )
+            times = dict(lower_s=round(t_lower, 2), compile_s=round(t_compile, 2))
+            # ---- cost passes ----------------------------------------------
+            if cell.extrapolate:
+                ex = cell.extrapolate
+                ca_a, _, tca = _compile_pass(cell, mesh, "cost_a")
+                cost_a = _cost_record(ca_a)
+                del ca_a
+                ca_b, _, tcb = _compile_pass(cell, mesh, "cost_b")
+                cost_b = _cost_record(ca_b)
+                del ca_b
+                cost = _affine(cost_a, cost_b, ex["la"], ex["lb"], ex["lfull"])
+                times.update(cost_a_s=round(tca, 2), cost_b_s=round(tcb, 2))
+                rec["cost_method"] = (
+                    f"affine layer extrapolation L∈{{{ex['la']},{ex['lb']}}} "
+                    f"→ {ex['lfull']} (unrolled)"
+                )
+                rec["cost_samples"] = dict(cost_a=cost_a, cost_b=cost_b)
+            else:
+                cost = _cost_record(compiled)
+                rec["cost_method"] = "direct (no layer scan in program)"
+
+        coll_bytes = sum(cost["collectives"].values())
+        terms = dict(
+            compute_s=cost["flops"] / PEAK_FLOPS,
+            memory_s=cost["bytes_accessed"] / HBM_BW,
+            collective_s=coll_bytes / ICI_BW,
+        )
+        dominant = max(terms, key=terms.get)
+        step_time = max(terms.values())
+        model_flops_dev = cell.model_flops / n_dev
+        rec.update(
+            status="ok",
+            devices=n_dev,
+            times=times,
+            memory=mem,
+            cost=cost,
+            roofline=dict(
+                **terms,
+                dominant=dominant.replace("_s", ""),
+                step_time_s=step_time,
+                model_flops=model_flops_dev,
+                useful_flop_fraction=(
+                    model_flops_dev / cost["flops"] if cost["flops"] else 0.0
+                ),
+                mfu=(
+                    model_flops_dev / (PEAK_FLOPS * step_time)
+                    if step_time > 0 else 0.0
+                ),
+            ),
+            model_flops_global=cell.model_flops,
+        )
+        print(
+            f"[ ok ] {tag}: mem {mem['total_per_device']/2**30:.2f} GiB/dev, "
+            f"dominant={rec['roofline']['dominant']}, "
+            f"mfu={rec['roofline']['mfu']:.3f}, "
+            f"compile {times['compile_s']}s", flush=True,
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=repr(e), traceback=traceback.format_exc())
+        print(f"[FAIL] {tag}: {e!r}", flush=True)
+    _write(path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--skip-existing", action="store_true")
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args()
+
+    from repro.configs import REGISTRY
+
+    archs = list(REGISTRY) if args.arch == "all" else args.arch.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for a in archs:
+            for s in REGISTRY[a].cells:
+                print(f"{a} × {s}")
+        return 0
+
+    failures = 0
+    for a in archs:
+        shapes = (
+            list(REGISTRY[a].cells) if args.shape == "all" else args.shape.split(",")
+        )
+        for s in shapes:
+            if s not in REGISTRY[a].cells:
+                continue
+            for m in meshes:
+                rec = run_cell(a, s, m, args.out, args.skip_existing)
+                if rec.get("status") == "error":
+                    failures += 1
+    print(f"dry-run complete; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --preset cpu-small --steps 200 --ckpt-dir /tmp/run1
+
+Presets:
+  cpu-small   ~10M-param reduction of the arch, single device — the
+              "train a ~100M-class model for a few hundred steps" driver
+              scaled to this container (see examples/train_lm.py).
+  production  the full assigned config on the production mesh (requires
+              real TPU devices; on CPU it will lower but not usefully run).
+
+The loop is the fault-tolerant TrainLoop: checkpoint/restart, straggler
+deadlines, retry-on-failure (train/train_loop.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def small_variant(cfg, vocab=2048):
+    """Shrink an LMConfig to a CPU-trainable size, keeping its structure."""
+    from repro.models.lm_config import LMConfig, MLAConfig, MoEConfig
+
+    moe = None
+    if cfg.moe:
+        moe = MoEConfig(
+            n_experts=min(cfg.moe.n_experts, 8),
+            top_k=min(cfg.moe.top_k, 2),
+            d_expert=128,
+            n_shared=min(cfg.moe.n_shared, 1),
+            router=cfg.moe.router,
+        )
+    mla = None
+    if cfg.mla:
+        mla = MLAConfig(q_lora_rank=64, kv_lora_rank=32, d_nope=32, d_rope=16, d_v=32)
+    return dataclasses.replace(
+        cfg,
+        n_layers=min(cfg.n_layers, 4),
+        d_model=256,
+        n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_head=64,
+        d_ff=512,
+        vocab=vocab,
+        moe=moe,
+        mla=mla,
+        window=min(cfg.window, 128) if cfg.window else None,
+        dtype=jnp.float32,
+        attn_chunk=64,
+        loss_chunk=64,
+        mtp=cfg.mtp,
+    )
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen1.5-0.5b")
+    p.add_argument("--preset", default="cpu-small", choices=["cpu-small", "production"])
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    p.add_argument("--checkpoint-every", type=int, default=50)
+    p.add_argument("--log", default=None)
+    args = p.parse_args()
+
+    from repro.configs import REGISTRY
+    from repro.configs.common import make_lm_train_step
+    from repro.data.pipeline import TokenStream
+    from repro.models import transformer as tf
+    from repro.train import LoopConfig, OptConfig, TrainLoop, adamw_init
+
+    arch = REGISTRY[args.arch]
+    assert arch.family == "lm", "train.py drives the LM family; see examples/"
+    cfg = arch.config if args.preset == "production" else small_variant(arch.config)
+
+    params = tf.init_lm(jax.random.key(0), cfg)
+    opt = adamw_init(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{args.arch} [{args.preset}]: {n_params/1e6:.1f}M params")
+
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    raw_step = jax.jit(make_lm_train_step(cfg, opt_cfg))
+
+    def step_fn(state, batch):
+        params, opt = state
+        tokens, targets = batch
+        params, opt, loss, xent = raw_step(
+            params, opt, jnp.asarray(tokens), jnp.asarray(targets)
+        )
+        return (params, opt), {"loss": loss, "xent": xent}
+
+    stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=17)
+    loop = TrainLoop(
+        step_fn=step_fn,
+        init_state=(params, opt),
+        stream=stream,
+        cfg=LoopConfig(
+            ckpt_dir=args.ckpt_dir,
+            checkpoint_every=args.checkpoint_every,
+            log_path=args.log,
+        ),
+    )
+    print(f"starting at step {loop.start_step}")
+    result = loop.run(args.steps)
+    print(f"done: {result}")
+
+
+if __name__ == "__main__":
+    main()

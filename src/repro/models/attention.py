@@ -1,0 +1,177 @@
+"""Attention substrate: RoPE, online-softmax (flash-style) chunked attention,
+GQA/MQA grouping, sliding windows, MLA (latent) attention, and decode paths.
+
+The training/prefill attention is an **online-softmax scan over KV chunks**
+(the FlashAttention recurrence expressed in jnp + `lax.scan`): memory is
+O(S·chunk) instead of O(S²), every matmul is MXU-shaped, and XLA fuses the
+rescale into the accumulator update.  `attn_chunk` is a §Perf hill-climb
+lever.
+
+Decode is a single-token einsum over the cache — no flash machinery needed.
+MLA decode uses the *absorbed-weight* latent path: scores and values are
+computed directly against the (kv_lora + d_rope) latent cache, which is the
+entire point of MLA's cache compression.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(d: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, d) with d even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# flash-style chunked attention (train / prefill)
+# --------------------------------------------------------------------------
+
+def flash_attention(
+    q: jnp.ndarray,             # (B, S, H, dq)
+    k: jnp.ndarray,             # (B, S, Hkv, dq)
+    v: jnp.ndarray,             # (B, S, Hkv, dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    scale: Optional[float] = None,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Online-softmax attention, O(S·chunk) memory.  Returns (B, S, H, dv).
+
+    GQA stays *grouped*: q is reshaped to (B, S, Hkv, G, dq) and scores are
+    computed against un-replicated K/V — repeated-KV materialisation would
+    multiply HBM traffic by G for nothing.
+    """
+    B, S, H, dq = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    dv = v.shape[-1]
+    scale = scale if scale is not None else dq ** -0.5
+    chunk = min(chunk, S)
+    # ragged sequences (e.g. the MTP block's S−1) pad up to a chunk multiple;
+    # padded keys are masked off, padded queries sliced away at the end.
+    S_real = S
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    n_chunks = S // chunk
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, G, dq)
+    kc = k.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, dq)
+    vc = v.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, dv)
+    q_pos = jnp.arange(S)
+
+    def step(carry, inputs):
+        m, l, acc = carry                    # (B,S,Hkv,G), same, (B,S,Hkv,G,dv)
+        j, k_j, v_j = inputs                 # k_j (B,chunk,Hkv,dq)
+        s = jnp.einsum("bshgd,bchd->bshgc", qg, k_j)      # (B,S,Hkv,G,chunk)
+        k_pos = j * chunk + jnp.arange(chunk)
+        mask = jnp.broadcast_to(k_pos[None, :] < S_real, (S, chunk))
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p, v_j
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, Hkv, G), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, G), dtype=jnp.float32)
+    acc0 = jnp.zeros((B, S, Hkv, G, dv), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, acc0),
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+        unroll=unroll,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(B, S, H, dv).astype(q.dtype)
+    return out[:, :S_real] if pad else out
+
+
+# --------------------------------------------------------------------------
+# decode attention (one new token against a cache)
+# --------------------------------------------------------------------------
+
+def decode_attention(
+    q: jnp.ndarray,             # (B, H, dq) — the single new query
+    k_cache: jnp.ndarray,       # (B, C, Hkv, dq)
+    v_cache: jnp.ndarray,       # (B, C, Hkv, dv)
+    valid: jnp.ndarray,         # (B, C) bool — which cache slots are live
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Returns (B, H, dv).  Works for full, windowed (ring) and MQA caches."""
+    B, H, dq = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else dq ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, dq)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, k_cache.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgc,bchd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, -1).astype(q.dtype)
+
+
+def mla_decode_attention(
+    q_nope: jnp.ndarray,        # (B, H, d_nope)
+    q_rope: jnp.ndarray,        # (B, H, d_rope) — rope already applied
+    ckv_cache: jnp.ndarray,     # (B, C, r)   latent KV cache
+    krope_cache: jnp.ndarray,   # (B, C, d_rope) shared rope key cache
+    valid: jnp.ndarray,         # (B, C)
+    w_uk: jnp.ndarray,          # (H, d_nope, r)  up-projection K
+    w_uv: jnp.ndarray,          # (H, r, d_v)     up-projection V
+    *,
+    scale: float,
+) -> jnp.ndarray:
+    """Absorbed-weight MLA decode: attend in the latent space.
+
+    q_lat = q_nope · W_uk   →  scores = q_lat · c_kv + q_rope · k_rope
+    ctx_lat = softmax · c_kv →  out_h = ctx_lat · W_uv
+    Per-token work is O(C·(r + d_rope)) per head instead of
+    O(C·(d_nope + d_rope)) with *materialised* K/V of size H·(d_nope+d_v) —
+    the cache shrinks by H·(d_nope+d_v)/(r+d_rope) ≈ 14× for DeepSeek-V3.
+    """
+    q_lat = jnp.einsum(
+        "bhd,hdr->bhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)
+    )
+    s = jnp.einsum("bhr,bcr->bhc", q_lat, ckv_cache.astype(jnp.float32))
+    s += jnp.einsum(
+        "bhd,bcd->bhc", q_rope.astype(jnp.float32), krope_cache.astype(jnp.float32)
+    )
+    s = jnp.where(valid[:, None, :], s * scale, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhc,bcr->bhr", p, ckv_cache.astype(jnp.float32))
+    out = jnp.einsum("bhr,hrv->bhv", ctx, w_uv.astype(jnp.float32))
+    return out.astype(q_nope.dtype)

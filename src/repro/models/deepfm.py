@@ -1,0 +1,130 @@
+"""DeepFM (Guo et al., arXiv:1703.04247) — assigned config:
+39 sparse fields, embed_dim=10, MLP 400-400-400, FM interaction.
+
+Layout follows the Criteo convention: 39 categorical fields, each with its
+own vocabulary, packed into ONE concatenated embedding table with per-field
+offsets — the table is the model-parallel axis (row-sharded over 'model',
+the classic recsys sharding).  The lookup is the hot path and runs through
+the shared embedding-bag substrate (jnp.take + segment-sum; Pallas kernel in
+kernels/embedding_bag.py).
+
+FM pairwise term uses the O(N·d) identity  Σ_{i<j}⟨v_i,v_j⟩ =
+½(‖Σv‖² − Σ‖v‖²).
+
+`retrieval_score` is the retrieval_cand shape's entry: one user context
+scored against 10⁶ candidate items as a single batched matvec — no loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import MLP, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    field_vocabs: Tuple[int, ...]      # per-field vocabulary sizes (39 fields)
+    embed_dim: int = 10
+    mlp_dims: Tuple[int, ...] = (400, 400, 400)
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.field_vocabs)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.field_vocabs))
+
+    @property
+    def offsets(self) -> jnp.ndarray:
+        off = jnp.cumsum(jnp.asarray((0,) + self.field_vocabs[:-1], jnp.int32))
+        return off
+
+    def param_count(self) -> int:
+        n = self.total_vocab * (self.embed_dim + 1)    # embeddings + linear
+        d = self.n_fields * self.embed_dim
+        for o in self.mlp_dims:
+            n += d * o + o
+            d = o
+        n += d + 1
+        return n
+
+
+def deepfm_init(key, cfg: DeepFMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(
+        embed=(jax.random.normal(k1, (cfg.total_vocab, cfg.embed_dim)) * 0.01).astype(cfg.dtype),
+        linear=(jax.random.normal(k2, (cfg.total_vocab,)) * 0.01).astype(cfg.dtype),
+        bias=jnp.zeros((), cfg.dtype),
+        mlp=mlp_init(
+            k3, (cfg.n_fields * cfg.embed_dim,) + tuple(cfg.mlp_dims) + (1,),
+            dtype=cfg.dtype,
+        ),
+    )
+
+
+def _lookup(params, cfg: DeepFMConfig, fields: jnp.ndarray) -> jnp.ndarray:
+    """fields: (B, F) per-field categorical ids -> (B, F, d) embeddings."""
+    flat_ids = fields + cfg.offsets[None, :]
+    return params["embed"][flat_ids]
+
+
+def deepfm_logits(params, cfg: DeepFMConfig, fields: jnp.ndarray) -> jnp.ndarray:
+    """(B, F) int32 -> (B,) logits."""
+    B, F = fields.shape
+    flat_ids = fields + cfg.offsets[None, :]
+    v = params["embed"][flat_ids]                       # (B, F, d)
+    # first-order
+    lin = params["linear"][flat_ids].sum(axis=1)        # (B,)
+    # FM second-order: ½(‖Σv‖² − Σ‖v‖²)
+    s = v.sum(axis=1)
+    fm = 0.5 * (jnp.sum(s * s, axis=-1) - jnp.sum(v * v, axis=(1, 2)))
+    # deep
+    deep = mlp_apply(params["mlp"], v.reshape(B, F * cfg.embed_dim), act=jax.nn.relu)[:, 0]
+    return (params["bias"] + lin + fm + deep).astype(jnp.float32)
+
+
+def deepfm_loss(params, cfg: DeepFMConfig, fields, labels) -> jnp.ndarray:
+    """Binary cross-entropy on (B,) {0,1} labels."""
+    logits = deepfm_logits(params, cfg, fields)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def retrieval_score(
+    params, cfg: DeepFMConfig, user_fields: jnp.ndarray, cand_ids: jnp.ndarray,
+    item_field: int = 0,
+) -> jnp.ndarray:
+    """Score ONE user context against N candidate items (retrieval_cand).
+
+    The candidate enters DeepFM through `item_field`; factorising the FM term
+    around that field turns the sweep into a single matvec over the candidate
+    embedding rows:  score(c) = const_user + ⟨v_c, Σ_user v⟩ + w_c.
+    (The deep tower is user-side only in this serving mode — the standard
+    two-tower deployment of FM models.)
+
+    user_fields: (F,) with user_fields[item_field] ignored; cand_ids: (N,).
+    Returns (N,) scores.
+    """
+    F = cfg.n_fields
+    user_mask = jnp.arange(F) != item_field
+    flat_ids = user_fields + cfg.offsets
+    v_all = params["embed"][flat_ids]                   # (F, d)
+    v_user = jnp.where(user_mask[:, None], v_all, 0)
+    s_user = v_user.sum(axis=0)                         # (d,)
+    fm_user = 0.5 * (jnp.sum(s_user * s_user) - jnp.sum(v_user * v_user))
+    lin_user = jnp.where(user_mask, params["linear"][flat_ids], 0).sum()
+    deep_in = (v_user.reshape(1, F * cfg.embed_dim))
+    deep_user = mlp_apply(params["mlp"], deep_in, act=jax.nn.relu)[0, 0]
+    const = params["bias"] + lin_user + fm_user + deep_user
+
+    cand_rows = cfg.offsets[item_field] + cand_ids
+    v_c = params["embed"][cand_rows]                    # (N, d)
+    w_c = params["linear"][cand_rows]                   # (N,)
+    return (const + v_c @ s_user + w_c).astype(jnp.float32)

@@ -1,0 +1,19 @@
+"""GNN model family (assigned archs: egnn, gin-tu, pna, mace).
+
+All four run on the shared edge-index `segment_sum/max` substrate — the same
+scatter/segment layer the MIS core's CC path uses (DESIGN.md §8).  GIN's
+sum-aggregation additionally supports the paper's BSR tiled-SpMM backend
+(`backend='tiled'`), where A × H runs through the tc_spmv Pallas kernel with
+the feature matrix as a multi-lane RHS.
+"""
+from repro.models.gnn.common import MLP, mlp_apply, mlp_init, segment_mean
+from repro.models.gnn.gin import gin_init, gin_apply
+from repro.models.gnn.pna import pna_init, pna_apply
+from repro.models.gnn.egnn import egnn_init, egnn_apply
+from repro.models.gnn.mace import mace_init, mace_apply
+
+__all__ = [
+    "MLP", "mlp_init", "mlp_apply", "segment_mean",
+    "gin_init", "gin_apply", "pna_init", "pna_apply",
+    "egnn_init", "egnn_apply", "mace_init", "mace_apply",
+]

@@ -1,0 +1,58 @@
+"""Shared GNN substrate: MLPs, masked segment reductions, message passing.
+
+Message passing is expressed over raw edge arrays (senders, receivers, mask)
+rather than the Graph object so the same `apply` works for full graphs,
+vmapped molecule batches, and sampled-subgraph trees.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MLP(NamedTuple):
+    ws: Tuple[jnp.ndarray, ...]
+    bs: Tuple[jnp.ndarray, ...]
+
+
+def mlp_init(key, dims: Sequence[int], dtype=jnp.float32) -> MLP:
+    ks = jax.random.split(key, len(dims) - 1)
+    ws, bs = [], []
+    for k, (i, o) in zip(ks, zip(dims[:-1], dims[1:])):
+        ws.append((jax.random.normal(k, (i, o)) * (2.0 / i) ** 0.5).astype(dtype))
+        bs.append(jnp.zeros((o,), dtype))
+    return MLP(tuple(ws), tuple(bs))
+
+
+def mlp_apply(p: MLP, x: jnp.ndarray, act=jax.nn.silu, final_act=False) -> jnp.ndarray:
+    n = len(p.ws)
+    for i, (w, b) in enumerate(zip(p.ws, p.bs)):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def segment_mean(x, segment_ids, num_segments, mask=None):
+    if mask is not None:
+        x = jnp.where(mask[..., None], x, 0)
+        ones = mask.astype(x.dtype)
+    else:
+        ones = jnp.ones(x.shape[:-1], x.dtype)
+    s = jax.ops.segment_sum(x, segment_ids, num_segments=num_segments)
+    cnt = jax.ops.segment_sum(ones, segment_ids, num_segments=num_segments)
+    return s / jnp.maximum(cnt, 1.0)[..., None]
+
+
+def gather_scatter_sum(h, senders, receivers, mask, n_nodes):
+    """Σ_{j∈N(i)} h_j — the canonical message-passing primitive."""
+    msg = jnp.where(mask[:, None], h[senders], 0)
+    return jax.ops.segment_sum(msg, receivers, num_segments=n_nodes)
+
+
+def degrees_from_edges(receivers, mask, n_nodes):
+    return jax.ops.segment_sum(
+        mask.astype(jnp.float32), receivers, num_segments=n_nodes
+    )

@@ -1,0 +1,62 @@
+"""GIN (Xu et al., arXiv:1810.00826) — assigned config gin-tu:
+5 layers, d_hidden=64, sum aggregator, learnable ε.
+
+h_i' = MLP((1+ε)·h_i + Σ_{j∈N(i)} h_j)
+
+The sum aggregation is exactly A × H, so GIN supports two backends:
+  'segment' — edge gather + segment_sum (the CC path)
+  'tiled'   — the paper's BSR tiled SpMM through the tc_spmv Pallas kernel,
+              with the feature matrix as the multi-lane RHS.  This is the
+              matrix-RHS generalisation of TC-MIS phase ② and drives the MXU
+              at full width (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import MLP, gather_scatter_sum, mlp_apply, mlp_init
+
+
+def gin_init(key, d_in: int, d_hidden: int = 64, n_layers: int = 5, n_out: int = 7):
+    ks = jax.random.split(key, n_layers + 1)
+    layers = []
+    d = d_in
+    for i in range(n_layers):
+        layers.append(
+            dict(
+                mlp=mlp_init(ks[i], (d, d_hidden, d_hidden)),
+                eps=jnp.zeros(()),
+            )
+        )
+        d = d_hidden
+    return dict(layers=layers, head=mlp_init(ks[-1], (d_hidden, n_out)))
+
+
+def gin_apply(
+    params,
+    h: jnp.ndarray,            # (N, d_in)
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    tiled=None,                # BlockTiledGraph for backend='tiled'
+    backend: str = "segment",
+):
+    """Returns (node embeddings (N, d_hidden), graph logits via head)."""
+    n = h.shape[0]
+    for layer in params["layers"]:
+        if backend == "tiled":
+            from repro.core.spmv import spmv_tiled
+            from repro.core.tiling import pack_vertex_vector
+
+            pad = tiled.n_padded - n
+            hp = jnp.pad(h, ((0, pad), (0, 0))) if pad else h
+            agg = spmv_tiled(tiled, hp.astype(jnp.float32), backend="pallas")[:n]
+            agg = agg.astype(h.dtype)
+        else:
+            agg = gather_scatter_sum(h, senders, receivers, mask, n)
+        h = mlp_apply(layer["mlp"], (1.0 + layer["eps"]) * h + agg)
+    return h, mlp_apply(params["head"], h)

@@ -1,0 +1,258 @@
+"""MACE — higher-order equivariant message passing (Batatia et al.,
+arXiv:2206.07697).  Assigned config: 2 layers, d_hidden=128 channels,
+l_max=2, correlation order 3, n_rbf=8, E(3)-ACE product basis.
+
+Implementation notes (DESIGN.md §8):
+* Features are dicts {l: (N, 2l+1, C)} of real-spherical-harmonic irreps.
+* Equivariant bilinear couplings use **real Gaunt tensors** (∫ Y Y Y dΩ),
+  computed once at import by Gauss–Legendre × uniform-φ quadrature (exact for
+  l ≤ 2 products), plus the Levi-Civita tensor for the parity-odd 1⊗1→1
+  (cross-product) path.  Each coupling is normalised to unit Frobenius norm.
+* Interaction: A_i[l3] = Σ_j Σ_paths R_p(r_ij) · (Y_l1(r̂_ij) ⊗ h_j[l2])_l3 —
+  radial Bessel basis (8) with polynomial cutoff, per-path per-channel MLP
+  weights.
+* ACE product basis: B2 = (A ⊗ A), B3 = (B2 ⊗ A) — correlation order 3 —
+  with per-path channel weights, linearly mixed into the message.
+* Readout: invariant (l=0) channel → per-node energy → Σ (rotation-invariant
+  by construction; property-tested).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import MLP, mlp_apply, mlp_init
+
+LMAX = 2
+Feats = Dict[int, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# real spherical harmonics (unit vectors), l ≤ 2
+# --------------------------------------------------------------------------
+
+def real_sph_harm(unit: jnp.ndarray) -> Dict[int, jnp.ndarray]:
+    """unit: (..., 3) unit vectors -> {l: (..., 2l+1)} orthonormal RSH."""
+    x, y, z = unit[..., 0], unit[..., 1], unit[..., 2]
+    c0 = 0.28209479177387814           # 1/(2 sqrt(pi))
+    c1 = 0.4886025119029199
+    c2a = 1.0925484305920792
+    c2b = 0.31539156525252005
+    c2c = 0.5462742152960396
+    y0 = jnp.stack([jnp.full_like(x, c0)], axis=-1)
+    y1 = jnp.stack([c1 * y, c1 * z, c1 * x], axis=-1)
+    y2 = jnp.stack(
+        [
+            c2a * x * y,
+            c2a * y * z,
+            c2b * (3 * z * z - 1.0),
+            c2a * x * z,
+            c2c * (x * x - y * y),
+        ],
+        axis=-1,
+    )
+    return {0: y0, 1: y1, 2: y2}
+
+
+def _np_sph(l: int, pts: np.ndarray) -> np.ndarray:
+    x, y, z = pts[..., 0], pts[..., 1], pts[..., 2]
+    if l == 0:
+        return np.stack([np.full_like(x, 0.28209479177387814)], axis=-1)
+    if l == 1:
+        c = 0.4886025119029199
+        return np.stack([c * y, c * z, c * x], axis=-1)
+    c2a, c2b, c2c = 1.0925484305920792, 0.31539156525252005, 0.5462742152960396
+    return np.stack(
+        [c2a * x * y, c2a * y * z, c2b * (3 * z * z - 1), c2a * x * z,
+         c2c * (x * x - y * y)], axis=-1)
+
+
+@lru_cache(maxsize=1)
+def coupling_tensors() -> List[Tuple[int, int, int, np.ndarray]]:
+    """All non-zero equivariant couplings (l1, l2, l3, K) for l ≤ LMAX.
+
+    Gaunt tensors from quadrature (parity-even) + Levi-Civita for (1,1,1).
+    Each K has unit Frobenius norm.
+    """
+    # Gauss-Legendre in cosθ (16 pts) × uniform φ (32 pts): exact for the
+    # ≤ degree-6 polynomial integrands arising from l ≤ 2 triples.
+    xs, wx = np.polynomial.legendre.leggauss(16)
+    phis = np.linspace(0, 2 * np.pi, 32, endpoint=False)
+    wphi = 2 * np.pi / len(phis)
+    ct = xs[:, None]
+    st = np.sqrt(1 - ct ** 2)
+    pts = np.stack(
+        [
+            (st * np.cos(phis)[None, :]),
+            (st * np.sin(phis)[None, :]),
+            np.broadcast_to(ct, (16, len(phis))),
+        ],
+        axis=-1,
+    ).reshape(-1, 3)
+    w = (wx[:, None] * wphi * np.ones((1, len(phis)))).reshape(-1)
+
+    Y = {l: _np_sph(l, pts) for l in range(LMAX + 1)}
+    out: List[Tuple[int, int, int, np.ndarray]] = []
+    for l1 in range(LMAX + 1):
+        for l2 in range(LMAX + 1):
+            for l3 in range(LMAX + 1):
+                if not (abs(l1 - l2) <= l3 <= l1 + l2):
+                    continue
+                K = np.einsum(
+                    "pm,pn,pk,p->mnk", Y[l1], Y[l2], Y[l3], w
+                )
+                if np.max(np.abs(K)) < 1e-9:
+                    continue
+                out.append((l1, l2, l3, (K / np.linalg.norm(K)).astype(np.float32)))
+    # parity-odd 1 ⊗ 1 → 1: the cross product, missing from Gaunt
+    eps = np.zeros((3, 3, 3), np.float32)
+    for a, b, c, s in [(0, 1, 2, 1), (1, 2, 0, 1), (2, 0, 1, 1),
+                       (1, 0, 2, -1), (2, 1, 0, -1), (0, 2, 1, -1)]:
+        eps[a, b, c] = s
+    out.append((1, 1, 1, eps / np.linalg.norm(eps)))
+    return out
+
+
+def couple(x: jnp.ndarray, y: jnp.ndarray, K: np.ndarray) -> jnp.ndarray:
+    """Channel-wise equivariant product: (…,2l1+1,C) ⊗ (…,2l2+1,C) -> (…,2l3+1,C)."""
+    return jnp.einsum("...mc,...nc,mnk->...kc", x, y, jnp.asarray(K))
+
+
+# --------------------------------------------------------------------------
+# radial basis
+# --------------------------------------------------------------------------
+
+def bessel_rbf(r: jnp.ndarray, n_rbf: int, r_cut: float) -> jnp.ndarray:
+    """Sinc-Bessel radial basis with smooth polynomial cutoff. r: (E,)."""
+    rs = jnp.maximum(r, 1e-6)[:, None]
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / r_cut) * jnp.sin(n * jnp.pi * rs / r_cut) / rs
+    u = jnp.clip(r / r_cut, 0, 1)[:, None]
+    fcut = 1 - 10 * u ** 3 + 15 * u ** 4 - 6 * u ** 5   # C² polynomial cutoff
+    return basis * fcut
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+
+def _n_paths_interaction() -> List[Tuple[int, int, int]]:
+    return [(l1, l2, l3) for (l1, l2, l3, _) in coupling_tensors()]
+
+
+def mace_init(
+    key,
+    d_in: int,
+    channels: int = 128,
+    n_layers: int = 2,
+    n_rbf: int = 8,
+    r_cut: float = 5.0,
+):
+    cts = coupling_tensors()
+    n_paths = len(cts)
+    ks = jax.random.split(key, 4 * n_layers + 2)
+    layers = []
+    for t in range(n_layers):
+        k0, k1, k2, k3 = ks[4 * t : 4 * t + 4]
+        layers.append(
+            dict(
+                radial=mlp_init(k0, (n_rbf, 64, n_paths * channels)),
+                # per-path channel mixers for the ACE products
+                w_b2=jax.random.normal(k1, (n_paths, channels)) * (channels ** -0.5),
+                w_b3=jax.random.normal(k2, (n_paths, channels)) * (channels ** -0.5),
+                # message mix (A ‖ B2 ‖ B3 -> C) and residual, per l
+                mix={
+                    l: jax.random.normal(jax.random.fold_in(k3, l), (3 * channels, channels))
+                    * ((3 * channels) ** -0.5)
+                    for l in range(LMAX + 1)
+                },
+                res={
+                    l: jax.random.normal(jax.random.fold_in(k3, 10 + l), (channels, channels))
+                    * (channels ** -0.5)
+                    for l in range(LMAX + 1)
+                },
+            )
+        )
+    return dict(
+        embed=mlp_init(ks[-2], (d_in, channels)),
+        layers=layers,
+        readout=mlp_init(ks[-1], (channels, 16, 1)),
+    )
+
+
+def _interaction(
+    layer, h: Feats, Y: Dict[int, jnp.ndarray], rbf, senders, receivers, mask, n
+) -> Feats:
+    """A-features: radial-weighted (Y ⊗ h_j) couplings, scattered to nodes."""
+    cts = coupling_tensors()
+    C = h[0].shape[-1]
+    R = mlp_apply(layer["radial"], rbf).reshape(rbf.shape[0], len(cts), C)
+    A: Feats = {}
+    w_edge = mask.astype(jnp.float32)[:, None, None]
+    for p, (l1, l2, l3, K) in enumerate(cts):
+        if l2 not in h:
+            continue
+        y_e = Y[l1][:, :, None]                        # (E, 2l1+1, 1)
+        h_e = h[l2][senders]                           # (E, 2l2+1, C)
+        m = couple(y_e * jnp.ones_like(h_e[:, :1]), h_e, K)  # (E, 2l3+1, C)
+        m = m * R[:, p][:, None, :] * w_edge
+        A[l3] = A.get(l3, 0) + jax.ops.segment_sum(m, receivers, num_segments=n)
+    return A
+
+
+def _ace_products(layer, A: Feats) -> Tuple[Feats, Feats]:
+    """Correlation-2 and -3 symmetric products of the A basis."""
+    cts = coupling_tensors()
+    B2: Feats = {}
+    for p, (l1, l2, l3, K) in enumerate(cts):
+        if l1 in A and l2 in A:
+            B2[l3] = B2.get(l3, 0) + couple(A[l1], A[l2], K) * layer["w_b2"][p]
+    B3: Feats = {}
+    for p, (l1, l2, l3, K) in enumerate(cts):
+        if l1 in B2 and l2 in A:
+            B3[l3] = B3.get(l3, 0) + couple(B2[l1], A[l2], K) * layer["w_b3"][p]
+    return B2, B3
+
+
+def mace_apply(
+    params, feats, coords, senders, receivers, mask,
+    *, n_rbf: int = 8, r_cut: float = 5.0, **_,
+):
+    """feats: (N, d_in), coords: (N, 3).  Returns (h dict, total energy).
+    n_rbf / r_cut are static (close over them or use functools.partial)."""
+    n = feats.shape[0]
+    C = params["embed"].ws[-1].shape[-1]
+    h: Feats = {0: mlp_apply(params["embed"], feats)[:, None, :]}
+
+    rel = coords[receivers] - coords[senders]
+    safe = jnp.where(mask, 1.0, 0.0)
+    r = jnp.sqrt(jnp.sum(rel * rel, axis=-1) + 1e-12)
+    unit = rel / jnp.maximum(r, 1e-6)[:, None]
+    Y = real_sph_harm(unit)
+    rbf = bessel_rbf(r, n_rbf, r_cut) * safe[:, None]
+
+    for layer in params["layers"]:
+        A = _interaction(layer, h, Y, rbf, senders, receivers, mask, n)
+        # ensure every l is present for the product basis
+        for l in range(LMAX + 1):
+            A.setdefault(l, jnp.zeros((n, 2 * l + 1, C)))
+        B2, B3 = _ace_products(layer, A)
+        h_new: Feats = {}
+        for l in range(LMAX + 1):
+            parts = jnp.concatenate(
+                [A[l], B2.get(l, jnp.zeros_like(A[l])), B3.get(l, jnp.zeros_like(A[l]))],
+                axis=-1,
+            )                                           # (N, 2l+1, 3C)
+            m = jnp.einsum("nmc,cd->nmd", parts, layer["mix"][l])
+            res = (
+                jnp.einsum("nmc,cd->nmd", h[l], layer["res"][l]) if l in h else 0
+            )
+            h_new[l] = m + res
+        h = h_new
+
+    node_energy = mlp_apply(params["readout"], h[0][:, 0, :])   # (N, 1)
+    return h, node_energy.sum()

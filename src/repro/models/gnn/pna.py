@@ -1,0 +1,71 @@
+"""PNA — Principal Neighbourhood Aggregation (Corso et al., arXiv:2004.05718).
+
+Assigned config: 4 layers, d_hidden=75, aggregators {mean, max, min, std},
+scalers {identity, amplification, attenuation}.
+
+Per layer: messages m_ij = MLP([h_i ‖ h_j]); the 4 aggregations of m over
+N(i) are scaled by the 3 degree scalers (12 concatenated views) and mixed by
+a linear layer.  δ (the average log-degree) is computed from the batch, as in
+the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import MLP, mlp_apply, mlp_init, degrees_from_edges
+
+_NEG = -1e9
+
+
+def pna_init(key, d_in: int, d_hidden: int = 75, n_layers: int = 4, n_out: int = 7):
+    ks = jax.random.split(key, 2 * n_layers + 2)
+    layers = []
+    d = d_in
+    for i in range(n_layers):
+        layers.append(
+            dict(
+                msg=mlp_init(ks[2 * i], (2 * d, d_hidden)),
+                mix=mlp_init(ks[2 * i + 1], (12 * d_hidden + d, d_hidden)),
+            )
+        )
+        d = d_hidden
+    return dict(layers=layers, head=mlp_init(ks[-1], (d_hidden, n_out)))
+
+
+def _aggregate(m, receivers, mask, n):
+    """mean/max/min/std over incoming messages; masked slots neutral."""
+    w = mask[:, None].astype(m.dtype)
+    s = jax.ops.segment_sum(m * w, receivers, num_segments=n)
+    cnt = jax.ops.segment_sum(w[:, 0], receivers, num_segments=n)
+    cnt1 = jnp.maximum(cnt, 1.0)[:, None]
+    mean = s / cnt1
+    mx = jax.ops.segment_max(jnp.where(mask[:, None], m, _NEG), receivers, num_segments=n)
+    mx = jnp.where(cnt[:, None] > 0, mx, 0.0)
+    mn = -jax.ops.segment_max(jnp.where(mask[:, None], -m, _NEG), receivers, num_segments=n)
+    mn = jnp.where(cnt[:, None] > 0, mn, 0.0)
+    sq = jax.ops.segment_sum(m * m * w, receivers, num_segments=n)
+    var = jnp.maximum(sq / cnt1 - mean * mean, 0.0)
+    std = jnp.sqrt(var + 1e-8)
+    return mean, mx, mn, std, cnt
+
+
+def pna_apply(params, h, senders, receivers, mask, **_):
+    n = h.shape[0]
+    deg = degrees_from_edges(receivers, mask, n)
+    delta = jnp.mean(jnp.log1p(deg))
+    log_deg = jnp.log1p(deg)[:, None]
+    s_amp = log_deg / jnp.maximum(delta, 1e-6)        # amplification
+    s_att = jnp.maximum(delta, 1e-6) / jnp.maximum(log_deg, 1e-6)  # attenuation
+    s_att = jnp.where(deg[:, None] > 0, s_att, 0.0)
+
+    for layer in params["layers"]:
+        pair = jnp.concatenate([h[receivers], h[senders]], axis=-1)
+        m = mlp_apply(layer["msg"], pair)
+        mean, mx, mn, std, _ = _aggregate(m, receivers, mask, n)
+        aggs = jnp.concatenate([mean, mx, mn, std], axis=-1)      # (N, 4d)
+        scaled = jnp.concatenate(
+            [aggs, aggs * s_amp, aggs * s_att], axis=-1
+        )                                                          # (N, 12d)
+        h = mlp_apply(layer["mix"], jnp.concatenate([scaled, h], axis=-1))
+    return h, mlp_apply(params["head"], h)

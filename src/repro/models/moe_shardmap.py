@@ -1,0 +1,137 @@
+"""Explicit expert-parallel MoE via shard_map — the §Perf H-B follow-up.
+
+The pjit/GSPMD formulation (models/moe.py) cannot shard a gather's indexed
+dimension, leaving an N·k·cf·D dispatch volume D-sharded only and a chain of
+gather/reshard collectives (EXPERIMENTS.md §Perf H-B).  This module is the
+explicit-communication alternative:
+
+* tokens are sharded over the data axis and REPLICATED over the expert
+  ('model') axis — which every attention/FFN activation already is in the
+  tensor-parallel layout;
+* each (data, model=j) device selects, LOCALLY, the tokens routed to its own
+  E/n_shards experts, runs the expert FFN, and contributes outputs for its
+  local token shard;
+* the ONLY collective is one `psum` of the (N_loc, D) output over the expert
+  axis per MoE layer — ≈ N_loc·D·2 bytes vs the GSPMD chain's measured
+  ~3.6 GiB/dev/layer on DeepSeek-V3 (≈ 8× reduction, EXPERIMENTS.md).
+
+Semantics: capacity is enforced PER (token-shard, expert) pair — the GShard
+convention — whereas moe_ffn ranks globally.  With non-binding capacity the
+two are numerically equal (tested on an 8-device mesh in
+tests/test_distributed.py); under pressure the shard_map version drops more
+uniformly across senders.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.lm_config import MoEConfig
+from repro.models.moe import _activation, expert_capacity, route_topk
+
+
+def _slot_assignment(experts: jnp.ndarray, E: int, C: int):
+    """Sort-based slot assignment (same algorithm as moe_ffn, local scope).
+
+    experts: (N, k) int32 -> (keep (N,k), slot (N,k), tok_for_slot (E,C),
+    slot_valid (E,C))."""
+    N, k = experts.shape
+    flat_e = experts.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=flat_e.dtype))
+    end = jnp.searchsorted(sorted_e, jnp.arange(1, E + 1, dtype=flat_e.dtype))
+    rank_sorted = jnp.arange(N * k, dtype=jnp.int32) - start[sorted_e]
+    rank = jnp.zeros((N * k,), jnp.int32).at[order].set(rank_sorted)
+    keep = (rank < C).reshape(N, k)
+    slot = jnp.clip(rank, 0, C - 1).reshape(N, k)
+    c_idx = jnp.arange(C, dtype=jnp.int32)
+    pos = start[:, None] + c_idx[None, :]
+    slot_valid = pos < jnp.minimum(end, start + C)[:, None]
+    tok_for_slot = order[jnp.clip(pos, 0, N * k - 1)] // k
+    return keep, slot, tok_for_slot, slot_valid
+
+
+def moe_ffn_shardmap(
+    params: dict,
+    x: jnp.ndarray,              # (N, D) tokens
+    cfg: MoEConfig,
+    act: str,
+    mesh: Mesh,
+    *,
+    token_axis="data",
+    expert_axis: str = "model",
+) -> jnp.ndarray:
+    """Expert-parallel MoE with explicit communication.  Returns (N, D)."""
+    E, k = cfg.n_experts, cfg.top_k
+    n_shards = mesh.shape[expert_axis]
+    assert E % n_shards == 0, "expert count must divide the expert axis"
+    E_loc = E // n_shards
+    N, D = x.shape
+    n_tok = mesh.shape[token_axis] if isinstance(token_axis, str) else 1
+    C_loc = expert_capacity(N // max(n_tok, 1), cfg)
+    has_w3 = "we3" in params
+    shared = {kk: params[kk] for kk in ("ws1", "ws2", "ws3") if kk in params}
+
+    def body(x_l, router, we1, we3, we2, ws):
+        j = jax.lax.axis_index(expert_axis)
+        w, experts, _ = route_topk(x_l @ router.astype(x_l.dtype), cfg)
+        keep, slot, tok_for_slot, slot_valid = _slot_assignment(
+            experts, E, C_loc
+        )
+        # ---- select my experts' slots, gather their tokens locally --------
+        lo = j * E_loc
+        tok_loc = jax.lax.dynamic_slice_in_dim(tok_for_slot, lo, E_loc, 0)
+        val_loc = jax.lax.dynamic_slice_in_dim(slot_valid, lo, E_loc, 0)
+        buf = x_l[tok_loc] * val_loc[..., None].astype(x_l.dtype)  # (E_loc,C,D)
+        # ---- expert FFN ----------------------------------------------------
+        h1 = jnp.einsum("ecd,edf->ecf", buf, we1.astype(x_l.dtype))
+        h3 = (jnp.einsum("ecd,edf->ecf", buf, we3.astype(x_l.dtype))
+              if has_w3 else None)
+        y_buf = jnp.einsum(
+            "ecf,efd->ecd", _activation(h1, h3, act), we2.astype(x_l.dtype)
+        )
+        # ---- combine my experts' contributions to my token shard ----------
+        out = jnp.zeros_like(x_l)
+        for kk in range(k):
+            e = experts[:, kk]
+            own = (e >= lo) & (e < lo + E_loc) & keep[:, kk]
+            y = y_buf[jnp.clip(e - lo, 0, E_loc - 1), slot[:, kk]]
+            out = out + jnp.where(own[:, None], y, 0) * w[:, kk:kk + 1].astype(
+                x_l.dtype
+            )
+        # the ONLY collective: combine expert shards' partial outputs
+        out = jax.lax.psum(out, expert_axis)
+        # shared experts run token-parallel (replicated weights)
+        if ws:
+            s1 = x_l @ ws["ws1"].astype(x_l.dtype)
+            s3 = (x_l @ ws["ws3"].astype(x_l.dtype)
+                  if act == "swiglu" and "ws3" in ws else None)
+            out = out + _activation(s1, s3, act) @ ws["ws2"].astype(x_l.dtype)
+        return out
+
+    e_spec = P(expert_axis, None, None)
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(token_axis, None),                   # tokens
+            P(),                                   # router replicated
+            e_spec,                                # we1 expert-sharded
+            e_spec if has_w3 else P(),
+            e_spec,
+            jax.tree.map(lambda _: P(), shared),   # shared experts replicated
+        ),
+        out_specs=P(token_axis, None),
+        check_vma=False,
+    )(
+        x,
+        params["router"],
+        params["we1"],
+        params["we3"] if has_w3 else jnp.zeros((), x.dtype),
+        params["we2"],
+        shared,
+    )

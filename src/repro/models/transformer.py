@@ -1,0 +1,580 @@
+"""Unified LM transformer covering all five assigned architectures.
+
+Pure-JAX (no flax): params are plain pytrees, layers are stacked on a leading
+axis and driven by `lax.scan` (keeps the HLO small enough that a 96-layer
+340B config lowers in seconds — essential for the 80-cell dry-run), with
+optional per-layer remat.
+
+Feature matrix (selected per LMConfig):
+  GQA / MHA, QKV bias, qk-norm, RoPE, sliding-window, squared-ReLU or SwiGLU,
+  MoE (top-k, shared experts, leading dense layers), MLA, MTP head,
+  chunked online-softmax attention, chunked fused cross-entropy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    apply_rope,
+    decode_attention,
+    flash_attention,
+    mla_decode_attention,
+)
+from repro.models.lm_config import LMConfig, MLAConfig, MoEConfig
+from repro.models.moe import MoEMetrics, _activation, moe_ffn
+
+Params = Dict[str, Any]
+
+
+def _shard(x: jnp.ndarray, cfg: LMConfig, *parts) -> jnp.ndarray:
+    """Activation sharding hint (no-op unless cfg.dp_axes set).  `parts`
+    uses 'dp' as a placeholder for the batch axes tuple."""
+    if cfg.dp_axes is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    resolved = tuple(cfg.dp_axes if p == "dp" else p for p in parts)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _dense(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _init_attn(key, cfg: LMConfig) -> Params:
+    D, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 12)
+    out_scale = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    p: Params = {"ln1": jnp.ones((D,), cfg.dtype)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        p.update(
+            w_dq=_dense(ks[0], (D, m.q_lora_rank), cfg.dtype),
+            q_norm=jnp.ones((m.q_lora_rank,), cfg.dtype),
+            w_uq=_dense(ks[1], (m.q_lora_rank, H * (m.d_nope + m.d_rope)), cfg.dtype),
+            w_dkv=_dense(ks[2], (D, m.kv_lora_rank + m.d_rope), cfg.dtype),
+            kv_norm=jnp.ones((m.kv_lora_rank,), cfg.dtype),
+            w_uk=_dense(ks[3], (H, m.d_nope, m.kv_lora_rank), cfg.dtype),
+            w_uv=_dense(ks[4], (H, m.kv_lora_rank, m.d_v), cfg.dtype),
+            wo=_dense(ks[5], (H * m.d_v, D), cfg.dtype, out_scale),
+        )
+        return p
+    if cfg.fuse_qkv:
+        p.update(
+            wqkv=_dense(ks[0], (D, (H + 2 * Hkv) * dh), cfg.dtype),
+            wo=_dense(ks[3], (H * dh, D), cfg.dtype, out_scale),
+        )
+    else:
+        p.update(
+            wq=_dense(ks[0], (D, H * dh), cfg.dtype),
+            wk=_dense(ks[1], (D, Hkv * dh), cfg.dtype),
+            wv=_dense(ks[2], (D, Hkv * dh), cfg.dtype),
+            wo=_dense(ks[3], (H * dh, D), cfg.dtype, out_scale),
+        )
+    if cfg.qkv_bias:
+        p.update(
+            bq=jnp.zeros((H * dh,), cfg.dtype),
+            bk=jnp.zeros((Hkv * dh,), cfg.dtype),
+            bv=jnp.zeros((Hkv * dh,), cfg.dtype),
+        )
+    if cfg.qk_norm:
+        p.update(
+            q_normh=jnp.ones((dh,), cfg.dtype), k_normh=jnp.ones((dh,), cfg.dtype)
+        )
+    return p
+
+
+def _init_dense_ffn(key, cfg: LMConfig, d_ff: int) -> Params:
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    out_scale = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    p = {
+        "ln2": jnp.ones((D,), cfg.dtype),
+        "w2": _dense(ks[1], (d_ff, D), cfg.dtype, out_scale),
+    }
+    if cfg.act == "swiglu" and cfg.fuse_gate:
+        p["w13"] = _dense(ks[0], (D, 2 * d_ff), cfg.dtype)
+    else:
+        p["w1"] = _dense(ks[0], (D, d_ff), cfg.dtype)
+        if cfg.act == "swiglu":
+            p["w3"] = _dense(ks[2], (D, d_ff), cfg.dtype)
+    return p
+
+
+def _init_moe_ffn(key, cfg: LMConfig) -> Params:
+    D, e = cfg.d_model, cfg.moe
+    ks = jax.random.split(key, 8)
+    out_scale = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    p = {
+        "ln2": jnp.ones((D,), cfg.dtype),
+        "router": _dense(ks[0], (D, e.n_experts), jnp.float32),
+        "we1": _dense(ks[1], (e.n_experts, D, e.d_expert), cfg.dtype),
+        "we2": _dense(ks[2], (e.n_experts, e.d_expert, D), cfg.dtype, out_scale),
+    }
+    if cfg.act == "swiglu":
+        p["we3"] = _dense(ks[3], (e.n_experts, D, e.d_expert), cfg.dtype)
+    if e.n_shared:
+        d_sh = e.d_expert * e.n_shared
+        p["ws1"] = _dense(ks[4], (D, d_sh), cfg.dtype)
+        p["ws2"] = _dense(ks[5], (d_sh, D), cfg.dtype, out_scale)
+        if cfg.act == "swiglu":
+            p["ws3"] = _dense(ks[6], (D, d_sh), cfg.dtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key: jax.Array, cfg: LMConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    n_moe = (cfg.n_layers - cfg.n_dense_layers) if cfg.moe else 0
+    n_dense = cfg.n_layers - n_moe
+
+    def layer(k, is_moe):
+        ka, kf = jax.random.split(k)
+        p = {"attn": _init_attn(ka, cfg)}
+        p["ffn"] = _init_moe_ffn(kf, cfg) if is_moe else _init_dense_ffn(kf, cfg, cfg.d_ff)
+        return p
+
+    params: Params = {
+        "embed": _dense(keys[0], (cfg.vocab, cfg.d_model), cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = _dense(keys[1], (cfg.d_model, cfg.vocab), cfg.dtype)
+    if n_dense:
+        params["dense_layers"] = _stack(
+            [layer(keys[2 + i], False) for i in range(n_dense)]
+        )
+    if n_moe:
+        params["moe_layers"] = _stack(
+            [layer(keys[2 + n_dense + i], True) for i in range(n_moe)]
+        )
+    if cfg.mtp:
+        km = jax.random.split(keys[-1], 3)
+        params["mtp"] = {
+            "proj": _dense(km[0], (2 * cfg.d_model, cfg.d_model), cfg.dtype),
+            "norm_h": jnp.ones((cfg.d_model,), cfg.dtype),
+            "norm_e": jnp.ones((cfg.d_model,), cfg.dtype),
+            "block": layer(km[1], False),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _attn_forward(
+    p: Params, cfg: LMConfig, x: jnp.ndarray, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Returns (residual update, kv-tensors-for-prefill)."""
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rms_norm(x, p["ln1"])
+    if cfg.mla is not None:
+        m = cfg.mla
+        cq = rms_norm(h @ p["w_dq"], p["q_norm"])
+        q = (cq @ p["w_uq"]).reshape(B, S, H, m.d_nope + m.d_rope)
+        q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope :]
+        dkv = h @ p["w_dkv"]
+        ckv = rms_norm(dkv[..., : m.kv_lora_rank], p["kv_norm"])
+        k_rope = dkv[..., m.kv_lora_rank :][:, :, None, :]       # (B,S,1,dr)
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+        k_nope = jnp.einsum("bsr,hdr->bshd", ckv, p["w_uk"])
+        v = jnp.einsum("bsr,hrv->bshv", ckv, p["w_uv"])
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.d_rope))], axis=-1
+        )
+        o = flash_attention(
+            q_full, k_full, v,
+            causal=True, window=cfg.window, chunk=cfg.attn_chunk,
+            scale=(m.d_nope + m.d_rope) ** -0.5, unroll=cfg.unroll,
+        )
+        kv = {"ckv": ckv, "krope": k_rope[:, :, 0, :]}
+        return o.reshape(B, S, H * m.d_v) @ p["wo"], kv
+
+    if cfg.fuse_qkv:
+        qkv = h @ p["wqkv"]
+        q, k, v = jnp.split(qkv, [H * dh, (H + Hkv) * dh], axis=-1)
+    else:
+        q = h @ p["wq"]
+        k = h @ p["wk"]
+        v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hkv, dh)
+    v = v.reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_normh"])
+        k = rms_norm(k, p["k_normh"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(
+        q, k, v, causal=True, window=cfg.window, chunk=cfg.attn_chunk,
+        unroll=cfg.unroll,
+    )
+    return o.reshape(B, S, H * dh) @ p["wo"], {"k": k, "v": v}
+
+
+def _ffn_forward(
+    p: Params, cfg: LMConfig, x: jnp.ndarray, is_moe: bool
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (residual update, aux loss)."""
+    B, S, D = x.shape
+    h = rms_norm(x, p["ln2"])
+    if is_moe:
+        out, metrics = moe_ffn(p, h.reshape(B * S, D), cfg.moe, cfg.act)
+        return out.reshape(B, S, D), metrics.aux_loss
+    if cfg.act == "swiglu" and cfg.fuse_gate:
+        h13 = h @ p["w13"]
+        h1, h3 = jnp.split(h13, 2, axis=-1)
+    else:
+        h1 = h @ p["w1"]
+        h3 = h @ p["w3"] if cfg.act == "swiglu" else None
+    return _activation(h1, h3, cfg.act) @ p["w2"], jnp.float32(0.0)
+
+
+def _make_layer_fn(cfg: LMConfig, is_moe: bool, collect_kv: bool = False):
+    def layer_fn(x_pos, layer_params):
+        x, positions = x_pos
+        # Megatron-style sequence parallelism on the layer boundary: the
+        # remat-saved carry is stored S-sharded over 'model' (16× less HBM);
+        # XLA inserts the all-gather before attention / reduce-scatter after.
+        if cfg.dp_axes is not None and x.shape[1] % 8 == 0:
+            x = _shard(x, cfg, "dp", "model", None)
+        upd, kv = _attn_forward(layer_params["attn"], cfg, x, positions)
+        x = x + upd
+        upd, aux = _ffn_forward(layer_params["ffn"], cfg, x, is_moe)
+        x = x + upd
+        if cfg.dp_axes is not None and x.shape[1] % 8 == 0:
+            # constrain the returned carry as well: MoE combine outputs would
+            # otherwise re-replicate S and the remat save balloons 'model'×
+            x = _shard(x, cfg, "dp", "model", None)
+        ys = (aux, kv) if collect_kv else aux
+        return (x, positions), ys
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            layer_fn = jax.checkpoint(
+                layer_fn,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        else:
+            layer_fn = jax.checkpoint(layer_fn)
+    return layer_fn
+
+
+def forward(
+    params: Params,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,                 # (B, S) int32
+    *,
+    collect_kv: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Returns (hidden (B,S,D), total aux loss, kv caches or None)."""
+    B, S = tokens.shape
+    x = _shard(params["embed"][tokens], cfg, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    aux_total = jnp.float32(0.0)
+    kvs = []
+    for name, is_moe in (("dense_layers", False), ("moe_layers", True)):
+        if name not in params:
+            continue
+        fn = _make_layer_fn(cfg, is_moe, collect_kv)
+        (x_pos, ys) = jax.lax.scan(
+            fn, (x, positions), params[name], unroll=cfg.unroll
+        )
+        x, positions = x_pos
+        if collect_kv:
+            aux, kv = ys
+            kvs.append(kv)
+        else:
+            aux = ys
+        aux_total = aux_total + jnp.sum(aux)
+    h = rms_norm(x, params["final_norm"])
+    return h, aux_total, (kvs if collect_kv else None)
+
+
+# --------------------------------------------------------------------------
+# loss (chunked fused cross-entropy — never materialise (B,S,V))
+# --------------------------------------------------------------------------
+
+def _head_weight(params: Params) -> jnp.ndarray:
+    return params["head"] if "head" in params else params["embed"].T
+
+
+def chunked_xent(
+    h: jnp.ndarray,            # (B, S, D)
+    head: jnp.ndarray,         # (D, V)
+    targets: jnp.ndarray,      # (B, S) int32; -1 = ignore
+    chunk: int,
+    cfg: Optional[LMConfig] = None,
+) -> jnp.ndarray:
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:  # ragged (e.g. MTP's S−1): pad with ignored targets
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+        S += pad
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, D).swapaxes(0, 1)      # (n, B, chunk, D)
+    tc = targets.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        hx, tx = xs
+        logits = (hx @ head).astype(jnp.float32)       # (B, chunk, V)
+        if cfg is not None:
+            # keep logits vocab-sharded: logsumexp partial-reduces per shard
+            logits = _shard(logits, cfg, "dp", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(tx, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = tx >= 0
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        return (tot + nll.sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.int32(0)), (hc, tc),
+        unroll=(cfg.unroll if cfg is not None else False),
+    )
+    return tot / jnp.maximum(cnt, 1)
+
+
+def mtp_loss(
+    params: Params, cfg: LMConfig, h: jnp.ndarray, tokens: jnp.ndarray
+) -> jnp.ndarray:
+    """DeepSeek-V3 multi-token prediction (depth 1): position t predicts t+2."""
+    p = params["mtp"]
+    B, S, D = h.shape
+    e_next = params["embed"][tokens[:, 1:]]            # (B, S-1, D)
+    m = jnp.concatenate(
+        [rms_norm(h[:, :-1], p["norm_h"]), rms_norm(e_next, p["norm_e"])], axis=-1
+    ) @ p["proj"]                                      # (B, S-1, D)
+    positions = jnp.broadcast_to(
+        jnp.arange(S - 1, dtype=jnp.int32), (B, S - 1)
+    )
+    upd, _ = _attn_forward(p["block"]["attn"], cfg, m, positions)
+    m = m + upd
+    upd, _ = _ffn_forward(p["block"]["ffn"], cfg, m, False)
+    m = m + upd
+    m = rms_norm(m, params["final_norm"])
+    # position i of m sees tokens ≤ i and embed of token i+1 → predicts i+2
+    targets = jnp.pad(
+        tokens[:, 2:], ((0, 0), (0, 1)), constant_values=-1
+    )                                                  # (B, S-1)
+    return chunked_xent(m, _head_weight(params), targets, cfg.loss_chunk, cfg)
+
+
+def lm_loss(
+    params: Params, cfg: LMConfig, tokens: jnp.ndarray, targets: jnp.ndarray,
+    *, aux_weight: float = 0.01, mtp_weight: float = 0.3,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    h, aux, _ = forward(params, cfg, tokens)
+    loss = chunked_xent(h, _head_weight(params), targets, cfg.loss_chunk, cfg)
+    metrics = {"xent": loss, "aux": aux}
+    total = loss + aux_weight * aux
+    if cfg.mtp:
+        lm = mtp_loss(params, cfg, h, tokens)
+        metrics["mtp"] = lm
+        total = total + mtp_weight * lm
+    return total, metrics
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step) — one token against a cache
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DecodeCache:
+    """Per-layer stacked KV cache.  GQA: k/v (L,B,C,Hkv,dh); MLA: ckv
+    (L,B,C,r) + krope (L,B,C,dr).  `pos` is the absolute decode position;
+    windowed archs use a ring buffer of C=min(window, max_len) slots."""
+    data: Dict[str, jnp.ndarray]
+    pos: jnp.ndarray            # () int32
+    length: int = dataclasses.field(metadata=dict(static=True))  # ring size
+
+
+def init_decode_cache(cfg: LMConfig, batch: int, max_len: int) -> DecodeCache:
+    C = min(cfg.window, max_len) if cfg.window else max_len
+    L = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        data = {
+            "ckv": jnp.zeros((L, batch, C, m.kv_lora_rank), cfg.dtype),
+            "krope": jnp.zeros((L, batch, C, m.d_rope), cfg.dtype),
+        }
+    else:
+        data = {
+            "k": jnp.zeros((L, batch, C, cfg.n_kv_heads, cfg.d_head), cfg.dtype),
+            "v": jnp.zeros((L, batch, C, cfg.n_kv_heads, cfg.d_head), cfg.dtype),
+        }
+    return DecodeCache(data=data, pos=jnp.int32(0), length=C)
+
+
+def _decode_attn(
+    p: Params, cfg: LMConfig, x: jnp.ndarray, cache_l: Dict, pos: jnp.ndarray,
+    ring: int,
+) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, D) single token.  Returns (residual update, updated layer cache)."""
+    B, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rms_norm(x, p["ln1"])
+    idx = pos % ring                       # ring slot for this absolute position
+    pos1 = pos[None]                       # (1,) — rope positions for new token
+    # valid slots: everything already written, including the one written now
+    valid = jnp.broadcast_to(
+        jnp.arange(ring) <= jnp.minimum(pos, ring - 1), (B, ring)
+    )
+
+    if cfg.mla is not None:
+        m = cfg.mla
+        cq = rms_norm(h @ p["w_dq"], p["q_norm"])
+        q = (cq @ p["w_uq"]).reshape(B, H, m.d_nope + m.d_rope)
+        q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope :]
+        dkv = h @ p["w_dkv"]
+        ckv = rms_norm(dkv[..., : m.kv_lora_rank], p["kv_norm"])
+        k_rope = dkv[..., m.kv_lora_rank :]
+        q_rope = apply_rope(q_rope[:, None], pos1[None, :], cfg.rope_theta)[:, 0]
+        k_rope = apply_rope(
+            k_rope[:, None, None, :], pos1[None, :], cfg.rope_theta
+        )[:, 0, 0]
+        ckv_c = jax.lax.dynamic_update_index_in_dim(cache_l["ckv"], ckv, idx, 1)
+        kr_c = jax.lax.dynamic_update_index_in_dim(cache_l["krope"], k_rope, idx, 1)
+        o = mla_decode_attention(
+            q_nope, q_rope, ckv_c, kr_c, valid, p["w_uk"], p["w_uv"],
+            scale=(m.d_nope + m.d_rope) ** -0.5,
+        )
+        return o.reshape(B, H * m.d_v) @ p["wo"], {"ckv": ckv_c, "krope": kr_c}
+
+    if cfg.fuse_qkv:
+        qkv = h @ p["wqkv"]
+        q, k, v = jnp.split(qkv, [H * dh, (H + Hkv) * dh], axis=-1)
+    else:
+        q = h @ p["wq"]
+        k = h @ p["wk"]
+        v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, H, dh)
+    k = k.reshape(B, Hkv, dh)
+    v = v.reshape(B, Hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_normh"])
+        k = rms_norm(k, p["k_normh"])
+    q = apply_rope(q[:, None], pos1[None, :], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos1[None, :], cfg.rope_theta)[:, 0]
+    k_c = jax.lax.dynamic_update_index_in_dim(cache_l["k"], k, idx, 1)
+    v_c = jax.lax.dynamic_update_index_in_dim(cache_l["v"], v, idx, 1)
+    o = decode_attention(q, k_c, v_c, valid)
+    return o.reshape(B, H * dh) @ p["wo"], {"k": k_c, "v": v_c}
+
+
+def decode_step(
+    params: Params, cfg: LMConfig, cache: DecodeCache, tokens: jnp.ndarray
+) -> Tuple[jnp.ndarray, DecodeCache]:
+    """One decode step: tokens (B,) -> (logits (B,V), updated cache)."""
+    x = params["embed"][tokens]
+    pos = cache.pos
+    layer_stacks = []
+    for name, is_moe in (("dense_layers", False), ("moe_layers", True)):
+        if name not in params:
+            continue
+        layer_stacks.append((name, is_moe, params[name]))
+
+    # split the stacked cache between the (dense, moe) stacks
+    offsets = []
+    off = 0
+    for name, is_moe, stack in layer_stacks:
+        L_stack = jax.tree.leaves(stack)[0].shape[0]
+        offsets.append((off, L_stack))
+        off += L_stack
+
+    new_cache_parts = {k: [] for k in cache.data}
+    for (name, is_moe, stack), (off, L_stack) in zip(layer_stacks, offsets):
+        cache_slice = {
+            k: v[off : off + L_stack] for k, v in cache.data.items()
+        }
+
+        def layer_fn(x_, xs, _is_moe=is_moe):
+            layer_params, cache_l = xs
+            upd, new_cache_l = _decode_attn(
+                layer_params["attn"], cfg, x_, cache_l, pos, cache.length
+            )
+            x_ = x_ + upd
+            h = rms_norm(x_, layer_params["ffn"]["ln2"])
+            if _is_moe:
+                out, _ = moe_ffn(
+                    layer_params["ffn"], h, cfg.moe, cfg.act
+                )
+            else:
+                if cfg.act == "swiglu" and cfg.fuse_gate:
+                    h13 = h @ layer_params["ffn"]["w13"]
+                    h1, h3 = jnp.split(h13, 2, axis=-1)
+                else:
+                    h1 = h @ layer_params["ffn"]["w1"]
+                    h3 = (h @ layer_params["ffn"]["w3"]
+                          if cfg.act == "swiglu" else None)
+                out = _activation(h1, h3, cfg.act) @ layer_params["ffn"]["w2"]
+            return x_ + out, new_cache_l
+
+        x, updated = jax.lax.scan(
+            layer_fn, x, (stack, cache_slice), unroll=cfg.unroll
+        )
+        for k_name in new_cache_parts:
+            new_cache_parts[k_name].append(updated[k_name])
+
+    data = {
+        k: jnp.concatenate(v, axis=0) if len(v) > 1 else v[0]
+        for k, v in new_cache_parts.items()
+    }
+    h = rms_norm(x, params["final_norm"])
+    logits = (h @ _head_weight(params)).astype(jnp.float32)
+    return logits, DecodeCache(data=data, pos=pos + 1, length=cache.length)
+
+
+def prefill(
+    params: Params, cfg: LMConfig, tokens: jnp.ndarray, max_len: int
+) -> Tuple[jnp.ndarray, DecodeCache]:
+    """Prefill S tokens, build the decode cache.  Returns (last logits, cache)."""
+    B, S = tokens.shape
+    h, _, kvs = forward(params, cfg, tokens, collect_kv=True)
+    cache = init_decode_cache(cfg, B, max_len)
+    C = cache.length
+    take = min(S, C)
+    # ring slot for absolute position p is p % C — keep prefill and decode
+    # consistent so the first decode step (pos=S) lands in slot S % C.
+    slots = (jnp.arange(S - take, S) % C).astype(jnp.int32)
+    data = {}
+    # kv tensors come back (L_stack, B, S, ...) per stack; concat stacks
+    for k_name in cache.data:
+        parts = [kv[k_name] for kv in kvs]
+        full = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+        sl = full[:, :, S - take :]
+        buf = cache.data[k_name]
+        data[k_name] = buf.at[:, :, slots].set(sl.astype(buf.dtype))
+    logits = (h[:, -1] @ _head_weight(params)).astype(jnp.float32)
+    return logits, DecodeCache(data=data, pos=jnp.int32(S), length=C)

@@ -1,0 +1,23 @@
+from repro.train.optimizer import (
+    AdamWState,
+    OptConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    schedule,
+    zero1_specs,
+)
+from repro.train.train_loop import LoopConfig, TrainLoop
+from repro.train import checkpoint
+from repro.train.compression import (
+    compress_tree,
+    decompress_tree,
+    compress_with_error_feedback,
+    ef_init,
+)
+
+__all__ = [
+    "AdamWState", "OptConfig", "adamw_init", "adamw_update", "global_norm",
+    "schedule", "zero1_specs", "LoopConfig", "TrainLoop", "checkpoint",
+    "compress_tree", "decompress_tree", "compress_with_error_feedback", "ef_init",
+]

@@ -1,0 +1,78 @@
+"""Gradient compression for the DP all-reduce: top-k + error feedback.
+
+At 1000+-node scale the data-parallel gradient all-reduce is the dominant
+inter-pod collective; top-k sparsification with error feedback (Stich et al.,
+'18; Lin et al., Deep Gradient Compression '17) cuts its bytes by 10–100×
+with negligible quality loss.  The compressor is a pure pytree transform, so
+it slots between `jax.grad` and the optimizer in the train step:
+
+    comp, ef = compress_tree(grads + ef_residual, ratio)
+    grads'   = decompress_tree(comp)          # what actually gets all-reduced
+    ef'      = (grads + ef_residual) - grads' # stays local
+
+The all-reduce itself is whatever the surrounding pjit does — compression
+changes *what* is reduced (a sparse tree), not *how*.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedLeaf(NamedTuple):
+    values: jnp.ndarray    # (k,) kept magnitudes
+    indices: jnp.ndarray   # (k,) int32 flat positions
+    size: int              # original flat size (static)
+
+
+def compress_leaf(g: jnp.ndarray, ratio: float) -> CompressedLeaf:
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return CompressedLeaf(values=flat[idx], indices=idx.astype(jnp.int32), size=flat.size)
+
+
+def decompress_leaf(c: CompressedLeaf, shape) -> jnp.ndarray:
+    return (
+        jnp.zeros((c.size,), jnp.float32).at[c.indices].set(c.values).reshape(shape)
+    )
+
+
+def compress_tree(grads: Any, ratio: float) -> Any:
+    return jax.tree.map(lambda g: compress_leaf(g, ratio), grads)
+
+
+def decompress_tree(comp: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda c, g: decompress_leaf(c, g.shape).astype(g.dtype),
+        comp,
+        like,
+        is_leaf=lambda x: isinstance(x, CompressedLeaf),
+    )
+
+
+def ef_init(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress_with_error_feedback(
+    grads: Any, ef: Any, ratio: float
+) -> Tuple[Any, Any]:
+    """Returns (dense decompressed grads to reduce/apply, new EF residual)."""
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, ef)
+    comp = compress_tree(corrected, ratio)
+    dense = decompress_tree(comp, corrected)
+    new_ef = jax.tree.map(lambda c, d: c - d, corrected, dense)
+    applied = jax.tree.map(lambda d, g: d.astype(g.dtype), dense, grads)
+    return applied, new_ef
+
+
+def compressed_bytes(comp: Any) -> int:
+    """Wire bytes of a compressed tree (values f32 + indices i32)."""
+    total = 0
+    for leaf in jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, CompressedLeaf)):
+        if isinstance(leaf, CompressedLeaf):
+            total += leaf.values.size * 4 + leaf.indices.size * 4
+    return total

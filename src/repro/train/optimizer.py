@@ -1,0 +1,131 @@
+"""AdamW with global-norm clipping, warmup+cosine schedule, ZeRO-1 layout.
+
+Plain-pytree implementation (no optax dependency).  Moments are f32
+regardless of param dtype (bf16 training keeps f32 optimizer state — the
+standard mixed-precision recipe).  `zero1_specs` extends any param
+PartitionSpec tree with a 'data'-axis shard on the largest divisible axis,
+which is exactly the ZeRO-1 optimizer-state partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(t, 0, 1)))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, 0.1 + 0.9 * cos)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    cfg: OptConfig, grads, state: AdamWState, params
+):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    # flatten explicitly: trees may legitimately contain tuple-typed leaves'
+    # containers (e.g. MLP NamedTuples), so tuple-is_leaf tricks are unsafe
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    m_leaves = jax.tree_util.tree_leaves(state.m)
+    v_leaves = jax.tree_util.tree_leaves(state.v)
+    p_leaves = jax.tree_util.tree_leaves(params)
+    triples = [upd(g, m, v, p) for g, m, v, p in
+               zip(g_leaves, m_leaves, v_leaves, p_leaves)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in triples])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in triples])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in triples])
+    return (
+        new_params,
+        AdamWState(step=step, m=new_m, v=new_v),
+        {"grad_norm": gnorm, "lr": lr},
+    )
+
+
+def zero1_specs(param_specs, params, mesh_axis: str = "data", mesh_size: int = 1):
+    """ZeRO-1: shard optimizer moments over `mesh_axis` on the largest
+    param axis that is divisible and not already sharded."""
+
+    def extend(spec, p):
+        parts = list(spec) if spec is not None else [None] * p.ndim
+        while len(parts) < p.ndim:
+            parts.append(None)
+        # an axis name may appear at most once per spec (FSDP'd params
+        # already consume the data axes)
+        names = set(mesh_axis) if isinstance(mesh_axis, tuple) else {mesh_axis}
+        used = set()
+        for q in parts:
+            if q is None:
+                continue
+            used |= set(q) if isinstance(q, tuple) else {q}
+        if used & names:
+            return P(*parts)
+        order = sorted(range(p.ndim), key=lambda i: -p.shape[i])
+        for i in order:
+            if parts[i] is None and p.shape[i] % max(mesh_size, 1) == 0 and mesh_size > 1:
+                parts[i] = mesh_axis
+                break
+        return P(*parts)
+
+    return jax.tree.map(
+        extend, param_specs, params, is_leaf=lambda x: isinstance(x, P) or x is None
+    )

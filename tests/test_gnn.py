@@ -1,0 +1,151 @@
+"""GNN family: smoke per arch, equivariance properties, backend agreement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+from scipy.spatial.transform import Rotation
+
+from repro.configs import REGISTRY
+from repro.graphs.generators import erdos_renyi
+
+GNN_ARCHS = [a for a, d in REGISTRY.items() if d.family == "gnn"]
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_arch_smoke(arch):
+    REGISTRY[arch].smoke()
+
+
+def _graph(n=100, deg=6.0, seed=0):
+    g = erdos_renyi(n, avg_deg=deg, seed=seed)
+    s = jnp.where(g.edge_mask, g.senders, 0)
+    r = jnp.where(g.edge_mask, g.receivers, 0)
+    return g, s, r, g.edge_mask
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_egnn_equivariance(seed):
+    from repro.models.gnn.egnn import egnn_apply, egnn_init
+
+    g, s, r, m = _graph(seed=seed)
+    feats = jax.random.normal(jax.random.key(seed), (g.n_nodes, 8))
+    coords = jax.random.normal(jax.random.key(seed + 10), (g.n_nodes, 3))
+    params = egnn_init(jax.random.key(seed + 20), 8)
+    R = jnp.asarray(Rotation.random(random_state=seed).as_matrix(), jnp.float32)
+    t = jnp.asarray([1.0, -2.0, 0.5])
+
+    h1, x1, e1 = egnn_apply(params, feats, coords, s, r, m)
+    h2, x2, e2 = egnn_apply(params, feats, coords @ R.T + t, s, r, m)
+    # untrained 4-layer MLP stacks amplify features to ~1e5, so equivariance
+    # holds to f32 roundoff RELATIVE TO SCALE — compare scale-normalised.
+    assert_allclose(float(e1), float(e2), rtol=1e-4)                # E(n)-invariant energy
+    scale = np.abs(np.asarray(h1)).max()
+    assert_allclose(np.asarray(h1) / scale, np.asarray(h2) / scale, atol=1e-4)
+    assert_allclose(np.asarray(x1 @ R.T + t), np.asarray(x2), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_mace_invariance_and_l1_equivariance(seed):
+    from repro.models.gnn.mace import mace_apply, mace_init
+
+    g, s, r, m = _graph(n=60, seed=seed)
+    feats = jax.random.normal(jax.random.key(seed), (g.n_nodes, 8))
+    coords = jax.random.normal(jax.random.key(seed + 1), (g.n_nodes, 3)) * 0.8
+    params = mace_init(jax.random.key(seed + 2), 8, channels=16)
+    R = jnp.asarray(Rotation.random(random_state=seed).as_matrix(), jnp.float32)
+
+    h1, e1 = mace_apply(params, feats, coords, s, r, m)
+    h2, e2 = mace_apply(params, feats, coords @ R.T + 3.0, s, r, m)
+    assert_allclose(float(e1), float(e2), rtol=1e-4)                 # E(3)-invariant
+    # l=0 features invariant
+    assert_allclose(np.asarray(h1[0]), np.asarray(h2[0]), rtol=1e-3, atol=1e-4)
+    # l=1 features rotate with R in the (y,z,x) real-SH basis
+    P = jnp.zeros((3, 3)).at[0, 1].set(1).at[1, 2].set(1).at[2, 0].set(1)
+    R_sh = P @ R @ P.T
+    rotated = jnp.einsum("ij,njc->nic", R_sh, h1[1])
+    assert_allclose(np.asarray(rotated), np.asarray(h2[1]), rtol=1e-3, atol=1e-3)
+
+
+def test_mace_gaunt_tensors_are_equivariant():
+    """∫YYY quadrature must produce genuinely equivariant couplings."""
+    from repro.models.gnn.mace import coupling_tensors, real_sph_harm
+
+    rng = np.random.default_rng(0)
+    v1 = rng.standard_normal(3)
+    v2 = rng.standard_normal(3)
+    v1 /= np.linalg.norm(v1)
+    v2 /= np.linalg.norm(v2)
+    R = Rotation.random(random_state=1).as_matrix()
+    Y1 = real_sph_harm(jnp.asarray(v1[None]))
+    Y2 = real_sph_harm(jnp.asarray(v2[None]))
+    Y1r = real_sph_harm(jnp.asarray((R @ v1)[None]))
+    Y2r = real_sph_harm(jnp.asarray((R @ v2)[None]))
+    for l1, l2, l3, K in coupling_tensors():
+        a = np.einsum("m,n,mnk->k", np.asarray(Y1[l1])[0], np.asarray(Y2[l2])[0], K)
+        b = np.einsum("m,n,mnk->k", np.asarray(Y1r[l1])[0], np.asarray(Y2r[l2])[0], K)
+        # invariant norm: |couple(x,y)| is rotation-invariant
+        assert_allclose(np.linalg.norm(a), np.linalg.norm(b), rtol=1e-4,
+                        err_msg=f"coupling ({l1},{l2},{l3}) not equivariant")
+
+
+def test_gin_tiled_backend_matches_segment():
+    """The paper's BSR SpMM backend must agree with the segment path."""
+    from repro.core.tiling import build_block_tiles
+    from repro.models.gnn.gin import gin_apply, gin_init
+
+    g, s, r, m = _graph(n=150, deg=8.0, seed=5)
+    tiled = build_block_tiles(g, tile_size=32)
+    feats = jax.random.normal(jax.random.key(0), (g.n_nodes, 8))
+    params = gin_init(jax.random.key(1), 8, n_out=4)
+    h_seg, out_seg = gin_apply(params, feats, s, r, m, backend="segment")
+    h_til, out_til = gin_apply(params, feats, s, r, m, tiled=tiled, backend="tiled")
+    scale = np.abs(np.asarray(h_seg)).max()   # untrained stacks reach ~1e5
+    assert_allclose(np.asarray(h_seg) / scale, np.asarray(h_til) / scale, atol=1e-5)
+
+
+def test_pna_aggregators():
+    """Hand-check PNA's masked mean/max/min/std on a tiny star graph."""
+    from repro.models.gnn.pna import _aggregate
+
+    # edges: 0->2, 1->2 with messages [1, 3]
+    m = jnp.asarray([[1.0], [3.0]])
+    recv = jnp.asarray([2, 2])
+    mask = jnp.asarray([True, True])
+    mean, mx, mn, std, cnt = _aggregate(m, recv, mask, 3)
+    assert_allclose(float(mean[2, 0]), 2.0)
+    assert_allclose(float(mx[2, 0]), 3.0)
+    assert_allclose(float(mn[2, 0]), 1.0)
+    assert_allclose(float(std[2, 0]), 1.0, rtol=1e-3)
+    assert float(cnt[0]) == 0.0 and float(mx[0, 0]) == 0.0  # isolated node neutral
+
+
+def test_neighbor_sampler():
+    from repro.graphs.sampler import NeighborSampler, tree_edges
+
+    g, *_ = _graph(n=200, deg=5.0, seed=7)
+    sampler = NeighborSampler(g, fanout=(5, 3))
+    seeds = jnp.arange(8, dtype=jnp.int32)
+    sub = sampler.sample(jax.random.key(0), seeds)
+    assert sub.layers[1].shape == (8, 5)
+    assert sub.layers[2].shape == (8, 5, 3)
+    # sampled neighbours must be real neighbours
+    import numpy as np
+    from repro.graphs.graph import build_csr
+
+    indptr, indices = build_csr(g)
+    l1 = np.asarray(sub.layers[1])
+    m1 = np.asarray(sub.masks[1])
+    for i, seed in enumerate(np.asarray(seeds)):
+        nbrs = set(indices[indptr[seed] : indptr[seed + 1]].tolist())
+        for j in range(5):
+            if m1[i, j]:
+                assert l1[i, j] in nbrs
+    # deterministic given key
+    sub2 = sampler.sample(jax.random.key(0), seeds)
+    assert bool(jnp.all(sub.layers[2] == sub2.layers[2]))
+    # tree flattening is consistent
+    ids, nmask, snd, rcv, emask = tree_edges(sub)
+    assert ids.shape[0] == 8 + 8 * 5 + 8 * 5 * 3
+    assert snd.shape == rcv.shape == emask.shape
+    assert int(rcv.max()) < 8 + 8 * 5

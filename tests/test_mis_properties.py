@@ -1,0 +1,138 @@
+"""Property-based MIS correctness: every algorithm × heuristic must produce
+a set that is (a) independent and (b) maximal, on arbitrary graphs — checked
+both by our validators and against networkx ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import networkx as nx
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TCMISConfig,
+    build_block_tiles,
+    cardinality,
+    ecl_mis,
+    is_independent,
+    is_maximal,
+    luby_mis,
+    tc_mis,
+)
+from repro.graphs.graph import from_edges, to_networkx
+
+
+def _random_graph(n, density, seed):
+    rng = np.random.default_rng(seed)
+    m = int(density * n * (n - 1) / 2)
+    src = rng.integers(0, n, max(m, 1))
+    dst = rng.integers(0, n, max(m, 1))
+    return from_edges(src, dst, n)
+
+
+def _assert_valid(g, in_mis):
+    assert is_independent(g, in_mis), "adjacent vertices both selected"
+    assert is_maximal(g, in_mis), "an unselected vertex has no selected neighbour"
+    # cross-check against networkx on the same graph
+    G = to_networkx(g)
+    sel = set(np.flatnonzero(np.asarray(in_mis)).tolist())
+    for u, v in G.edges():
+        assert not (u in sel and v in sel)
+    for v in G.nodes():
+        if v not in sel:
+            assert any(u in sel for u in G.neighbors(v)), f"{v} uncovered"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(5, 120),
+    density=st.floats(0.01, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_luby_property(n, density, seed):
+    g = _random_graph(n, density, seed)
+    res = luby_mis(g, jax.random.key(seed))
+    assert bool(res.converged)
+    _assert_valid(g, res.in_mis)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(5, 120),
+    density=st.floats(0.01, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ecl_property(n, density, seed):
+    g = _random_graph(n, density, seed)
+    res = ecl_mis(g, jax.random.key(seed))
+    assert bool(res.converged)
+    _assert_valid(g, res.in_mis)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(5, 100),
+    density=st.floats(0.01, 0.4),
+    seed=st.integers(0, 2**31 - 1),
+    heuristic=st.sampled_from(["h1", "h2", "h3", "ecl"]),
+    tile=st.sampled_from([16, 32]),
+    phase1=st.sampled_from(["segment", "tiled"]),
+)
+def test_tcmis_property(n, density, seed, heuristic, tile, phase1):
+    g = _random_graph(n, density, seed)
+    tiled = build_block_tiles(g, tile_size=tile)
+    res = tc_mis(
+        g, tiled, jax.random.key(seed),
+        TCMISConfig(heuristic=heuristic, phase1=phase1),
+    )
+    assert bool(res.converged)
+    _assert_valid(g, res.in_mis)
+
+
+def test_tc_equals_ecl_bitwise():
+    """Same priorities ⇒ TC-MIS and ECL-MIS must agree bit-for-bit."""
+    for seed in range(5):
+        g = _random_graph(300, 0.05, seed)
+        tiled = build_block_tiles(g, tile_size=32)
+        key = jax.random.key(seed)
+        r_ecl = ecl_mis(g, key)
+        r_tc = tc_mis(g, tiled, key, TCMISConfig(heuristic="ecl"))
+        assert bool(jnp.all(r_ecl.in_mis == r_tc.in_mis))
+
+
+def test_pallas_backend_equals_ref():
+    for seed in range(3):
+        g = _random_graph(200, 0.08, seed)
+        tiled = build_block_tiles(g, tile_size=32)
+        key = jax.random.key(seed)
+        r_ref = tc_mis(g, tiled, key, TCMISConfig(heuristic="h3", backend="ref", phase1="tiled"))
+        r_pal = tc_mis(g, tiled, key, TCMISConfig(heuristic="h3", backend="pallas", phase1="tiled"))
+        assert bool(jnp.all(r_ref.in_mis == r_pal.in_mis))
+
+
+def test_quality_ordering_matches_paper():
+    """Fig. 3: H1 clearly below degree-aware heuristics; H3 ≈ ECL."""
+    from repro.graphs.generators import powerlaw
+
+    g = powerlaw(3000, avg_deg=6.0, seed=0)
+    tiled = build_block_tiles(g, tile_size=64)
+    cards = {}
+    for h in ["h1", "h2", "h3", "ecl"]:
+        res = tc_mis(g, tiled, jax.random.key(0), TCMISConfig(heuristic=h))
+        cards[h] = cardinality(res.in_mis)
+    assert cards["h1"] < cards["h3"], cards
+    assert abs(cards["h3"] - cards["ecl"]) / cards["ecl"] < 0.05, cards
+
+
+def test_empty_and_complete_graphs():
+    # empty graph: MIS = all vertices
+    g = from_edges(np.array([], np.int64), np.array([], np.int64), 10)
+    res = luby_mis(g, jax.random.key(0))
+    assert cardinality(res.in_mis) == 10
+    # complete graph: MIS = exactly one vertex
+    n = 12
+    src, dst = np.triu_indices(n, 1)
+    g = from_edges(src, dst, n)
+    tiled = build_block_tiles(g, tile_size=16)
+    res = tc_mis(g, tiled, jax.random.key(0), TCMISConfig(heuristic="h3"))
+    assert cardinality(res.in_mis) == 1
+    assert is_maximal(g, res.in_mis)

@@ -1,0 +1,164 @@
+"""LM model family: per-arch smoke + decode/forward consistency.
+
+The decode-consistency test is the serving-correctness keystone: logits from
+prefill+step-by-step decode (ring caches, MLA latent absorption) must match
+the full forward pass position-for-position.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.configs import REGISTRY
+from repro.models import transformer as tf
+
+LM_ARCHS = [a for a, d in REGISTRY.items() if d.family == "lm"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_arch_smoke(arch):
+    REGISTRY[arch].smoke()
+
+
+def _smoke_cfg(arch):
+    import importlib
+
+    mod = {
+        "qwen1.5-0.5b": "repro.configs.qwen15_0_5b",
+        "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+        "nemotron-4-340b": "repro.configs.nemotron4_340b",
+        "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+        "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    }[arch]
+    return importlib.import_module(mod).SMOKE
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the forward logits."""
+    cfg = _smoke_cfg(arch)
+    # MoE decode vs batch forward can differ via capacity drops; widen capacity
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    B, S, k = 2, 24, 4
+    params = tf.init_lm(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab, jnp.int32)
+
+    h, _, _ = tf.forward(params, cfg, tokens)
+    full_logits = (h @ (params["head"] if "head" in params else params["embed"].T)
+                   ).astype(jnp.float32)
+
+    logits, cache = tf.prefill(params, cfg, tokens[:, : S - k], max_len=S + 1)
+    assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, S - k - 1]),
+        rtol=2e-3, atol=2e-3,
+    )
+    for i in range(S - k, S):
+        logits, cache = tf.decode_step(params, cfg, cache, tokens[:, i])
+        window_ok = cfg.window is None or cache.length >= i + 1
+        if window_ok:
+            assert_allclose(
+                np.asarray(logits), np.asarray(full_logits[:, i]),
+                rtol=2e-3, atol=2e-3,
+                err_msg=f"{arch}: decode diverges at position {i}",
+            )
+
+
+def test_swa_ring_buffer_consistency():
+    """Windowed decode with a ring cache must equal full-cache windowed attn."""
+    from repro.models.lm_config import LMConfig
+
+    cfg = LMConfig(
+        name="swa-test", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_head=16, d_ff=128, vocab=64, window=8, dtype=jnp.float32,
+        attn_chunk=8, loss_chunk=8,
+    )
+    B, S = 1, 32
+    params = tf.init_lm(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab, jnp.int32)
+    h, _, _ = tf.forward(params, cfg, tokens)
+    full_logits = (h @ params["head"]).astype(jnp.float32)
+
+    # decode from scratch (prefill only 1 token) — ring must roll many times
+    logits, cache = tf.prefill(params, cfg, tokens[:, :1], max_len=S)
+    assert cache.length == cfg.window
+    for i in range(1, S):
+        logits, cache = tf.decode_step(params, cfg, cache, tokens[:, i])
+        assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, i]),
+            rtol=2e-3, atol=2e-3, err_msg=f"ring decode diverges at {i}",
+        )
+
+
+def test_flash_attention_vs_naive():
+    from repro.models.attention import flash_attention
+
+    B, S, H, Hkv, d = 2, 64, 8, 4, 32
+    q = jax.random.normal(jax.random.key(0), (B, S, H, d))
+    k = jax.random.normal(jax.random.key(1), (B, S, Hkv, d))
+    v = jax.random.normal(jax.random.key(2), (B, S, Hkv, d))
+    for window in [None, 16]:
+        out = flash_attention(q, k, v, causal=True, window=window, chunk=16)
+        # naive reference
+        kr = jnp.repeat(k, H // Hkv, axis=2)
+        vr = jnp.repeat(v, H // Hkv, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * d ** -0.5
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        if window:
+            mask &= (jnp.arange(S)[:, None] - jnp.arange(S)[None, :]) < window
+        s = jnp.where(mask[None, None], s, -1e30)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vr)
+        assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_ragged_seq():
+    """S not divisible by chunk (the MTP S−1 case)."""
+    from repro.models.attention import flash_attention
+
+    B, S, H, d = 1, 37, 2, 16
+    q = jax.random.normal(jax.random.key(0), (B, S, H, d))
+    k = jax.random.normal(jax.random.key(1), (B, S, H, d))
+    v = jax.random.normal(jax.random.key(2), (B, S, H, d))
+    out = flash_attention(q, k, v, causal=True, chunk=16)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * d ** -0.5
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_counted():
+    from repro.models.lm_config import MoEConfig
+    from repro.models.moe import moe_ffn, expert_capacity
+    import jax
+
+    cfg = MoEConfig(n_experts=4, top_k=2, d_expert=32, capacity_factor=0.5)
+    N, D = 64, 16
+    params = {
+        "router": jax.random.normal(jax.random.key(0), (D, 4)),
+        "we1": jax.random.normal(jax.random.key(1), (4, D, 32)) * 0.1,
+        "we3": jax.random.normal(jax.random.key(2), (4, D, 32)) * 0.1,
+        "we2": jax.random.normal(jax.random.key(3), (4, 32, D)) * 0.1,
+    }
+    x = jax.random.normal(jax.random.key(4), (N, D))
+    out, metrics = moe_ffn(params, x, cfg, "swiglu")
+    assert out.shape == (N, D)
+    assert float(metrics.drop_frac) > 0.0, "cf=0.5 must drop tokens"
+    assert float(metrics.aux_loss) > 0.0
+
+
+def test_unroll_invariance():
+    """unroll=True must not change numerics (dry-run cost pass soundness)."""
+    cfg = _smoke_cfg("qwen3-0.6b")
+    cfg_u = dataclasses.replace(cfg, unroll=True)
+    params = tf.init_lm(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab, jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+    l1, _ = tf.lm_loss(params, cfg, tokens, targets)
+    l2, _ = tf.lm_loss(params, cfg_u, tokens, targets)
+    assert_allclose(float(l1), float(l2), rtol=1e-6)

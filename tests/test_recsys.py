@@ -1,0 +1,90 @@
+"""DeepFM: FM identity, retrieval factorisation exactness, smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.configs import REGISTRY
+from repro.models.deepfm import (
+    DeepFMConfig,
+    deepfm_init,
+    deepfm_logits,
+    deepfm_loss,
+    retrieval_score,
+)
+
+
+def test_arch_smoke():
+    REGISTRY["deepfm"].smoke()
+
+
+def test_fm_identity_vs_bruteforce():
+    """½(‖Σv‖²−Σ‖v‖²) == Σ_{i<j} ⟨v_i, v_j⟩."""
+    cfg = DeepFMConfig(field_vocabs=(7, 5, 9, 4), embed_dim=6, mlp_dims=(8,))
+    params = deepfm_init(jax.random.key(0), cfg)
+    fields = jax.random.randint(jax.random.key(1), (10, 4), 0, 4, jnp.int32)
+    flat = fields + cfg.offsets[None, :]
+    v = params["embed"][flat]                     # (B, F, d)
+    brute = jnp.zeros((10,))
+    F = 4
+    for i in range(F):
+        for j in range(i + 1, F):
+            brute += jnp.sum(v[:, i] * v[:, j], axis=-1)
+    s = v.sum(axis=1)
+    fm = 0.5 * (jnp.sum(s * s, -1) - jnp.sum(v * v, axis=(1, 2)))
+    assert_allclose(np.asarray(fm), np.asarray(brute), rtol=1e-5, atol=1e-5)
+
+
+def test_retrieval_matches_full_model_when_deep_is_user_side():
+    """With the deep tower blind to the item field, the factorised retrieval
+    sweep must EXACTLY equal full DeepFM logits per candidate."""
+    cfg = DeepFMConfig(field_vocabs=(50, 8, 8, 8), embed_dim=6, mlp_dims=(16,))
+    params = deepfm_init(jax.random.key(0), cfg)
+    user = jnp.asarray([0, 3, 1, 5], jnp.int32)   # item_field=0 ignored
+    cands = jnp.arange(50, dtype=jnp.int32)
+
+    scores = retrieval_score(params, cfg, user, cands, item_field=0)
+
+    # full model, with the item embedding zeroed INSIDE the deep tower only
+    full = []
+    for c in range(50):
+        fields = user.at[0].set(c)[None, :]
+        flat = fields + cfg.offsets[None, :]
+        v = params["embed"][flat]
+        lin = params["linear"][flat].sum(1)
+        s = v.sum(1)
+        fm = 0.5 * (jnp.sum(s * s, -1) - jnp.sum(v * v, axis=(1, 2)))
+        v_deep = v.at[:, 0].set(0.0)              # deep tower = user side only
+        from repro.models.gnn.common import mlp_apply
+
+        deep = mlp_apply(params["mlp"], v_deep.reshape(1, -1), act=jax.nn.relu)[:, 0]
+        full.append(params["bias"] + lin + fm + deep)
+    full = jnp.concatenate(full)
+    assert_allclose(np.asarray(scores), np.asarray(full), rtol=1e-4, atol=1e-4)
+
+
+def test_training_reduces_loss():
+    from repro.data.pipeline import ClickStream
+    from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+    cfg = DeepFMConfig(field_vocabs=tuple([32] * 10), embed_dim=8, mlp_dims=(32,))
+    params = deepfm_init(jax.random.key(0), cfg)
+    opt = adamw_init(params)
+    opt_cfg = OptConfig(lr=3e-3, warmup_steps=5, total_steps=100, weight_decay=0.0)
+    stream = ClickStream(cfg.field_vocabs, batch=256, seed=0)
+
+    @jax.jit
+    def step(params, opt, fields, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: deepfm_loss(p, cfg, fields, labels)
+        )(params)
+        params, opt, _ = adamw_update(opt_cfg, grads, opt, params)
+        return params, opt, loss
+
+    losses = []
+    for i in range(60):
+        f, l = stream.batch_at(i)
+        params, opt, loss = step(params, opt, jnp.asarray(f), jnp.asarray(l))
+        losses.append(float(loss))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.01, losses[::10]

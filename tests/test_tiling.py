@@ -1,0 +1,107 @@
+"""BSR tiling invariants + heuristics unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heuristics import make_priorities
+from repro.core.tiling import build_block_tiles, tile_stats
+from repro.graphs.generators import erdos_renyi, grid2d
+from repro.graphs.graph import build_csr, from_edges
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(10, 200),
+    deg=st.floats(1.0, 12.0),
+    T=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 1000),
+)
+def test_tiles_reconstruct_adjacency(n, deg, T, seed):
+    """Scattering all tiles back must reproduce the dense adjacency."""
+    g = erdos_renyi(n, avg_deg=deg, seed=seed)
+    tiled = build_block_tiles(g, tile_size=T)
+    dense = np.zeros((tiled.n_padded, tiled.n_padded), np.int8)
+    tiles = np.asarray(tiled.tiles)
+    tr = np.asarray(tiled.tile_rows)
+    tc = np.asarray(tiled.tile_cols)
+    for i in range(tiled.n_tiles):
+        r0, c0 = tr[i] * T, tc[i] * T
+        dense[r0 : r0 + T, c0 : c0 + T] |= tiles[i]
+    expect = np.zeros_like(dense)
+    s = np.asarray(g.senders)[: g.n_edges]
+    r = np.asarray(g.receivers)[: g.n_edges]
+    expect[s, r] = 1
+    np.testing.assert_array_equal(dense, expect)
+
+
+def test_tile_rows_sorted_monotone():
+    g = erdos_renyi(500, avg_deg=8.0, seed=1)
+    tiled = build_block_tiles(g, tile_size=32)
+    tr = np.asarray(tiled.tile_rows)
+    assert np.all(np.diff(tr) >= 0), "BSR order violated (revisit accumulation breaks)"
+
+
+def test_padding_tiles_are_noops():
+    g = erdos_renyi(100, avg_deg=4.0, seed=2)
+    tiled = build_block_tiles(g, tile_size=16, pad_tiles_to=64)
+    assert tiled.n_tiles_pad >= 64
+    pad = np.asarray(tiled.tiles[tiled.n_tiles :])
+    assert pad.sum() == 0
+
+
+def test_tile_stats_tradeoff():
+    """Structured graphs pack denser tiles than random ones (paper §3.2)."""
+    g_grid = grid2d(64, 64, diag_frac=0.0)
+    g_rand = erdos_renyi(4096, avg_deg=4.0, seed=3)
+    s_grid = tile_stats(build_block_tiles(g_grid, tile_size=64))
+    s_rand = tile_stats(build_block_tiles(g_rand, tile_size=64))
+    assert s_grid["intra_tile_density"] > s_rand["intra_tile_density"]
+
+
+def test_csr_matches_edges():
+    g = erdos_renyi(50, avg_deg=5.0, seed=4)
+    indptr, indices = build_csr(g)
+    assert indptr[-1] == g.n_edges
+    s = np.asarray(g.senders)[: g.n_edges]
+    deg = np.bincount(s, minlength=g.n_nodes)
+    np.testing.assert_array_equal(np.diff(indptr), deg)
+
+
+# ---------------------------------------------------------------------------
+# heuristics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("heuristic", ["h1", "h2", "ecl"])
+def test_priorities_distinct(heuristic):
+    g = erdos_renyi(1000, avg_deg=6.0, seed=5)
+    pri = make_priorities(heuristic, jax.random.key(0), g.n_nodes, g.degrees())
+    vals = np.asarray(pri.select)
+    assert len(np.unique(vals)) == g.n_nodes, "ties would stall the permutation variant"
+
+
+def test_h3_resolve_is_total_order():
+    g = erdos_renyi(1000, avg_deg=6.0, seed=6)
+    pri = make_priorities("h3", jax.random.key(0), g.n_nodes, g.degrees())
+    assert pri.resolve is not None
+    vals = np.asarray(pri.resolve)
+    assert len(np.unique(vals)) == g.n_nodes
+
+
+def test_degree_bias_direction():
+    """Eq. (1): lower degree ⇒ higher priority (on average)."""
+    g = erdos_renyi(2000, avg_deg=10.0, seed=7)
+    deg = np.asarray(g.degrees())
+    pri = make_priorities("ecl", jax.random.key(1), g.n_nodes, g.degrees())
+    sel = np.asarray(pri.select).astype(np.float64)
+    lo = sel[deg <= np.percentile(deg, 25)].mean()
+    hi = sel[deg >= np.percentile(deg, 75)].mean()
+    assert lo > hi
+
+
+def test_priorities_deterministic():
+    g = erdos_renyi(100, avg_deg=5.0, seed=8)
+    a = make_priorities("h2", jax.random.key(3), g.n_nodes, g.degrees())
+    b = make_priorities("h2", jax.random.key(3), g.n_nodes, g.degrees())
+    assert bool(jnp.all(a.select == b.select))
