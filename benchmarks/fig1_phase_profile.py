@@ -2,30 +2,47 @@
 
 The paper profiles ECL-MIS and finds phase ② (candidate selection /
 neighbour elimination over adjacency lists) dominating at 56.4 % average.
-We profile both execution paths of OUR system:
+We profile the round engines of OUR system (the registry's CPU-viable
+subset by default — the interpret-mode Pallas engines are opt-in via
+FIG1_ENGINES=all since they execute python per grid step):
 
-  segment path (ECL-analogue)  — phases on the edge-list/segment substrate
-  tiled path  (TC-MIS)         — phase ② on the BSR SpMV
+  segment     (ECL-analogue)  — phases on the edge-list/segment substrate
+  tiled_ref   (TC-MIS)        — phase ② on the BSR SpMV, phase ① tiled
+  fused_pallas                — phase ②+③ as one kernel pass (charged to p2)
 
 and report the phase share shift that motivates the paper (phase ② shrinking
 under the tiled engine).  CPU wall-clock is a structural signal only; the TPU
 evidence is the roofline table."""
 from __future__ import annotations
 
+import os
+
 import jax
 
 from benchmarks.common import emit, suite_graphs
-from repro.core import TCMISConfig, build_block_tiles, run_phases
+from repro.core import TCMISConfig, build_block_tiles, engine_names, run_phases
+
+
+def _configs():
+    base = dict(heuristic="h3")
+    cfgs = [
+        ("segment", TCMISConfig(backend="segment", **base)),
+        ("tiled_ref", TCMISConfig(backend="tiled_ref", phase1="tiled", **base)),
+    ]
+    if os.environ.get("FIG1_ENGINES") == "all":
+        cfgs += [
+            (name, TCMISConfig(backend=name, phase1="tiled", **base))
+            for name in engine_names()
+            if name.endswith("pallas")
+        ]
+    return cfgs
 
 
 def main() -> None:
     for gid, (spec, g) in suite_graphs(scale_div=8).items():
         tiled = build_block_tiles(g, tile_size=64)
         key = jax.random.key(0)
-        for label, cfg in [
-            ("segment", TCMISConfig(heuristic="h3", phase1="segment", backend="ref")),
-            ("tiled", TCMISConfig(heuristic="h3", phase1="tiled", backend="ref")),
-        ]:
+        for label, cfg in _configs():
             _, t = run_phases(g, tiled, key, cfg)
             total = t["phase1"] + t["phase2"] + t["phase3"]
             emit(

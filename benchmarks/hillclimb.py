@@ -152,6 +152,31 @@ def qwen3_dots_remat():
     _measure(_lm_train_cell("qwen3-dots", cfg, "train_4k"))
 
 
+def tcmis_engine(engine="fused_pallas", skip_dma=False):
+    """H-A iter: live round-engine sweep — per-phase wall-clock of one engine
+    (vs the tiled_ref oracle) on a reduced suite graph.  Unlike the dry-run
+    experiments this MEASURES the engine registry end-to-end, col_flags
+    skipping included.
+
+        PYTHONPATH=src python -m benchmarks.hillclimb tcmis_engine --engine fused_pallas
+    """
+    import json as _json
+
+    import jax as _jax
+
+    from benchmarks.common import suite_graphs
+    from repro.core import TCMISConfig, build_block_tiles, run_phases
+
+    gid, (spec, g) = next(iter(suite_graphs(scale_div=8).items()))
+    tiled = build_block_tiles(g, tile_size=64)
+    out = {}
+    for name in ("tiled_ref", engine):
+        cfg = TCMISConfig(backend=name, phase1="tiled", skip_dma=skip_dma)
+        _, t = run_phases(g, tiled, _jax.random.key(0), cfg)
+        out[name] = {k: round(v, 5) for k, v in t.items()}
+    print(_json.dumps(dict(graph=gid, tiles=tiled.n_tiles, **out), indent=1))
+
+
 def tcmis_g3_rcm(rcm=True):
     """H-A iter 3: RCM-informed tiling on delaunay (G3)."""
     import repro.configs.tcmis as tc
@@ -162,6 +187,7 @@ def tcmis_g3_rcm(rcm=True):
 
 
 EXPERIMENTS = {
+    "tcmis_engine": tcmis_engine,
     "tcmis_g3_rcm": tcmis_g3_rcm,
     "qwen3_dots_remat": qwen3_dots_remat,
     "qwen3_baseline": qwen3_baseline,
@@ -180,11 +206,15 @@ def main():
     p.add_argument("--tile", type=int, default=None)
     p.add_argument("--lanes", type=int, default=None)
     p.add_argument("--cf", type=float, default=None)
+    p.add_argument("--engine", type=str, default="fused_pallas")
+    p.add_argument("--skip-dma", action="store_true")
     args = p.parse_args()
     fn = EXPERIMENTS[args.experiment]
     kw = {}
     if args.experiment == "tcmis_g8":
         kw = dict(tile=args.tile, lanes=args.lanes)
+    if args.experiment == "tcmis_engine":
+        kw = dict(engine=args.engine, skip_dma=args.skip_dma)
     if args.experiment == "deepseek_capacity" and args.cf:
         kw = dict(cf=args.cf)
     if args.experiment == "tcmis_g3_rcm":

@@ -1,26 +1,52 @@
-"""Kernel micro-benchmarks: tc_spmv / tc_neighbor_max / embedding_bag on
-interpret mode (CPU correctness-path timing) + the jnp oracle; the TPU
-performance story is the roofline, these catch regressions in the wrappers."""
+"""Kernel micro-benchmarks, engine-parameterised: one phase-② (or fused
+②+③) timing per registered round engine, with and without live empty-column
+flags, plus the embedding-bag oracle.  Interpret-mode CPU numbers catch
+wrapper/schedule regressions; the TPU performance story is the roofline."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
-from repro.core import build_block_tiles
-from repro.core.spmv import spmv_tiled
+from benchmarks.common import QUICK, emit, time_fn
+from repro.core import build_block_tiles, engine_names, get_engine
+from repro.core.engine import EngineContext
+from repro.core.tc_mis import TCMISConfig
 from repro.graphs.generators import erdos_renyi
 from repro.kernels.ref import embedding_bag_ref
 
 
 def main() -> None:
-    g = erdos_renyi(4096, avg_deg=8.0, seed=0)
+    n = 1024 if QUICK else 4096   # interpret-mode kernels are O(tiles) python
+    g = erdos_renyi(n, avg_deg=8.0, seed=0)
     tiled = build_block_tiles(g, tile_size=64)
-    rhs = jax.random.normal(jax.random.key(0), (tiled.n_padded, 8), jnp.float32)
+    note = f"tiles={tiled.n_tiles};T=64;lanes=8"
 
-    f_ref = jax.jit(lambda r: spmv_tiled(tiled, r, backend="ref"))
-    emit("kernel.tc_spmv.ref_jnp", 1e6 * time_fn(f_ref, rhs),
-         f"tiles={tiled.n_tiles};T=64;lanes=8")
+    # a late-round state: few, clustered candidates — most block-columns are
+    # empty, so the col_flags rows show the live tile skip actually gating
+    key = jax.random.key(0)
+    alive = jax.random.uniform(key, (tiled.n_padded,)) < 0.5
+    cand = (
+        alive
+        & (jax.random.uniform(jax.random.key(1), (tiled.n_padded,)) < 0.25)
+        & (jnp.arange(tiled.n_padded) < tiled.n_padded // 4)
+    )
+    ctx = EngineContext(g=g, tiled=tiled, cfg=TCMISConfig())
+
+    for name in engine_names():
+        eng = get_engine(name)
+        run2 = eng.fused_step if eng.fused else eng.phase2_counts
+        f_none = jax.jit(lambda c, a, _run=run2: _run(ctx, c, a, None))
+        emit(f"kernel.phase2.{name}", 1e6 * time_fn(f_none, cand, alive), note)
+        flags = eng.col_flags(ctx, cand, alive)
+        if flags is not None:
+            f_flag = jax.jit(
+                lambda c, a, fl, _run=run2: _run(ctx, c, a, fl)
+            )
+            emit(
+                f"kernel.phase2.{name}.col_flags",
+                1e6 * time_fn(f_flag, cand, alive, flags),
+                f"{note};active={int(flags.sum())}/{tiled.n_block_cols}",
+            )
 
     table = jax.random.normal(jax.random.key(1), (100_000, 16))
     idx = jax.random.randint(jax.random.key(2), (1024, 8), 0, 100_000, jnp.int32)

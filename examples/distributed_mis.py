@@ -12,6 +12,10 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import jax
 import jax.numpy as jnp
 
+from repro.dist.compat import install as _install_jax_compat
+
+_install_jax_compat()   # modern sharding API on 0.4.x jax too
+
 from repro.core import (
     DistConfig, TCMISConfig, build_block_tiles, build_distributed_mis,
     cardinality, is_valid_mis, make_priorities, shard_tiled, tc_mis,

@@ -5,8 +5,8 @@
 import jax
 
 from repro.core import (
-    TCMISConfig, build_block_tiles, cardinality, ecl_mis, is_valid_mis,
-    luby_mis, tc_mis,
+    TCMISConfig, build_block_tiles, cardinality, ecl_mis, engine_names,
+    is_valid_mis, luby_mis, tc_mis,
 )
 from repro.graphs.generators import GRAPH_SUITE
 
@@ -20,16 +20,32 @@ def main() -> None:
     tiled = build_block_tiles(g, tile_size=64)
     print(f"BSR: {tiled.n_tiles:,} tiles of {tiled.tile_size}×{tiled.tile_size}")
 
-    # 2. run all three algorithms
+    # 2. baselines on the edge list
     key = jax.random.key(0)
-    for name, res in [
-        ("luby  ", luby_mis(g, key)),
-        ("ecl   ", ecl_mis(g, key)),
-        ("tc-mis", tc_mis(g, tiled, key, TCMISConfig(heuristic="h3"))),
-    ]:
+    for name, res in [("luby", luby_mis(g, key)), ("ecl ", ecl_mis(g, key))]:
         assert is_valid_mis(g, res.in_mis)
-        print(f"{name}: |MIS|={cardinality(res.in_mis):,} "
+        print(f"{name}  : |MIS|={cardinality(res.in_mis):,} "
               f"rounds={int(res.rounds)} valid=True")
+
+    # 3. TC-MIS on the oracle engine at full example scale
+    res = tc_mis(g, tiled, key, TCMISConfig(heuristic="h3"))
+    assert is_valid_mis(g, res.in_mis)
+    print(f"tc-mis: |MIS|={cardinality(res.in_mis):,} "
+          f"rounds={int(res.rounds)} valid=True")
+
+    # 4. the registry contract, one engine per line: same priorities ⇒ the
+    #    identical set from every backend.  (Smaller graph: the Pallas
+    #    engines run interpret-mode on CPU — python per grid step.)
+    g_s = GRAPH_SUITE["G3"].make(1024, 0)
+    tiled_s = build_block_tiles(g_s, tile_size=32)
+    ref = None
+    for backend in engine_names():
+        r = tc_mis(g_s, tiled_s, key, TCMISConfig(heuristic="h3", backend=backend))
+        assert is_valid_mis(g_s, r.in_mis)
+        ref = r.in_mis if ref is None else ref
+        assert bool(jax.numpy.all(r.in_mis == ref)), backend
+        print(f"tc-mis[{backend:12s}]: |MIS|={cardinality(r.in_mis):,} "
+              f"rounds={int(r.rounds)} valid=True")
 
 
 if __name__ == "__main__":

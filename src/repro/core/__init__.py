@@ -1,4 +1,14 @@
 """TC-MIS core: the paper's contribution as composable JAX modules."""
+from repro.core.engine import (
+    ENGINES,
+    EngineContext,
+    MISRoundState,
+    RoundEngine,
+    block_col_flags,
+    engine_names,
+    get_engine,
+    register_engine,
+)
 from repro.core.heuristics import HEURISTICS, Priorities, make_priorities
 from repro.core.luby import MISResult, luby_mis
 from repro.core.ecl_mis import ecl_mis
@@ -19,6 +29,8 @@ from repro.core.distributed import (
 )
 
 __all__ = [
+    "ENGINES", "EngineContext", "MISRoundState", "RoundEngine",
+    "block_col_flags", "engine_names", "get_engine", "register_engine",
     "HEURISTICS", "Priorities", "make_priorities",
     "MISResult", "luby_mis", "ecl_mis",
     "TCMISConfig", "tc_mis", "run_phases",

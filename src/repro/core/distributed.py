@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.engine import block_col_flags, tile_neighbor_max, tile_spmv
 from repro.core.heuristics import Priorities
 from repro.core.spmv import _NEG
 from repro.core.tiling import BlockTiledGraph
@@ -115,26 +116,17 @@ def unpack_bits(x: jnp.ndarray) -> jnp.ndarray:
 
 
 # --------------------------------------------------------------------------
-# shard-local tile operators (raw-array forms of core.spmv)
+# shard-local tile operators: the engine layer's raw-array forms applied to
+# this shard's slab — local rows, GLOBAL columns.  SpMV needs no wrapper
+# (`tile_spmv` is called directly); the max adds the priority masking.
 # --------------------------------------------------------------------------
 
-def _local_spmv(tiles, tile_rows, tile_cols, rhs_global, n_local_rows, T):
-    blocks = rhs_global.reshape(-1, T, rhs_global.shape[-1])
-    gathered = blocks[tile_cols]
-    prod = jnp.einsum(
-        "ijk,ikl->ijl", tiles.astype(jnp.float32), gathered.astype(jnp.float32)
+def _local_nbr_max(tiles, tile_rows, tile_cols, p_global, mask_global,
+                   n_local_rows, T):
+    return tile_neighbor_max(
+        tiles, tile_rows, tile_cols, jnp.where(mask_global, p_global, _NEG),
+        n_local_rows, T,
     )
-    out = jax.ops.segment_sum(prod, tile_rows, num_segments=n_local_rows)
-    return out.reshape(n_local_rows * T, rhs_global.shape[-1])
-
-
-def _local_nbr_max(tiles, tile_rows, tile_cols, p_global, mask_global, n_local_rows, T):
-    pm = jnp.where(mask_global, p_global, _NEG).reshape(-1, T)
-    gathered = pm[tile_cols]
-    vals = jnp.where(tiles != 0, gathered[:, None, :], _NEG)
-    tile_max = vals.max(axis=2)
-    out = jax.ops.segment_max(tile_max, tile_rows, num_segments=n_local_rows)
-    return out.reshape(n_local_rows * T)
 
 
 # --------------------------------------------------------------------------
@@ -213,12 +205,18 @@ def make_mis_step_fn(
                 cand_l = pend_l & (resolve_l > max_res)
             else:
                 cand_l = alive_l & (select_l > max_np)
-            # ② tiled SpMV against the gathered global candidate vector
+            # ② tiled SpMV against the gathered global candidate vector.
+            # Per-round active-column flags (engine-layer metadata): every
+            # shard sees the same gathered C, so the empty-C tile skip is
+            # applied identically — and exactly — shard-locally.
             cand_g = gather_bool(cand_l)
             rhs = jnp.zeros((cand_g.shape[0], cfg.lanes), dtype=jnp.float32)
             rhs = rhs.at[:, 0].set(cand_g.astype(jnp.float32))
             rhs = rhs.at[:, 1].set(alive_g.astype(jnp.float32))
-            n_c = _local_spmv(tiles, tile_rows, tile_cols, rhs, rps, T)[:, 0]
+            flags = block_col_flags(cand_g, T)
+            n_c = tile_spmv(
+                tiles, tile_rows, tile_cols, rhs, rps, T, col_flags=flags
+            )[:, 0]
             # ③ local own-state update, then gather the new frontier
             in_mis_l = in_mis_l | cand_l
             alive_l = alive_l & ~cand_l & ~(n_c > 0)
@@ -233,8 +231,10 @@ def make_mis_step_fn(
         )
         return in_mis_l, rounds
 
+    from repro.dist.compat import shard_map
+
     shard_spec = P(axis)
-    return jax.shard_map(
+    return shard_map(
         body_fn,
         mesh=mesh,
         in_specs=(shard_spec, shard_spec, shard_spec, P(), P()),

@@ -1,0 +1,372 @@
+"""The round-engine layer: one backend interface for every TC-MIS phase.
+
+Every execution path of the system — the paper-faithful CC baseline, the jnp
+tile oracle, the Pallas SpMV kernel, and the fused phase-②+③ kernel — is a
+`RoundEngine`: an object that knows how to run one MIS round (DESIGN.md §4).
+The driver (`core.tc_mis`) is engine-agnostic; it owns only the convergence
+loop.  Benchmarks, examples and future backends (GPU Pallas, bit-packed
+masks) select engines from the registry instead of hard-coding call sites —
+kernel selection is a pluggable policy over one tiled schedule, the way
+BLEST/HC-SpMM treat their kernel zoos.
+
+Registered engines:
+
+  segment       gather/segment ops over the edge list (ECL-MIS analogue);
+                the paper's CUDA-core baseline substrate.
+  tiled_ref     pure-jnp BSR tile schedule — the oracle every kernel is
+                validated against.
+  tiled_pallas  phase ② on the Pallas SpMV kernel (MXU on TPU), phase ① per
+                `cfg.phase1` (segment, or the beyond-paper tiled max kernel).
+  fused_pallas  the fast path: phase ②+③ in ONE kernel pass — N_c never
+                round-trips through HBM (DESIGN.md §6.3).
+
+Per-round metadata: tiled engines compute **active block-column flags** from
+the candidate vector each round (`block_col_flags`) so the kernels' empty-C
+tile skip — `@pl.when` on the MXU op, and the `skip_dma` HBM-read skip — is
+exercised live, not just in unit tests.  Skipping is exact: a tile whose
+candidate slab is all-zero contributes exactly zero to N_c (lane 0).  Lanes
+≥ 1 of a skipped column are dropped too, so the jnp oracle emulates the skip
+by zeroing gated slabs — ref and kernel agree on ALL lanes.
+
+This module also owns the raw-array tile operators (`tile_spmv`,
+`tile_neighbor_max`) shared by `core.spmv` (padded-vector forms) and
+`core.distributed` (shard-local slabs inside `shard_map`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import BlockTiledGraph, pack_vertex_vector
+from repro.graphs.graph import Graph
+
+if TYPE_CHECKING:  # avoid a cycle: tc_mis imports the engine layer
+    from repro.core.tc_mis import TCMISConfig
+
+_NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
+
+
+# --------------------------------------------------------------------------
+# raw-array tile operators (shared: core.spmv, core.distributed, engines)
+# --------------------------------------------------------------------------
+
+def tile_spmv(
+    tiles: jnp.ndarray,          # (nt, T, T) int8
+    tile_rows: jnp.ndarray,      # (nt,) int32, non-decreasing
+    tile_cols: jnp.ndarray,      # (nt,) int32
+    rhs: jnp.ndarray,            # (nbc*T, L) float
+    n_block_rows: int,
+    tile_size: int,
+    *,
+    col_flags: jnp.ndarray | None = None,   # (nbc,) int32; None = all active
+) -> jnp.ndarray:
+    """N = A @ rhs over BSR tiles, pure jnp (the Pallas kernels' oracle).
+
+    With `col_flags`, gated RHS slabs are zeroed before the contraction —
+    the exact semantics of the kernel's `@pl.when` tile skip (a skipped tile
+    contributes nothing on any lane).  Returns (n_block_rows*T, L) float32.
+    """
+    T = tile_size
+    blocks = rhs.reshape(-1, T, rhs.shape[-1])
+    gathered = blocks[tile_cols]                             # (nt, T, L)
+    if col_flags is not None:
+        gathered = gathered * col_flags[tile_cols][:, None, None].astype(
+            gathered.dtype
+        )
+    prod = jnp.einsum(
+        "ijk,ikl->ijl", tiles.astype(jnp.float32), gathered.astype(jnp.float32)
+    )
+    out = jax.ops.segment_sum(prod, tile_rows, num_segments=n_block_rows)
+    return out.reshape(n_block_rows * T, rhs.shape[-1])
+
+
+def tile_neighbor_max(
+    tiles: jnp.ndarray,
+    tile_rows: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    pm: jnp.ndarray,             # (nbc*T,) pre-masked priorities (_NEG = dead)
+    n_block_rows: int,
+    tile_size: int,
+) -> jnp.ndarray:
+    """Max_Np over the same BSR schedule (VPU work — max has no MXU form)."""
+    T = tile_size
+    gathered = pm.reshape(-1, T)[tile_cols]                  # (nt, T)
+    # tile (T,T) row v, col u: edge v->u.  masked max over columns.
+    vals = jnp.where(tiles != 0, gathered[:, None, :], _NEG)  # (nt, T, T)
+    tile_max = vals.max(axis=2)                              # (nt, T)
+    out = jax.ops.segment_max(tile_max, tile_rows, num_segments=n_block_rows)
+    return out.reshape(n_block_rows * T)
+
+
+def block_col_flags(x: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """Per-block-column activity: (nbc*T,) vector -> (nbc,) int32 0/1 flags.
+
+    The per-round metadata of the engine layer: a block-column is active iff
+    any vertex in it carries a nonzero entry (the paper's empty-C test)."""
+    return x.reshape(-1, tile_size).astype(bool).any(axis=1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# engine state + context
+# --------------------------------------------------------------------------
+
+class MISRoundState(NamedTuple):
+    """Per-round algorithm state, all shapes (n_padded,)."""
+    alive: jnp.ndarray    # bool
+    in_mis: jnp.ndarray   # bool
+    rnd: jnp.ndarray      # int32
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineContext:
+    """Immutable per-run bundle an engine closes over: the graph in both
+    representations plus the run config (lanes, phase1 policy, skip_dma)."""
+    g: Graph
+    tiled: BlockTiledGraph
+    cfg: "TCMISConfig"
+
+
+def phase3_update(
+    state: MISRoundState, cand: jnp.ndarray, n_c: jnp.ndarray
+) -> MISRoundState:
+    """③ lock-free own-state update (paper's three rules, verbatim)."""
+    return MISRoundState(
+        alive=state.alive & ~cand & ~(n_c > 0),
+        in_mis=state.in_mis | cand,
+        rnd=state.rnd + 1,
+    )
+
+
+# --------------------------------------------------------------------------
+# the engine interface
+# --------------------------------------------------------------------------
+
+class RoundEngine:
+    """One MIS round as three pluggable pieces.
+
+    Subclasses implement `_nbr_max` (phase ① substrate) and either
+    `phase2_counts` (split engines) or `fused_step` (fused engines,
+    `fused = True`).  `step` — the single round body every driver uses —
+    is shared; `col_flags` is the per-round metadata hook.
+    """
+
+    name: str = "abstract"
+    fused: bool = False
+
+    # -- phase ① ----------------------------------------------------------
+    def _nbr_max(
+        self, ctx: EngineContext, p: jnp.ndarray, mask: jnp.ndarray
+    ) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def phase1_candidates(
+        self, ctx: EngineContext, pri, alive: jnp.ndarray
+    ) -> jnp.ndarray:
+        """① Max_Np + candidate test (+ H3 pending-set resolution)."""
+        max_np = self._nbr_max(ctx, pri.select, alive)
+        if pri.resolve is None:
+            return alive & (pri.select > max_np)
+        # H3: conflicts resolved on the pending set before C is finalised.
+        pending = alive & (pri.select >= max_np)
+        max_res = self._nbr_max(ctx, pri.resolve, pending)
+        return pending & (pri.resolve > max_res)
+
+    # -- per-round metadata -----------------------------------------------
+    def col_flags(
+        self, ctx: EngineContext, cand: jnp.ndarray, alive: jnp.ndarray
+    ) -> Optional[jnp.ndarray]:
+        """Active block-column flags for the empty-C tile skip.  Candidates
+        drive phase ②'s lane 0, so a column block with no candidate is dead
+        weight — flag it off.  Segment engines have no tiles to skip."""
+        return block_col_flags(cand, ctx.tiled.tile_size)
+
+    # -- phase ② ----------------------------------------------------------
+    def _pack_rhs(
+        self, ctx: EngineContext, cand: jnp.ndarray, alive: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Lane-packed RHS: lane 0 = C (the paper's SpMV input), lane 1 =
+        alive (live-neighbour counts ride along free on a wide-lane TPU)."""
+        rhs = jnp.zeros((ctx.tiled.n_padded, ctx.cfg.lanes), dtype=jnp.float32)
+        rhs = rhs.at[:, 0].set(cand.astype(jnp.float32))
+        rhs = rhs.at[:, 1].set(alive.astype(jnp.float32))
+        return rhs
+
+    def phase2_counts(
+        self,
+        ctx: EngineContext,
+        cand: jnp.ndarray,
+        alive: jnp.ndarray,
+        col_flags: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        """② N_c = A × C.  Returns (n_padded,) float32."""
+        raise NotImplementedError(f"{self.name} is a fused engine")
+
+    # -- fused ②+③ --------------------------------------------------------
+    def fused_step(
+        self,
+        ctx: EngineContext,
+        cand: jnp.ndarray,
+        alive: jnp.ndarray,
+        col_flags: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """②+③ in one pass.  Returns (new_alive, mis_add) bool vectors."""
+        raise NotImplementedError(f"{self.name} is a split engine")
+
+    # -- the round body (shared by tc_mis AND run_phases) ------------------
+    def step(
+        self, ctx: EngineContext, pri, state: MISRoundState
+    ) -> MISRoundState:
+        cand = self.phase1_candidates(ctx, pri, state.alive)
+        flags = self.col_flags(ctx, cand, state.alive)
+        if self.fused:
+            new_alive, mis_add = self.fused_step(ctx, cand, state.alive, flags)
+            return MISRoundState(
+                alive=new_alive,
+                in_mis=state.in_mis | mis_add,
+                rnd=state.rnd + 1,
+            )
+        n_c = self.phase2_counts(ctx, cand, state.alive, flags)
+        return phase3_update(state, cand, n_c)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+ENGINES: Dict[str, RoundEngine] = {}
+
+# legacy TCMISConfig.backend spellings kept working
+_ALIASES = {"ref": "tiled_ref", "pallas": "tiled_pallas", "fused": "fused_pallas"}
+
+
+def register_engine(engine: RoundEngine) -> RoundEngine:
+    ENGINES[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> RoundEngine:
+    resolved = _ALIASES.get(name, name)
+    if resolved not in ENGINES:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(ENGINES)} "
+            f"(aliases: {_ALIASES})"
+        )
+    return ENGINES[resolved]
+
+
+def engine_names() -> Tuple[str, ...]:
+    """Registered engine names, stable registration order."""
+    return tuple(ENGINES)
+
+
+# --------------------------------------------------------------------------
+# the four engines
+# --------------------------------------------------------------------------
+
+def _segment_nbr_max(ctx: EngineContext, p, mask) -> jnp.ndarray:
+    from repro.core.spmv import neighbor_max_segment
+
+    n = ctx.g.n_nodes
+    out = neighbor_max_segment(ctx.g, p[:n], mask[:n])
+    return pack_vertex_vector(out, ctx.tiled)
+
+
+class SegmentEngine(RoundEngine):
+    """Paper-faithful CC baseline: every phase on the edge-list substrate."""
+
+    name = "segment"
+
+    def _nbr_max(self, ctx, p, mask):
+        return _segment_nbr_max(ctx, p, mask)
+
+    def col_flags(self, ctx, cand, alive):
+        return None   # no tiles, nothing to skip
+
+    def phase2_counts(self, ctx, cand, alive, col_flags=None):
+        from repro.core.spmv import neighbor_sum_segment
+
+        n = ctx.g.n_nodes
+        n_c = neighbor_sum_segment(ctx.g, cand[:n].astype(jnp.float32))
+        return pack_vertex_vector(n_c, ctx.tiled)
+
+
+class _TiledEngine(RoundEngine):
+    """Shared phase-① policy for tile-schedule engines: `cfg.phase1` picks
+    the paper-faithful segment max or the beyond-paper tiled max."""
+
+    def _tiled_nbr_max(self, ctx, p, mask) -> jnp.ndarray:
+        t = ctx.tiled
+        return tile_neighbor_max(
+            t.tiles, t.tile_rows, t.tile_cols, jnp.where(mask, p, _NEG),
+            t.n_block_rows, t.tile_size,
+        )
+
+    def _nbr_max(self, ctx, p, mask):
+        if ctx.cfg.phase1 != "tiled":
+            return _segment_nbr_max(ctx, p, mask)
+        return self._tiled_nbr_max(ctx, p, mask)
+
+
+class TiledRefEngine(_TiledEngine):
+    """jnp oracle on the BSR schedule — ground truth for both kernels."""
+
+    name = "tiled_ref"
+
+    def phase2_counts(self, ctx, cand, alive, col_flags=None):
+        t = ctx.tiled
+        out = tile_spmv(
+            t.tiles, t.tile_rows, t.tile_cols,
+            self._pack_rhs(ctx, cand, alive),
+            t.n_block_rows, t.tile_size, col_flags=col_flags,
+        )
+        return out[:, 0]
+
+
+class TiledPallasEngine(_TiledEngine):
+    """Phase ② on the Pallas SpMV kernel; live empty-C skip via col_flags."""
+
+    name = "tiled_pallas"
+
+    def _tiled_nbr_max(self, ctx, p, mask):
+        from repro.kernels.ops import tc_neighbor_max
+
+        return tc_neighbor_max(ctx.tiled, p, mask)
+
+    def phase2_counts(self, ctx, cand, alive, col_flags=None):
+        from repro.kernels.ops import tc_spmv
+
+        out = tc_spmv(
+            ctx.tiled, self._pack_rhs(ctx, cand, alive),
+            col_flags=col_flags, skip_dma=ctx.cfg.skip_dma,
+        )
+        return out[:, 0]
+
+
+class FusedPallasEngine(TiledPallasEngine):
+    """The production fast path: phase ②+③ in one kernel pass — the state
+    update runs in the SpMV epilogue, N_c never round-trips through HBM."""
+
+    name = "fused_pallas"
+    fused = True
+
+    def phase2_counts(self, ctx, cand, alive, col_flags=None):
+        raise NotImplementedError("fused_pallas runs ②+③ as one fused_step")
+
+    def fused_step(self, ctx, cand, alive, col_flags=None):
+        from repro.kernels.ops import tc_spmv_fused
+
+        _, new_alive, mis_add = tc_spmv_fused(
+            ctx.tiled, self._pack_rhs(ctx, cand, alive), cand, alive,
+            col_flags=col_flags, skip_dma=ctx.cfg.skip_dma,
+        )
+        return new_alive, mis_add
+
+
+register_engine(SegmentEngine())
+register_engine(TiledRefEngine())
+register_engine(TiledPallasEngine())
+register_engine(FusedPallasEngine())

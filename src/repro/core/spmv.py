@@ -15,11 +15,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.tiling import BlockTiledGraph
 from repro.graphs.graph import Graph
 
-_NEG = jnp.int32(-(1 << 30))
+_NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
 
 
 # --------------------------------------------------------------------------
@@ -56,11 +57,17 @@ def neighbor_any_segment(g: Graph, flag: jnp.ndarray) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 def spmv_tiled(
-    tiled: BlockTiledGraph, rhs: jnp.ndarray, *, backend: str = "ref"
+    tiled: BlockTiledGraph,
+    rhs: jnp.ndarray,
+    *,
+    backend: str = "ref",
+    col_flags: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """N = A @ rhs over the BSR tiles.
 
     rhs: (n_padded, L) multi-lane right-hand side (lane 0 is the paper's C).
+    col_flags: (n_block_cols,) active-column flags — gated slabs contribute
+    nothing (the empty-C skip; exact on every lane, see core.engine).
     Returns (n_padded, L) float32.
 
     backend='ref'    pure-jnp (this function doubles as the kernel oracle)
@@ -69,19 +76,13 @@ def spmv_tiled(
     if backend == "pallas":
         from repro.kernels.ops import tc_spmv
 
-        return tc_spmv(tiled, rhs)
-    T = tiled.tile_size
-    blocks = rhs.reshape(tiled.n_block_cols, T, rhs.shape[-1])
-    gathered = blocks[tiled.tile_cols]                       # (nt, T, L)
-    prod = jnp.einsum(
-        "ijk,ikl->ijl",
-        tiled.tiles.astype(jnp.float32),
-        gathered.astype(jnp.float32),
+        return tc_spmv(tiled, rhs, col_flags=col_flags)
+    from repro.core.engine import tile_spmv
+
+    return tile_spmv(
+        tiled.tiles, tiled.tile_rows, tiled.tile_cols, rhs,
+        tiled.n_block_rows, tiled.tile_size, col_flags=col_flags,
     )
-    out = jax.ops.segment_sum(
-        prod, tiled.tile_rows, num_segments=tiled.n_block_rows
-    )                                                        # (nbr, T, L)
-    return out.reshape(tiled.n_padded, rhs.shape[-1])
 
 
 def neighbor_max_tiled(
@@ -101,13 +102,9 @@ def neighbor_max_tiled(
         from repro.kernels.ops import tc_neighbor_max
 
         return tc_neighbor_max(tiled, p, mask)
-    T = tiled.tile_size
-    pm = jnp.where(mask, p, _NEG).reshape(tiled.n_block_cols, T)
-    gathered = pm[tiled.tile_cols]                           # (nt, T)
-    # tile (T,T) row v, col u: edge v->u.  masked max over columns.
-    vals = jnp.where(tiled.tiles != 0, gathered[:, None, :], _NEG)  # (nt,T,T)
-    tile_max = vals.max(axis=2)                              # (nt, T)
-    out = jax.ops.segment_max(
-        tile_max, tiled.tile_rows, num_segments=tiled.n_block_rows
+    from repro.core.engine import tile_neighbor_max
+
+    return tile_neighbor_max(
+        tiled.tiles, tiled.tile_rows, tiled.tile_cols,
+        jnp.where(mask, p, _NEG), tiled.n_block_rows, tiled.tile_size,
     )
-    return out.reshape(tiled.n_padded)

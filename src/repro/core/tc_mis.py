@@ -12,45 +12,50 @@ Per round:
      counts (free on TPU; DESIGN.md §6.2).
   ③ own-state-only update: candidates join Δm, their neighbours (N_c>0) die.
      Lock-free by construction — here that is literal: it is one elementwise
-     `where`, fused by XLA into the SpMV epilogue (DESIGN.md §6.3).
+     `where`, fused by XLA into the SpMV epilogue (DESIGN.md §6.3), or run
+     INSIDE the kernel epilogue by the `fused_pallas` engine.
 
-The whole loop is one `lax.while_loop`; `run_phases` is the instrumented
-python-stepped twin used by the Fig.-1-style phase profiler.
+How a round executes is delegated to a `RoundEngine` (core.engine): the
+`backend` config field names an engine from the registry — `segment`,
+`tiled_ref`, `tiled_pallas`, or `fused_pallas` (legacy spellings `ref` /
+`pallas` still resolve).  Both drivers here — the jitted `lax.while_loop`
+production entry and the python-stepped profiler twin — run the SAME
+engine round body; `run_phases` merely times its pieces.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (
+    EngineContext,
+    MISRoundState,
+    get_engine,
+    phase3_update,
+)
 from repro.core.heuristics import Priorities, make_priorities
 from repro.core.luby import MISResult
-from repro.core.spmv import (
-    _NEG,
-    neighbor_max_segment,
-    neighbor_max_tiled,
-    spmv_tiled,
-)
+from repro.core.spmv import _NEG
 from repro.core.tiling import BlockTiledGraph, pack_vertex_vector
 from repro.graphs.graph import Graph
+
+# back-compat alias: the round state now lives with the engine layer
+TCMISState = MISRoundState
 
 
 @dataclasses.dataclass(frozen=True)
 class TCMISConfig:
     heuristic: str = "h3"        # h1 | h2 | h3 | ecl
     lanes: int = 8               # RHS lane count (128 on TPU; 8 keeps CPU cheap)
-    backend: str = "ref"         # ref | pallas — phase-② SpMV implementation
+    backend: str = "ref"         # engine name: segment | tiled_ref |
+                                 # tiled_pallas | fused_pallas (ref/pallas ok)
     phase1: str = "segment"      # segment (paper-faithful) | tiled (beyond-paper)
+    skip_dma: bool = False       # empty-C slabs also skip their HBM read
     max_rounds: int = 1024
-
-
-class TCMISState(NamedTuple):
-    alive: jnp.ndarray    # (n_padded,) bool
-    in_mis: jnp.ndarray   # (n_padded,) bool
-    rnd: jnp.ndarray      # int32
 
 
 def _pad_priorities(pri: Priorities, tiled: BlockTiledGraph) -> Priorities:
@@ -62,50 +67,21 @@ def _pad_priorities(pri: Priorities, tiled: BlockTiledGraph) -> Priorities:
     )
 
 
-def _phase1_candidates(
-    g: Graph,
-    tiled: BlockTiledGraph,
-    pri: Priorities,
-    alive: jnp.ndarray,
-    cfg: TCMISConfig,
-) -> jnp.ndarray:
-    """① Max_Np + candidate test (+ H3 pending-set resolution).  All shapes
-    are n_padded; the segment path round-trips through the unpadded view."""
-    n = g.n_nodes
-
-    def nbr_max(p, mask):
-        if cfg.phase1 == "tiled":
-            return neighbor_max_tiled(tiled, p, mask, backend=cfg.backend)
-        out = neighbor_max_segment(g, p[:n], mask[:n])
-        return pack_vertex_vector(out, tiled)
-
-    max_np = nbr_max(pri.select, alive)
-    if pri.resolve is None:
-        return alive & (pri.select > max_np)
-    # H3: conflicts resolved on the pending set before C is finalised.
-    pending = alive & (pri.select >= max_np)
-    max_res = nbr_max(pri.resolve, pending)
-    return pending & (pri.resolve > max_res)
-
-
-def _phase2_counts(
-    tiled: BlockTiledGraph, cand: jnp.ndarray, alive: jnp.ndarray, cfg: TCMISConfig
-) -> jnp.ndarray:
-    """② N_c = A × C on the tiled representation (lane 0 = C, lane 1 = alive)."""
-    rhs = jnp.zeros((tiled.n_padded, cfg.lanes), dtype=jnp.float32)
-    rhs = rhs.at[:, 0].set(cand.astype(jnp.float32))
-    rhs = rhs.at[:, 1].set(alive.astype(jnp.float32))
-    out = spmv_tiled(tiled, rhs, backend=cfg.backend)
-    return out[:, 0]
-
-
-def _phase3_update(
-    state: TCMISState, cand: jnp.ndarray, n_c: jnp.ndarray
-) -> TCMISState:
-    """③ lock-free own-state update (paper's three rules, verbatim)."""
-    in_mis = state.in_mis | cand
-    alive = state.alive & ~cand & ~(n_c > 0)
-    return TCMISState(alive=alive, in_mis=in_mis, rnd=state.rnd + 1)
+def _setup(
+    g: Graph, tiled: BlockTiledGraph, key: jax.Array, config: TCMISConfig
+):
+    """Shared run prologue: engine resolution, context, priorities, state₀."""
+    engine = get_engine(config.backend)
+    ctx = EngineContext(g=g, tiled=tiled, cfg=config)
+    pri = _pad_priorities(
+        make_priorities(config.heuristic, key, g.n_nodes, g.degrees()), tiled
+    )
+    state0 = MISRoundState(
+        alive=pack_vertex_vector(jnp.ones((g.n_nodes,), dtype=bool), tiled),
+        in_mis=jnp.zeros((tiled.n_padded,), dtype=bool),
+        rnd=jnp.int32(0),
+    )
+    return engine, ctx, pri, state0
 
 
 def tc_mis(
@@ -115,28 +91,16 @@ def tc_mis(
     config: TCMISConfig = TCMISConfig(),
 ) -> MISResult:
     """Run TC-MIS to convergence inside one `lax.while_loop`."""
-    n = g.n_nodes
-    pri = _pad_priorities(
-        make_priorities(config.heuristic, key, n, g.degrees()), tiled
-    )
+    engine, ctx, pri, state0 = _setup(g, tiled, key, config)
 
-    def cond(state: TCMISState):
+    def cond(state: MISRoundState):
         return jnp.any(state.alive) & (state.rnd < config.max_rounds)
 
-    def body(state: TCMISState):
-        cand = _phase1_candidates(g, tiled, pri, state.alive, config)
-        n_c = _phase2_counts(tiled, cand, state.alive, config)
-        return _phase3_update(state, cand, n_c)
-
-    alive0 = pack_vertex_vector(jnp.ones((n,), dtype=bool), tiled)
-    state0 = TCMISState(
-        alive=alive0,
-        in_mis=jnp.zeros((tiled.n_padded,), dtype=bool),
-        rnd=jnp.int32(0),
+    final = jax.lax.while_loop(
+        cond, lambda s: engine.step(ctx, pri, s), state0
     )
-    final = jax.lax.while_loop(cond, body, state0)
     return MISResult(
-        in_mis=final.in_mis[:n],
+        in_mis=final.in_mis[: g.n_nodes],
         rounds=final.rnd,
         converged=~jnp.any(final.alive),
     )
@@ -153,47 +117,54 @@ def run_phases(
     config: TCMISConfig = TCMISConfig(),
     warmup: bool = True,
 ) -> Tuple[MISResult, Dict[str, float]]:
-    """Same algorithm, stepped from python with per-phase wall-clock timers.
+    """Same engine round body, stepped from python with per-phase timers.
 
     Used only by benchmarks — the jitted `tc_mis` is the production entry.
     Returns (result, {"phase1": s, "phase2": s, "phase3": s, "rounds": k}).
+    For fused engines the ②+③ kernel pass is charged to phase2 and the
+    residual state merge to phase3.
     """
-    n = g.n_nodes
-    pri = _pad_priorities(
-        make_priorities(config.heuristic, key, n, g.degrees()), tiled
-    )
+    engine, ctx, pri, state0 = _setup(g, tiled, key, config)
 
-    p1 = jax.jit(
-        lambda alive: _phase1_candidates(g, tiled, pri, alive, config)
-    )
-    p2 = jax.jit(lambda cand, alive: _phase2_counts(tiled, cand, alive, config))
-    p3 = jax.jit(
-        lambda alive, in_mis, rnd, cand, n_c: _phase3_update(
-            TCMISState(alive, in_mis, rnd), cand, n_c
+    p1 = jax.jit(lambda alive: engine.phase1_candidates(ctx, pri, alive))
+    if engine.fused:
+        p2 = jax.jit(
+            lambda cand, alive: engine.fused_step(
+                ctx, cand, alive, engine.col_flags(ctx, cand, alive)
+            )
         )
-    )
-
-    alive = pack_vertex_vector(jnp.ones((n,), dtype=bool), tiled)
-    in_mis = jnp.zeros((tiled.n_padded,), dtype=bool)
-    rnd = jnp.int32(0)
+        p3 = jax.jit(
+            lambda state, out: MISRoundState(
+                alive=out[0], in_mis=state.in_mis | out[1], rnd=state.rnd + 1
+            )
+        )
+    else:
+        p2 = jax.jit(
+            lambda cand, alive: engine.phase2_counts(
+                ctx, cand, alive, engine.col_flags(ctx, cand, alive)
+            )
+        )
+        p3 = jax.jit(phase3_update)
 
     if warmup:  # compile outside the timers
-        c = p1(alive)
-        nc = p2(c, alive)
-        p3(alive, in_mis, rnd, c, nc)[0].block_until_ready()
+        c = p1(state0.alive)
+        out = p2(c, state0.alive)
+        step = p3(state0, out) if engine.fused else p3(state0, c, out)
+        step.alive.block_until_ready()
 
+    state = state0
     times = {"phase1": 0.0, "phase2": 0.0, "phase3": 0.0}
     rounds = 0
-    while bool(jnp.any(alive)) and rounds < config.max_rounds:
+    while bool(jnp.any(state.alive)) and rounds < config.max_rounds:
         t0 = time.perf_counter()
-        cand = p1(alive)
+        cand = p1(state.alive)
         cand.block_until_ready()
         t1 = time.perf_counter()
-        n_c = p2(cand, alive)
-        n_c.block_until_ready()
+        out = p2(cand, state.alive)
+        jax.block_until_ready(out)
         t2 = time.perf_counter()
-        alive, in_mis, rnd = p3(alive, in_mis, rnd, cand, n_c)
-        alive.block_until_ready()
+        state = p3(state, out) if engine.fused else p3(state, cand, out)
+        state.alive.block_until_ready()
         t3 = time.perf_counter()
         times["phase1"] += t1 - t0
         times["phase2"] += t2 - t1
@@ -201,6 +172,8 @@ def run_phases(
         rounds += 1
     times["rounds"] = rounds
     result = MISResult(
-        in_mis=in_mis[:n], rounds=jnp.int32(rounds), converged=~jnp.any(alive)
+        in_mis=state.in_mis[: g.n_nodes],
+        rounds=jnp.int32(rounds),
+        converged=~jnp.any(state.alive),
     )
     return result, times

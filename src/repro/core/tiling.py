@@ -63,7 +63,6 @@ class BlockTiledGraph:
 
     def density(self) -> float:
         """Fraction of tile cells that are real edges (the paper's trade-off)."""
-        nnz = 2 * 0  # placeholder to keep jit out; host-side only
         t = np.asarray(self.tiles[: self.n_tiles])
         return float(t.sum()) / max(t.size, 1)
 

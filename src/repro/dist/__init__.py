@@ -1,0 +1,18 @@
+"""Distribution helpers: partition-spec policies + elastic resharding.
+
+`repro.core.distributed` owns the MIS-specific shard_map algorithm; this
+package owns the generic machinery every arch family shares — how params,
+caches and batches map onto a mesh (`sharding`), and how checkpoints move
+between meshes (`elastic`).
+"""
+from repro.dist.sharding import (
+    batch_spec,
+    cache_specs,
+    data_axes,
+    deepfm_specs,
+    lm_param_specs,
+)
+
+__all__ = [
+    "batch_spec", "cache_specs", "data_axes", "deepfm_specs", "lm_param_specs",
+]

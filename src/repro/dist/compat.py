@@ -1,0 +1,93 @@
+"""jax version compatibility for the distribution layer.
+
+The repo targets the modern sharding surface — `jax.sharding.AxisType`,
+`jax.make_mesh(..., axis_types=...)`, `jax.shard_map(..., check_vma=...)` —
+but must also run on 0.4.x jax where those are `jax.experimental.shard_map`
+with `check_rep` and a `make_mesh` without axis types.  Library code calls
+the dispatching functions below; scripts written against the modern API
+verbatim (e.g. the subprocess tests) call `install()` once to backfill the
+missing names onto the jax namespace.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Any, Optional, Sequence
+
+import jax
+
+_ORIG_MAKE_MESH = jax.make_mesh   # bound pre-install (install() rebinds jax.make_mesh to our wrapper)
+_MODERN_MESH = "axis_types" in inspect.signature(_ORIG_MAKE_MESH).parameters
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Optional[Sequence[Any]] = None,
+    **kw,
+):
+    """`jax.make_mesh` that tolerates `axis_types` on every jax version
+    (older jax has no explicit/auto axis distinction — dropping the kwarg
+    reproduces its only behaviour, fully-auto axes)."""
+    if _MODERN_MESH and axis_types is not None:
+        kw["axis_types"] = tuple(axis_types)
+    return _ORIG_MAKE_MESH(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+_ORIG_SHARD_MAP = getattr(jax, "shard_map", None)   # pre-install binding
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` on modern jax, `jax.experimental.shard_map` (with the
+    pre-rename `check_rep` flag) on 0.4.x."""
+    if _ORIG_SHARD_MAP is not None:
+        return _ORIG_SHARD_MAP(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for `jax.sharding.AxisType` (values match the modern enum
+    names; on old jax every mesh axis is implicitly Auto)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _normalized_cost_analysis() -> None:
+    """0.4.x `Compiled.cost_analysis()` returns a one-element list of dicts;
+    modern jax returns the dict itself.  Normalize to the dict form."""
+    orig = jax.stages.Compiled.cost_analysis
+    if getattr(orig, "_repro_normalized", False):
+        return
+
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, (list, tuple)):
+            return out[0] if out else {}
+        return out
+
+    cost_analysis._repro_normalized = True
+    jax.stages.Compiled.cost_analysis = cost_analysis
+
+
+def install() -> None:
+    """Backfill the modern names onto jax for code written against them.
+
+    Idempotent; a no-op on jax versions that already provide the surface."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not _MODERN_MESH:
+        jax.make_mesh = make_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    _normalized_cost_analysis()

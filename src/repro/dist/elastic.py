@@ -1,0 +1,39 @@
+"""Elastic rescale: restore a checkpoint onto a DIFFERENT mesh.
+
+Checkpoints store logical (fully-gathered) arrays, so growing from one host
+to a pod — or shrinking back — is just a resharding policy applied at
+restore: build target shardings from the manifest's shapes (no payload
+reads), then stream each leaf through `checkpoint.restore`'s per-leaf
+`device_put` so host memory stays bounded by the largest leaf.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.train import checkpoint as ckpt
+
+
+def reshard_checkpoint(
+    ckpt_dir: str,
+    step: int,
+    mesh: Mesh,
+    spec_fn: Callable[[Any, Mesh], Any],
+) -> Any:
+    """Restore checkpoint `step` sharded onto `mesh`.
+
+    spec_fn(shapes_tree, mesh) -> PartitionSpec tree: the placement policy,
+    called with the checkpoint's ShapeDtypeStruct pytree (e.g. wrap
+    `dist.sharding.lm_param_specs`).  Returns the restored pytree with every
+    leaf device_put under its NamedSharding.
+    """
+    shapes = ckpt.tree_shapes(ckpt_dir, step)
+    specs = spec_fn(shapes, mesh)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return ckpt.restore(ckpt_dir, step, shardings=shardings)

@@ -1,0 +1,183 @@
+"""Partition-spec policies (DESIGN.md §5): how each param/activation family
+maps onto the production mesh.
+
+Axis convention: the mesh has a 'model' axis (tensor parallelism) and one or
+more batch axes — 'data', optionally preceded by 'pod'.  `data_axes` returns
+the batch axes as a tuple; specs place that tuple on batch-like dimensions so
+the same policy serves (data, model) single-pod and (pod, data, model)
+multi-pod meshes unchanged.
+
+Every rule is divisibility-guarded: a dimension that doesn't divide by its
+target axis size stays replicated (the dry-run sweeps many meshes; a policy
+must never fail to lower, only degrade to replication).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch axes: every mesh axis except 'model' ('pod' composes with
+    'data' — cross-pod traffic is then only gradient/frontier collectives)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_size(mesh: Mesh, axes: Union[str, Tuple[str, ...], None]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    shape = dict(mesh.shape)
+    return int(np.prod([shape[a] for a in axes])) if axes else 1
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 0) -> P:
+    """Batch-sharded leading dim + `extra_dims` replicated trailing dims."""
+    return P(data_axes(mesh), *([None] * extra_dims))
+
+
+def _model_size(mesh: Mesh) -> int:
+    return dict(mesh.shape).get("model", 1)
+
+
+# --------------------------------------------------------------------------
+# LM params — Megatron-style tensor parallelism on 'model', optional FSDP
+# --------------------------------------------------------------------------
+
+# leaf name -> which dim (counted from the END, so layer-stacked leaves with
+# a leading L axis share the rule with unstacked ones) carries 'model'
+_TP_FROM_END = {
+    # column-parallel projections: output features sharded
+    "wq": 1, "wk": 1, "wv": 1, "wqkv": 1, "bq": 1, "bk": 1, "bv": 1,
+    "w1": 1, "w3": 1, "w13": 1, "ws1": 1, "ws3": 1,
+    "w_dq": 1, "w_uq": 1,
+    "head": 1, "proj": 1,
+    # row-parallel projections: input features sharded (output all-reduced)
+    "wo": 2, "w2": 2, "ws2": 2,
+    # MLA per-head factors: shard the head dim
+    "w_uk": 3, "w_uv": 3,
+    # vocab-parallel embedding
+    "embed": 2,
+}
+# expert stacks (L, E, D, d_expert)-ish: prefer expert parallelism on E,
+# fall back to feature TP when n_experts doesn't divide the model axis
+_EXPERT_FROM_END = {"we1": (3, 1), "we3": (3, 1), "we2": (3, 2)}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def _spec_with(leaf, dim_from_end: Optional[int], axis, axis_size: int) -> P:
+    """P placing `axis` at ndim-dim_from_end if the dim divides; else P()."""
+    nd = len(leaf.shape)
+    if (
+        dim_from_end is None
+        or axis_size <= 1
+        or dim_from_end > nd
+        or leaf.shape[nd - dim_from_end] % axis_size != 0
+    ):
+        return P()
+    parts: list = [None] * nd
+    parts[nd - dim_from_end] = axis
+    return P(*parts)
+
+
+def _fsdp_extend(spec: P, leaf, dp: Tuple[str, ...], dp_size: int) -> P:
+    """ZeRO-3-style extension: shard the largest still-replicated dim over
+    the batch axes (same policy as optimizer.zero1_specs)."""
+    if dp_size <= 1:
+        return spec
+    parts = list(spec) if len(spec) else []
+    while len(parts) < len(leaf.shape):
+        parts.append(None)
+    order = sorted(range(len(parts)), key=lambda i: -leaf.shape[i])
+    for i in order:
+        if parts[i] is None and leaf.shape[i] % dp_size == 0:
+            parts[i] = dp
+            return P(*parts)
+    return spec
+
+
+def lm_param_specs(params_sh: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    """PartitionSpec tree for `transformer.init_lm` params.
+
+    params_sh: the param pytree (ShapeDtypeStructs from eval_shape is enough).
+    fsdp: additionally shard each leaf over the batch axes (for archs whose
+    model-parallel-only shards exceed per-chip HBM).
+    """
+    msz = _model_size(mesh)
+    dp = data_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        if name in _EXPERT_FROM_END:
+            expert_dim, feat_dim = _EXPERT_FROM_END[name]
+            nd = len(leaf.shape)
+            if msz > 1 and expert_dim <= nd and leaf.shape[nd - expert_dim] % msz == 0:
+                spec = _spec_with(leaf, expert_dim, "model", msz)
+            else:
+                spec = _spec_with(leaf, feat_dim, "model", msz)
+        else:
+            spec = _spec_with(leaf, _TP_FROM_END.get(name), "model", msz)
+        if fsdp:
+            spec = _fsdp_extend(spec, leaf, dp, dp_size)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_sh)
+
+
+def cache_specs(cfg, mesh: Mesh, batch: int, length: int):
+    """DecodeCache spec: batch over the data axes, KV heads over 'model'.
+
+    GQA caches are (L, B, C, Hkv, dh); MLA latent caches (L, B, C, r) have
+    no head dim — the latent is replicated across the model axis (it is the
+    absorbed-weight trade: tiny cache, model-parallel up-projections)."""
+    from repro.models.transformer import DecodeCache
+
+    dp = data_axes(mesh)
+    b_axes = dp if batch % max(_axis_size(mesh, dp), 1) == 0 else None
+    msz = _model_size(mesh)
+    if cfg.mla is not None:
+        latent = P(None, b_axes, None, None)
+        data = {"ckv": latent, "krope": latent}
+    else:
+        h_axes = "model" if (msz > 1 and cfg.n_kv_heads % msz == 0) else None
+        kv = P(None, b_axes, None, h_axes, None)
+        data = {"k": kv, "v": kv}
+    return DecodeCache(data=data, pos=P(), length=length)
+
+
+# --------------------------------------------------------------------------
+# recsys — vocab-parallel embedding tables over the WHOLE mesh
+# --------------------------------------------------------------------------
+
+def deepfm_specs(params_sh: Any, mesh: Mesh) -> Any:
+    """DeepFM: the ~34M-row embedding/linear tables are the footprint, so
+    their vocab dim shards over every mesh axis; the MLP tower is small and
+    takes plain feature TP."""
+    flat = tuple(mesh.axis_names)
+    full = _axis_size(mesh, flat)
+    msz = _model_size(mesh)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        if name in ("embed", "linear"):
+            if leaf.shape[0] % max(full, 1) == 0:
+                return P(flat, *([None] * (len(leaf.shape) - 1)))
+            return _spec_with(leaf, len(leaf.shape), "model", msz)
+        if name == "ws" or (len(path) >= 2 and _leaf_name(path[:-1]) == "ws"):
+            return _spec_with(leaf, 1, "model", msz)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params_sh)

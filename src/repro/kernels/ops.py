@@ -11,13 +11,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.tiling import BlockTiledGraph
 from repro.kernels.tc_spmv import tc_spmv_pallas
 from repro.kernels.tc_neighbor_max import tc_neighbor_max_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 
-_NEG = jnp.int32(-(1 << 30))
+_NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -87,7 +88,9 @@ def tc_spmv_fused(
     cand: jnp.ndarray,          # (n_padded,) bool
     alive: jnp.ndarray,         # (n_padded,) bool
     *,
+    col_flags: jnp.ndarray | None = None,
     interpret: Optional[bool] = None,
+    skip_dma: bool = False,
 ):
     """Fused phase ②+③ (DESIGN.md §6.3): one kernel pass emits N_c AND the
     updated (alive, in_mis_add) masks.
@@ -102,7 +105,9 @@ def tc_spmv_fused(
     n_c, new_alive, mis_add = tc_spmv_fused_pallas(
         tiled.tiles, tiled.tile_rows, tiled.tile_cols, rhs,
         cand.astype(jnp.int8), alive.astype(jnp.int8), tiled.n_block_rows,
+        col_flags=col_flags,
         interpret=_auto_interpret(interpret),
+        skip_dma=skip_dma,
     )
     # static per-graph coverage: which block-rows own at least one tile
     covered_rows = jnp.zeros((tiled.n_block_rows,), bool).at[

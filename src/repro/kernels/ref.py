@@ -8,8 +8,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-_NEG = jnp.int32(-(1 << 30))
+_NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
 
 
 def tc_spmv_ref(

@@ -140,7 +140,7 @@ def _spmv_fused_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_block_rows", "interpret")
+    jax.jit, static_argnames=("n_block_rows", "interpret", "skip_dma")
 )
 def tc_spmv_fused_pallas(
     tiles: jnp.ndarray,
@@ -153,6 +153,7 @@ def tc_spmv_fused_pallas(
     *,
     col_flags: jnp.ndarray | None = None,
     interpret: bool = True,
+    skip_dma: bool = False,
 ):
     """Fused phase ②+③: returns (n_c (nbr*T, L) f32, new_alive i8, mis_add i8)."""
     nt, T, _ = tiles.shape
@@ -161,12 +162,22 @@ def tc_spmv_fused_pallas(
     if col_flags is None:
         col_flags = jnp.ones((nbc,), dtype=jnp.int32)
 
+    if skip_dma:
+        # same trick as the split kernel: an empty-C slab's DMA is retargeted
+        # at block 0 — the MXU op is predicated off, the HBM read is saved.
+        def rhs_index(i, rows, cols, flags):
+            c = cols[i]
+            return (jnp.where(flags[c] != 0, c, 0), 0)
+    else:
+        def rhs_index(i, rows, cols, flags):
+            return (cols[i], 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(nt,),
         in_specs=[
             pl.BlockSpec((1, T, T), lambda i, rows, cols, flags: (i, 0, 0)),
-            pl.BlockSpec((T, L), lambda i, rows, cols, flags: (cols[i], 0)),
+            pl.BlockSpec((T, L), rhs_index),
             pl.BlockSpec((T, 1), lambda i, rows, cols, flags: (rows[i], 0)),
             pl.BlockSpec((T, 1), lambda i, rows, cols, flags: (rows[i], 0)),
         ],

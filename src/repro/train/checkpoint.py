@@ -15,6 +15,10 @@ Properties the restart logic relies on:
   so a checkpoint written on a (16,16) mesh restores onto (2,16,16) or a
   single host (elastic scaling; dist/elastic.py re-device_puts with the new
   sharding).  Leaves stream one at a time to bound host memory.
+* **zstandard is optional**: payloads are zstd-compressed when the module is
+  installed and fall back to stdlib zlib otherwise; the codec is recorded
+  per leaf in the manifest.  Restoring a zstd checkpoint on a machine
+  without zstandard raises a clear error naming the missing dependency.
 """
 from __future__ import annotations
 
@@ -29,10 +33,42 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
 
-_CTX = zstandard.ZstdCompressor(level=3)
-_DTX = zstandard.ZstdDecompressor()
+try:
+    import zstandard
+
+    _CTX = zstandard.ZstdCompressor(level=3)
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstandard = None
+    _CTX = None
+
+
+def _compress(raw: bytes) -> Tuple[bytes, str]:
+    if _CTX is not None:
+        return _CTX.compress(raw), "zstd"
+    return zlib.compress(raw, 6), "zlib"
+
+
+def _decompress(payload: bytes, codec: str) -> bytes:
+    """Raises CorruptCheckpoint on damaged frames, RuntimeError on a missing
+    codec module (a flipped bit in the frame header fails before the CRC)."""
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd compression but the "
+                "'zstandard' module is not installed — `pip install "
+                "zstandard` (see requirements.txt) or re-save the checkpoint"
+            )
+        try:
+            return zstandard.ZstdDecompressor().decompress(payload)
+        except zstandard.ZstdError as e:
+            raise CorruptCheckpoint(f"zstd frame: {e}") from e
+    if codec == "zlib":
+        try:
+            return zlib.decompress(payload)
+        except zlib.error as e:
+            raise CorruptCheckpoint(f"zlib stream: {e}") from e
+    raise CorruptCheckpoint(f"unknown codec {codec!r}")
 
 
 def _step_dir(ckpt_dir: str, step: int) -> str:
@@ -52,12 +88,14 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         raw = arr.tobytes()
-        fname = f"{i}.bin.zst"
+        payload, codec = _compress(raw)
+        fname = f"{i}.bin.zst" if codec == "zstd" else f"{i}.bin.z"
         with open(os.path.join(tmp, "arrays", fname), "wb") as f:
-            f.write(_CTX.compress(raw))
+            f.write(payload)
         manifest.append(
             dict(
                 file=fname,
+                codec=codec,
                 shape=list(arr.shape),
                 dtype=str(arr.dtype),
                 crc32=zlib.crc32(raw) & 0xFFFFFFFF,
@@ -79,6 +117,25 @@ class CorruptCheckpoint(RuntimeError):
     pass
 
 
+def _read_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
+def tree_shapes(ckpt_dir: str, step: int) -> Any:
+    """The checkpoint's pytree as ShapeDtypeStructs — no payload reads.
+
+    This is how `dist.elastic` builds target shardings before streaming the
+    arrays in (spec policies only need shapes)."""
+    meta = _read_manifest(_step_dir(ckpt_dir, step))
+    treedef = pickle.loads(bytes.fromhex(meta["treedef"]))
+    leaves = [
+        jax.ShapeDtypeStruct(tuple(m["shape"]), np.dtype(m["dtype"]))
+        for m in meta["leaves"]
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def restore(ckpt_dir: str, step: int, *, shardings: Any = None) -> Any:
     """Restore checkpoint `step`.  Raises CorruptCheckpoint on crc mismatch.
 
@@ -87,8 +144,7 @@ def restore(ckpt_dir: str, step: int, *, shardings: Any = None) -> Any:
     elastic-rescale path: any mesh works, the arrays are logical).
     """
     path = _step_dir(ckpt_dir, step)
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        meta = msgpack.unpackb(f.read())
+    meta = _read_manifest(path)
     treedef = pickle.loads(bytes.fromhex(meta["treedef"]))
     shard_leaves = (
         jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
@@ -97,9 +153,8 @@ def restore(ckpt_dir: str, step: int, *, shardings: Any = None) -> Any:
     for i, m in enumerate(meta["leaves"]):
         with open(os.path.join(path, "arrays", m["file"]), "rb") as f:
             try:
-                raw = _DTX.decompress(f.read())
-            except zstandard.ZstdError as e:
-                # a flipped bit in the frame header fails before the CRC runs
+                raw = _decompress(f.read(), m.get("codec", "zstd"))
+            except CorruptCheckpoint as e:
                 raise CorruptCheckpoint(f"{path} leaf {i}: {e}") from e
         if (zlib.crc32(raw) & 0xFFFFFFFF) != m["crc32"]:
             raise CorruptCheckpoint(f"{path} leaf {i}: crc mismatch")
