@@ -21,6 +21,7 @@ def main() -> None:
         ("fig1", "benchmarks.fig1_phase_profile"),
         ("fig4", "benchmarks.fig4_runtime"),
         ("kernel", "benchmarks.kernel_bench"),
+        ("serve", "benchmarks.serve_throughput"),
     ]
     failures = 0
     for name, module in sections:

@@ -1,0 +1,100 @@
+"""Serving throughput: graphs/sec vs batch size, cold vs warm plan cache.
+
+Two passes per batch size over the same request set:
+
+  cold   fresh service + empty plan cache: pays ingestion hashing, RCM/tile
+         preprocessing AND the jit compile of the batch bucket
+  warm   same service, same graphs again: plan-cache memory hits, bucket
+         already compiled — the steady-state serving rate
+
+Emits the usual CSV rows plus ``BENCH_serve.json`` (consumed by
+`make_tables` tooling / CI artefacts).  The acceptance bar for the serving
+layer is warm > cold at every batch size — if warm is not faster, the
+caches are not doing their job.
+
+    BENCH_ENGINE=tiled_ref PYTHONPATH=src python -m benchmarks.serve_throughput
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import QUICK, emit
+from repro.graphs.generators import erdos_renyi, grid2d, powerlaw
+from repro.serve_mis import MISService, ServeConfig
+
+OUT_PATH = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+# the jnp tile oracle is the honest CPU default; Pallas engines interpret
+# python-per-grid-step off-TPU, which would benchmark the interpreter.
+ENGINE = os.environ.get("BENCH_ENGINE", "tiled_ref")
+
+
+def _request_mix(n: int, scale: int, seed: int = 0):
+    """Heterogeneous small graphs, the serving layer's target workload."""
+    makers = [
+        lambda s: grid2d(scale // 8, 8, seed=s),
+        lambda s: powerlaw(scale, avg_deg=4.0, seed=s),
+        lambda s: erdos_renyi(scale, avg_deg=6.0, seed=s),
+        lambda s: erdos_renyi(scale // 2, avg_deg=3.0, seed=s),
+    ]
+    return [makers[i % len(makers)](seed + i // len(makers)) for i in range(n)]
+
+
+def _run_wave(service: MISService, graphs) -> float:
+    t0 = time.perf_counter()
+    for g in graphs:
+        service.submit(g)
+    responses = service.drain()
+    dt = time.perf_counter() - t0
+    assert all(r.valid for r in responses), "post-condition failed in benchmark"
+    return dt
+
+
+def main() -> None:
+    scale = 256 if QUICK else 1024
+    n_requests = 16 if QUICK else 64
+    batch_sizes = (1, 4, 8) if QUICK else (1, 2, 4, 8, 16)
+    results = []
+    for batch in batch_sizes:
+        graphs = _request_mix(n_requests, scale, seed=batch)
+        service = MISService(ServeConfig(
+            tile_size=32, engine=ENGINE, max_batch=batch, seed=0,
+        ))
+        t_cold = _run_wave(service, graphs)
+        t_warm = _run_wave(service, graphs)
+        cold_gps = n_requests / t_cold
+        warm_gps = n_requests / t_warm
+        results.append(dict(
+            engine=ENGINE,
+            batch_size=batch,
+            n_requests=n_requests,
+            scale=scale,
+            cold_s=round(t_cold, 4),
+            warm_s=round(t_warm, 4),
+            cold_graphs_per_s=round(cold_gps, 2),
+            warm_graphs_per_s=round(warm_gps, 2),
+            speedup=round(warm_gps / cold_gps, 2),
+            compiles=service.stats["compiles"],
+            plan_cache=dict(service.planner.stats),
+        ))
+        emit(f"serve_cold_b{batch}", t_cold / n_requests * 1e6,
+             f"{cold_gps:.1f} graphs/s")
+        emit(f"serve_warm_b{batch}", t_warm / n_requests * 1e6,
+             f"{warm_gps:.1f} graphs/s warm/cold={warm_gps / cold_gps:.2f}x")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(dict(bench="serve_throughput", engine=ENGINE,
+                       results=results), f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+
+    slow = [r for r in results if r["warm_graphs_per_s"] <= r["cold_graphs_per_s"]]
+    if slow:
+        raise AssertionError(
+            f"warm cache not faster than cold at batch sizes "
+            f"{[r['batch_size'] for r in slow]}"
+        )
+
+
+if __name__ == "__main__":
+    main()

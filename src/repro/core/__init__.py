@@ -20,7 +20,13 @@ from repro.core.tiling import (
     tile_stats,
     unpack_vertex_vector,
 )
-from repro.core.validate import cardinality, is_independent, is_maximal, is_valid_mis
+from repro.core.validate import (
+    cardinality,
+    is_independent,
+    is_maximal,
+    is_valid_mis,
+    is_valid_mis_jit,
+)
 from repro.core.distributed import (
     DistConfig,
     ShardedTiledGraph,
@@ -37,5 +43,6 @@ __all__ = [
     "BlockTiledGraph", "build_block_tiles", "pack_vertex_vector",
     "unpack_vertex_vector", "tile_stats",
     "cardinality", "is_independent", "is_maximal", "is_valid_mis",
+    "is_valid_mis_jit",
     "DistConfig", "ShardedTiledGraph", "build_distributed_mis", "shard_tiled",
 ]

@@ -124,10 +124,20 @@ class MISRoundState(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class EngineContext:
     """Immutable per-run bundle an engine closes over: the graph in both
-    representations plus the run config (lanes, phase1 policy, skip_dma)."""
+    representations plus the run config (lanes, phase1 policy, skip_dma).
+
+    `col_gate` is the batch-aware extension of the per-round flags: a static
+    (n_block_cols,) 0/1 vector ANDed into every round's `col_flags`.  The
+    block-diagonal batcher (`repro.serve_mis.batcher`) sets it to the
+    real-vertex occupancy of each block column, so a padded bucket's empty
+    trailing slots are pinned inactive from round 0 — the empty-C skip never
+    depends on the candidate vector reaching those slots first.  `None`
+    (single-graph runs) means "all columns may carry candidates".
+    """
     g: Graph
     tiled: BlockTiledGraph
     cfg: "TCMISConfig"
+    col_gate: Optional[jnp.ndarray] = None
 
 
 def phase3_update(
@@ -181,8 +191,13 @@ class RoundEngine:
     ) -> Optional[jnp.ndarray]:
         """Active block-column flags for the empty-C tile skip.  Candidates
         drive phase ②'s lane 0, so a column block with no candidate is dead
-        weight — flag it off.  Segment engines have no tiles to skip."""
-        return block_col_flags(cand, ctx.tiled.tile_size)
+        weight — flag it off.  Batched runs AND in the static `col_gate`
+        (columns of empty bucket slots stay dark in every round).  Segment
+        engines have no tiles to skip."""
+        flags = block_col_flags(cand, ctx.tiled.tile_size)
+        if ctx.col_gate is not None:
+            flags = flags * ctx.col_gate.astype(flags.dtype)
+        return flags
 
     # -- phase ② ----------------------------------------------------------
     def _pack_rhs(

@@ -68,16 +68,33 @@ def _pad_priorities(pri: Priorities, tiled: BlockTiledGraph) -> Priorities:
 
 
 def _setup(
-    g: Graph, tiled: BlockTiledGraph, key: jax.Array, config: TCMISConfig
+    g: Graph,
+    tiled: BlockTiledGraph,
+    key: jax.Array,
+    config: TCMISConfig,
+    priorities: Priorities | None = None,
+    alive0: jnp.ndarray | None = None,
+    col_gate: jnp.ndarray | None = None,
 ):
-    """Shared run prologue: engine resolution, context, priorities, state₀."""
+    """Shared run prologue: engine resolution, context, priorities, state₀.
+
+    `priorities` / `alive0` / `col_gate` are the batch-serving overrides
+    (repro.serve_mis): a block-diagonal packed graph must carry *per-graph*
+    priorities (each member graph's own key and degree statistics — Eq. 1's
+    d̄ is per-graph, so batch-wide `make_priorities` would change every
+    member's solution) and must start padding-slot vertices dead so they
+    never enter the MIS or cost a round.  When `priorities` is given, `key`
+    is unused; vectors may be `n_nodes`- or `n_padded`-long.
+    """
     engine = get_engine(config.backend)
-    ctx = EngineContext(g=g, tiled=tiled, cfg=config)
-    pri = _pad_priorities(
-        make_priorities(config.heuristic, key, g.n_nodes, g.degrees()), tiled
-    )
+    ctx = EngineContext(g=g, tiled=tiled, cfg=config, col_gate=col_gate)
+    if priorities is None:
+        priorities = make_priorities(config.heuristic, key, g.n_nodes, g.degrees())
+    pri = _pad_priorities(priorities, tiled)
+    if alive0 is None:
+        alive0 = jnp.ones((g.n_nodes,), dtype=bool)
     state0 = MISRoundState(
-        alive=pack_vertex_vector(jnp.ones((g.n_nodes,), dtype=bool), tiled),
+        alive=pack_vertex_vector(alive0.astype(bool), tiled),
         in_mis=jnp.zeros((tiled.n_padded,), dtype=bool),
         rnd=jnp.int32(0),
     )
@@ -89,9 +106,21 @@ def tc_mis(
     tiled: BlockTiledGraph,
     key: jax.Array,
     config: TCMISConfig = TCMISConfig(),
+    *,
+    priorities: Priorities | None = None,
+    alive0: jnp.ndarray | None = None,
+    col_gate: jnp.ndarray | None = None,
 ) -> MISResult:
-    """Run TC-MIS to convergence inside one `lax.while_loop`."""
-    engine, ctx, pri, state0 = _setup(g, tiled, key, config)
+    """Run TC-MIS to convergence inside one `lax.while_loop`.
+
+    The keyword overrides serve the block-diagonal batch path (see `_setup`);
+    the whole function is jit-compatible with `config` static, which is how
+    `repro.serve_mis.service` amortises ONE compiled dispatch per shape
+    bucket over every request in a batch.
+    """
+    engine, ctx, pri, state0 = _setup(
+        g, tiled, key, config, priorities, alive0, col_gate
+    )
 
     def cond(state: MISRoundState):
         return jnp.any(state.alive) & (state.rnd < config.max_rounds)
@@ -116,6 +145,10 @@ def run_phases(
     key: jax.Array,
     config: TCMISConfig = TCMISConfig(),
     warmup: bool = True,
+    *,
+    priorities: Priorities | None = None,
+    alive0: jnp.ndarray | None = None,
+    col_gate: jnp.ndarray | None = None,
 ) -> Tuple[MISResult, Dict[str, float]]:
     """Same engine round body, stepped from python with per-phase timers.
 
@@ -124,7 +157,9 @@ def run_phases(
     For fused engines the ②+③ kernel pass is charged to phase2 and the
     residual state merge to phase3.
     """
-    engine, ctx, pri, state0 = _setup(g, tiled, key, config)
+    engine, ctx, pri, state0 = _setup(
+        g, tiled, key, config, priorities, alive0, col_gate
+    )
 
     p1 = jax.jit(lambda alive: engine.phase1_candidates(ctx, pri, alive))
     if engine.fused:

@@ -24,6 +24,13 @@ import numpy as np
 from repro.graphs.graph import Graph
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two ≥ x (≥ 1) — the shape-bucket quantiser shared by
+    the serving batcher and the bucketed validator (one definition, or their
+    bucket shapes drift apart)."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class BlockTiledGraph:

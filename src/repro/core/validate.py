@@ -1,37 +1,104 @@
 """MIS solution validators — the invariants every algorithm must satisfy.
 
-Used by tests (property-based, vs networkx) and by the benchmark harness as a
-post-condition on every reported number.
+Used by tests (property-based, vs networkx), by the benchmark harness as a
+post-condition on every reported number, and by the serving layer
+(`repro.serve_mis.service`) as a post-condition on every response.
+
+The serving hot path wants both invariants from ONE jitted dispatch (one
+host↔device round-trip per response, not three): `is_valid_mis_jit` fuses the
+independence and maximality checks into a single compiled call and
+`is_valid_mis` rides on it.  Its jitted core takes raw shape-BUCKETED arrays
+(edge/vertex arrays padded to powers of two, with explicit validity masks),
+so a long-running service validating graphs of many sizes compiles
+O(log|V|·log|E|) validator programs — not one per distinct graph shape.
+The single-invariant `is_independent` / `is_maximal` forms share the graph's
+exact shapes and compute only their own invariant (eagerly — callers that
+want one check shouldn't pay for two).
 """
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.spmv import neighbor_any_segment
+from repro.core.tiling import next_pow2
 from repro.graphs.graph import Graph
 
 
+def _independent(g: Graph, in_mis: jnp.ndarray) -> jnp.ndarray:
+    """Scalar bool: no edge has both endpoints selected."""
+    both = g.edge_mask & in_mis[g.senders] & in_mis[g.receivers]
+    return ~jnp.any(both)
+
+
+def _maximal(g: Graph, in_mis: jnp.ndarray) -> jnp.ndarray:
+    """Scalar bool: every unselected vertex has a selected neighbour."""
+    return jnp.all(in_mis | neighbor_any_segment(g, in_mis))
+
+
 @jax.jit
-def _checks(senders, receivers, edge_mask, in_mis, n_nodes_arr):
-    del n_nodes_arr
-    return in_mis
+def _fused_checks_masked(
+    senders: jnp.ndarray,     # (e_pad,) int32; padding rows point at a dead slot
+    receivers: jnp.ndarray,   # (e_pad,) int32
+    edge_ok: jnp.ndarray,     # (e_pad,) bool — False on padding rows
+    in_mis: jnp.ndarray,      # (n_pad,) bool — False on padding slots
+    vertex_ok: jnp.ndarray,   # (n_pad,) bool — False on padding slots
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Both invariants in one compiled pass; jit cache keyed on the padded
+    shapes only (no per-graph static fields — raw arrays, not a Graph)."""
+    sel = in_mis & vertex_ok
+    both = edge_ok & sel[senders] & sel[receivers]
+    contrib = (edge_ok & sel[senders]).astype(jnp.int32)
+    nbr = jax.ops.segment_max(
+        contrib, receivers, num_segments=sel.shape[0]
+    )
+    covered = sel | (nbr > 0)
+    return ~jnp.any(both), jnp.all(covered | ~vertex_ok)
+
+
+def is_valid_mis_jit(g: Graph, in_mis: jnp.ndarray) -> Tuple[bool, bool]:
+    """Fused validity check: returns ``(independent, maximal)`` python bools
+    from a single jitted call — the serving layer's per-response post-condition.
+
+    Inputs are padded host-side to pow2 shape buckets before the dispatch, so
+    validating a stream of differently-sized graphs reuses a small, bounded
+    set of compiled programs.
+    """
+    n, e = g.n_nodes, g.n_edges
+    n_pad = next_pow2(n + 1)            # ≥ n+1: slot n absorbs sentinel edges
+    e_pad = next_pow2(max(e, 1))
+    s = np.full(e_pad, n, np.int32)
+    r = np.full(e_pad, n, np.int32)
+    s[:e] = np.asarray(g.senders)[:e]
+    r[:e] = np.asarray(g.receivers)[:e]
+    edge_ok = np.zeros(e_pad, bool)
+    edge_ok[:e] = True
+    mis = np.zeros(n_pad, bool)
+    mis[:n] = np.asarray(in_mis)[:n].astype(bool)
+    vertex_ok = np.zeros(n_pad, bool)
+    vertex_ok[:n] = True
+    independent, maximal = _fused_checks_masked(
+        jnp.asarray(s), jnp.asarray(r), jnp.asarray(edge_ok),
+        jnp.asarray(mis), jnp.asarray(vertex_ok),
+    )
+    return bool(independent), bool(maximal)
 
 
 def is_independent(g: Graph, in_mis: jnp.ndarray) -> bool:
-    """No edge has both endpoints selected."""
-    both = g.edge_mask & in_mis[g.senders] & in_mis[g.receivers]
-    return not bool(jnp.any(both))
+    """No edge has both endpoints selected (single-invariant form)."""
+    return bool(_independent(g, in_mis.astype(bool)))
 
 
 def is_maximal(g: Graph, in_mis: jnp.ndarray) -> bool:
-    """Every unselected vertex has a selected neighbour."""
-    covered = in_mis | neighbor_any_segment(g, in_mis)
-    return bool(jnp.all(covered))
+    """Every unselected vertex has a selected neighbour (single-invariant)."""
+    return bool(_maximal(g, in_mis.astype(bool)))
 
 
 def is_valid_mis(g: Graph, in_mis: jnp.ndarray) -> bool:
-    return is_independent(g, in_mis) and is_maximal(g, in_mis)
+    return all(is_valid_mis_jit(g, in_mis))
 
 
 def cardinality(in_mis: jnp.ndarray) -> int:

@@ -115,11 +115,25 @@ def build_csr(g: Graph) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def pad_graph(g: Graph, e_pad: int) -> Graph:
-    """Return a copy padded (with the dummy-node sentinel) to ``e_pad`` edges."""
+    """Return a copy padded (with the dummy-node sentinel) to ``e_pad`` edges.
+
+    ``e_pad`` below the current padding but at or above ``n_edges`` *shrinks*
+    the pad: every row past ``n_edges`` is sentinel-only, so slicing it off is
+    lossless.  This is what lets zero-edge graphs round-trip through
+    ``from_edges(pad_to=...)`` → ``pad_graph`` (the serving batcher re-buckets
+    pad sizes and must accept empty and singleton graphs unchanged).
+    """
     if e_pad < g.n_edges:
         raise ValueError(f"pad {e_pad} < real edges {g.n_edges}")
     if e_pad == g.e_pad:
         return g
+    if e_pad < g.e_pad:
+        return Graph(
+            senders=g.senders[:e_pad],
+            receivers=g.receivers[:e_pad],
+            n_nodes=g.n_nodes,
+            n_edges=g.n_edges,
+        )
     extra = e_pad - g.e_pad
     pad = jnp.full((extra,), g.n_nodes, dtype=jnp.int32)
     return Graph(

@@ -1,0 +1,30 @@
+"""repro.serve_mis — the serving layer over the TC-MIS round engines.
+
+Turns the single-graph reproduction into a request-driven system
+(DESIGN.md §9):
+
+  io        file ingestion (SNAP edge lists, MatrixMarket, DIMACS)
+  planner   content-hashed tile-plan cache (memory + disk)
+  batcher   block-diagonal multi-graph packing into shape buckets
+  service   request queue → one jitted dispatch per batch → validated
+            per-graph responses with serving stats
+
+CLI: ``python -m repro.serve_mis --once graph1.mtx graph2.edges``
+"""
+from repro.serve_mis.io import GraphParseError, detect_format, load_graph
+from repro.serve_mis.planner import PlanCache, TilePlan, build_plan, plan_cache_key
+from repro.serve_mis.batcher import (
+    Bucket,
+    PackedBatch,
+    bucket_for,
+    pack_batch,
+    request_key,
+)
+from repro.serve_mis.service import MISService, Request, Response, ServeConfig
+
+__all__ = [
+    "GraphParseError", "detect_format", "load_graph",
+    "PlanCache", "TilePlan", "build_plan", "plan_cache_key",
+    "Bucket", "PackedBatch", "bucket_for", "pack_batch", "request_key",
+    "MISService", "Request", "Response", "ServeConfig",
+]

@@ -1,0 +1,104 @@
+"""MIS serving CLI.
+
+One-shot (CI smoke / batch jobs): solve the named files and exit non-zero
+unless every response is a validated MIS:
+
+    PYTHONPATH=src python -m repro.serve_mis --once \
+        tests/fixtures/tiny.mtx tests/fixtures/tiny.edges
+
+Streaming: with no ``--once``, graph file paths are read one per line from
+stdin and dispatched whenever a full batch accumulates (EOF drains the
+queue) — `cat work.list | python -m repro.serve_mis`.
+
+``--repeat N`` submits every input N times — the way to watch the tile-plan
+cache and compiled-program reuse do their job in the stats output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.serve_mis.service import MISService, ServeConfig
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="python -m repro.serve_mis")
+    p.add_argument("paths", nargs="*", help="graph files (.mtx/.edges/.dimacs/...)")
+    p.add_argument("--once", action="store_true",
+                   help="solve the given paths, print stats, exit")
+    p.add_argument("--fmt", default=None, choices=["edgelist", "mtx", "dimacs"],
+                   help="override format auto-detection")
+    p.add_argument("--repeat", type=int, default=1,
+                   help="submit every input N times (exercises the plan cache)")
+    p.add_argument("--tile-size", type=int, default=32)
+    p.add_argument("--engine", default="fused_pallas")
+    p.add_argument("--heuristic", default="h3")
+    p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--reorder", default=None, choices=["rcm"])
+    p.add_argument("--cache-dir", default=None,
+                   help="persist tile plans here (content-addressed .npz)")
+    p.add_argument("--seed", type=int, default=0)
+    return p
+
+
+def main(argv=None) -> int:
+    args = _parser().parse_args(argv)
+    service = MISService(ServeConfig(
+        tile_size=args.tile_size,
+        engine=args.engine,
+        heuristic=args.heuristic,
+        max_batch=args.max_batch,
+        reorder=args.reorder,
+        cache_dir=args.cache_dir,
+        seed=args.seed,
+    ))
+
+    def emit(responses) -> int:
+        bad = 0
+        for r in responses:
+            print(json.dumps(r.summary()), flush=True)
+            bad += 0 if r.valid else 1
+        return bad
+
+    def submit(path) -> int:
+        """One bad request must not kill the stream: report it, keep serving."""
+        try:
+            for _ in range(args.repeat):
+                service.submit(path, fmt=args.fmt)
+            return 0
+        except (OSError, ValueError) as e:  # missing file, GraphParseError, ...
+            print(json.dumps(dict(source=str(path), valid=False,
+                                  error=f"{type(e).__name__}: {e}")), flush=True)
+            return args.repeat
+
+    failures = 0
+    if args.once:
+        if not args.paths:
+            print("--once needs at least one graph file", file=sys.stderr)
+            return 2
+        for path in args.paths:
+            failures += submit(path)
+        failures += emit(service.drain())
+    else:
+        sources = args.paths or (line.strip() for line in sys.stdin)
+        for src in sources:
+            if not src:
+                continue
+            failures += submit(src)
+            while service.pending >= service.config.max_batch:
+                failures += emit(service.step())
+        failures += emit(service.drain())
+
+    s, p = service.stats, service.planner.stats
+    print(
+        f"# served={s['requests']} batches={s['batches']} "
+        f"compiles={s['compiles']} plan_cache mem={p['mem_hits']} "
+        f"disk={p['disk_hits']} built={p['misses']} failures={failures}",
+        file=sys.stderr,
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

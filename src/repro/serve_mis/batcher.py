@@ -1,0 +1,283 @@
+"""Block-diagonal multi-graph packing: one engine dispatch, many graphs.
+
+Small-graph MIS requests are latency-dominated by dispatch, not compute, so
+the service amortises ONE jitted `tc_mis` invocation over a whole batch.
+The packing is block-diagonal BSR concatenation of cached `TilePlan`s:
+
+* every member graph's vertex range is padded up to a whole number of
+  `T`-sized blocks before it is offset, so **no tile ever spans two
+  graphs** — the batch adjacency is exactly block-diagonal and each
+  member's neighbourhood structure is untouched;
+* priorities are computed **per member** from its own key and degree
+  statistics (Eq. 1's d̄ is a per-graph mean), then placed at the member's
+  offset.  Zero cross-graph edges + per-graph priorities ⇒ each slot's
+  round dynamics are bit-identical to a solo `tc_mis` run of that member,
+  so the packed solve provably returns every member's solo MIS;
+* padding-slot vertices start **dead** (`alive0`) — they never join the
+  set, never cost a round — and the static `col_gate` pins their block
+  columns inactive for the engine's empty-C tile skip (core.engine);
+* batch shapes are rounded up to **buckets** (powers of two over the
+  block, tile and edge counts), so request mixes of many sizes land on a
+  bounded set of compiled programs.  `Graph.n_edges` and
+  `BlockTiledGraph.n_tiles` are jit-STATIC pytree fields, so the packed
+  containers declare the *bucket* counts, not the real ones — otherwise
+  every distinct batch composition would be a fresh XLA compile and the
+  bucket would bound nothing.  That makes every static field a pure
+  function of the bucket.  It is sound because the padding is inert in
+  every op the batch reaches: sentinel edges scatter into the dropped
+  dummy segment row, and padding tiles are all-zero and pinned to the
+  last real block-row (the same convention `build_block_tiles` uses).
+  The real counts live in `PackedBatch.n_real_edges` / `n_real_tiles`.
+  Corollary: never run edge-mask consumers that enumerate "real" edges
+  (`build_csr`, `to_networkx`, `is_valid_mis`) on `batch.g` — validate
+  per member on its plan graph, as the service does.
+
+Tile lists concatenate from the plan cache — a batch never re-tiles its
+members, it offsets their cached tiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.heuristics import Priorities, make_priorities
+from repro.core.spmv import _NEG
+from repro.core.tiling import BlockTiledGraph, next_pow2
+from repro.graphs.graph import Graph
+from repro.serve_mis.planner import TilePlan
+
+
+class Bucket(NamedTuple):
+    """Static shape class of a packed batch — the jit-compilation key."""
+    tile_size: int
+    n_blocks: int      # total block rows/cols (incl. empty trailing slots)
+    n_tiles_pad: int   # padded stored-tile count
+    e_pad: int         # padded half-edge count
+
+
+def bucket_for(plans: Sequence[TilePlan], tile_size: int) -> Bucket:
+    """Smallest bucket that fits `plans`: pow2 rounding bounds the number of
+    distinct compiled programs to O(log max_size) per dimension."""
+    blocks = sum(p.n_blocks for p in plans)
+    tiles = sum(p.tiled.n_tiles for p in plans)
+    edges = sum(p.g.n_edges for p in plans)
+    return Bucket(
+        tile_size=int(tile_size),
+        n_blocks=next_pow2(max(blocks, 1)),
+        n_tiles_pad=next_pow2(max(tiles, 8)),
+        e_pad=next_pow2(max(edges, 8)),
+    )
+
+
+def request_key(base_key: jax.Array, plan: TilePlan) -> jax.Array:
+    """Per-graph PRNG key, derived from graph *content* so the priorities a
+    member gets do not depend on its batch, slot, or arrival order — the
+    property that makes packed results reproducible against solo runs."""
+    return jax.random.fold_in(base_key, int(plan.key[:8], 16) & 0x7FFFFFFF)
+
+
+# host-side (select, resolve) per plan content hash — see pack_batch.
+# Bounded FIFO: priority vectors are small next to plans, but a production
+# stream of distinct graphs must not grow host memory without limit.
+PriorityCache = Dict[str, Tuple[np.ndarray, Optional[np.ndarray]]]
+PRIORITY_CACHE_CAP = 4096
+
+
+def _member_priorities(
+    plan: TilePlan,
+    key: jax.Array,
+    heuristic: str,
+    cache: Optional[PriorityCache],
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Priorities for one member, as host arrays ready to place in a slot.
+
+    Priorities are a pure function of (plan content, heuristic, key), and
+    with `request_key` the key itself is content-derived — so a warm-path
+    batch of already-seen graphs skips the per-member `degrees()` dispatch
+    and priority construction entirely via `cache` (keyed by plan content
+    hash; callers mixing base keys or heuristics must use separate caches,
+    as `MISService` does by owning one cache per service instance).
+    """
+    if cache is not None and plan.key in cache:
+        return cache[plan.key]
+    pri = make_priorities(heuristic, key, plan.n_nodes, plan.g.degrees())
+    entry = (
+        np.asarray(pri.select),
+        None if pri.resolve is None else np.asarray(pri.resolve),
+    )
+    if cache is not None:
+        cache[plan.key] = entry
+        while len(cache) > PRIORITY_CACHE_CAP:
+            del cache[next(iter(cache))]  # FIFO eviction (dicts keep order)
+    return entry
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedBatch:
+    """A block-diagonal batch, ready for one `tc_mis` dispatch."""
+    g: Graph                    # block-diagonal graph, n_nodes = n_blocks*T
+    tiled: BlockTiledGraph
+    priorities: Priorities      # (n_nodes,), _NEG in padding slots
+    alive0: jnp.ndarray         # (n_nodes,) bool, False in padding slots
+    col_gate: jnp.ndarray       # (n_blocks,) int32 real-vertex occupancy
+    offsets: Tuple[int, ...]    # member vertex offsets (multiples of T)
+    sizes: Tuple[int, ...]      # member real vertex counts
+    bucket: Bucket
+    n_real_edges: int = 0       # g/tiled declare BUCKET counts (static jit
+    n_real_tiles: int = 0       # keys); the real totals live here
+
+    @property
+    def n_graphs(self) -> int:
+        return len(self.sizes)
+
+    def signature(self) -> str:
+        """Shape-class id: batches with equal signatures reuse one compile."""
+        b = self.bucket
+        resolve = "r" if self.priorities.resolve is not None else "-"
+        return f"T{b.tile_size}.b{b.n_blocks}.t{b.n_tiles_pad}.e{b.e_pad}.{resolve}"
+
+    def unpack(self, x) -> List[np.ndarray]:
+        """Slice a packed per-vertex vector into per-member vectors (plan ids)."""
+        x = np.asarray(x)
+        return [x[off : off + n] for off, n in zip(self.offsets, self.sizes)]
+
+
+def pack_batch(
+    plans: Sequence[TilePlan],
+    keys: Sequence[jax.Array],
+    heuristic: str,
+    *,
+    bucket: Optional[Bucket] = None,
+    priority_cache: Optional[PriorityCache] = None,
+) -> PackedBatch:
+    """Concatenate cached per-graph plans into one block-diagonal batch."""
+    if not plans:
+        raise ValueError("pack_batch needs at least one plan")
+    if len(keys) != len(plans):
+        raise ValueError(f"{len(plans)} plans but {len(keys)} keys")
+    T = plans[0].tiled.tile_size
+    if any(p.tiled.tile_size != T for p in plans):
+        raise ValueError("all plans in a batch must share tile_size")
+    if bucket is None:
+        bucket = bucket_for(plans, T)
+    need = bucket_for(plans, T)
+    if (need.n_blocks > bucket.n_blocks or need.n_tiles_pad > bucket.n_tiles_pad
+            or need.e_pad > bucket.e_pad or bucket.tile_size != T):
+        raise ValueError(f"batch needs {need}, bucket {bucket} too small")
+
+    n_total = bucket.n_blocks * T
+    neg = int(_NEG)
+
+    # per-member priorities: each member's OWN key and degree statistics
+    pris = [
+        _member_priorities(p, key, heuristic, priority_cache)
+        for p, key in zip(plans, keys)
+    ]
+    has_resolve = pris[0][1] is not None
+
+    offsets: List[int] = []
+    sizes: List[int] = []
+    sel = np.full(n_total, neg, dtype=np.int32)
+    res = np.full(n_total, neg, dtype=np.int32) if has_resolve else None
+    alive0 = np.zeros(n_total, dtype=bool)
+    col_gate = np.zeros(bucket.n_blocks, dtype=np.int32)
+
+    src_parts: List[np.ndarray] = []
+    dst_parts: List[np.ndarray] = []
+    tile_parts: List[np.ndarray] = []
+    row_parts: List[np.ndarray] = []
+    col_parts: List[np.ndarray] = []
+
+    boff = 0
+    for plan, (sel_np, res_np) in zip(plans, pris):
+        g, t = plan.g, plan.tiled
+        voff = boff * T
+        offsets.append(voff)
+        sizes.append(g.n_nodes)
+
+        sel[voff : voff + g.n_nodes] = sel_np
+        if has_resolve:
+            res[voff : voff + g.n_nodes] = res_np
+        alive0[voff : voff + g.n_nodes] = True
+        col_gate[boff : boff + plan.n_blocks] = 1
+
+        src_parts.append(np.asarray(g.senders)[: g.n_edges].astype(np.int64) + voff)
+        dst_parts.append(np.asarray(g.receivers)[: g.n_edges].astype(np.int64) + voff)
+        if t.n_tiles:
+            tile_parts.append(np.asarray(t.tiles)[: t.n_tiles])
+            row_parts.append(np.asarray(t.tile_rows)[: t.n_tiles] + boff)
+            col_parts.append(np.asarray(t.tile_cols)[: t.n_tiles] + boff)
+        boff += plan.n_blocks
+
+    # -- edges: concat + sentinel pad to the bucket's static e_pad.  The
+    # Graph DECLARES n_edges = e_pad (see module docstring): n_edges is a
+    # static jit key, and sentinel half-edges are inert in the segment ops
+    # (their contributions land in the dropped dummy segment row).
+    s = np.concatenate(src_parts) if src_parts else np.zeros(0, np.int64)
+    r = np.concatenate(dst_parts) if dst_parts else np.zeros(0, np.int64)
+    n_real_edges = int(s.shape[0])
+    pad = np.full(bucket.e_pad - n_real_edges, n_total, dtype=np.int64)
+    batch_g = Graph(
+        senders=jnp.asarray(np.concatenate([s, pad]).astype(np.int32)),
+        receivers=jnp.asarray(np.concatenate([r, pad]).astype(np.int32)),
+        n_nodes=n_total,
+        n_edges=bucket.e_pad,
+    )
+
+    # -- tiles: concat + zero-tile pad pinned to the last real block-row ---
+    if tile_parts:
+        tiles = np.concatenate(tile_parts)
+        rows = np.concatenate(row_parts).astype(np.int32)
+        cols = np.concatenate(col_parts).astype(np.int32)
+    else:
+        tiles = np.zeros((0, T, T), dtype=np.int8)
+        rows = np.zeros(0, dtype=np.int32)
+        cols = np.zeros(0, dtype=np.int32)
+    n_real_tiles = int(tiles.shape[0])
+    n_pad_tiles = bucket.n_tiles_pad - n_real_tiles
+    last_row = np.int32(rows[-1]) if n_real_tiles else np.int32(0)
+    tiles = np.concatenate([tiles, np.zeros((n_pad_tiles, T, T), np.int8)])
+    rows = np.concatenate([rows, np.full(n_pad_tiles, last_row, np.int32)])
+    cols = np.concatenate([cols, np.zeros(n_pad_tiles, np.int32)])
+
+    counts = np.bincount(rows[:n_real_tiles], minlength=bucket.n_blocks)
+    row_starts = np.zeros(bucket.n_blocks + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_starts[1:])
+
+    # n_tiles DECLARES the bucket count (static jit key; see docstring).
+    # All-zero padding tiles pinned to the last real block-row accumulate
+    # nothing, and counting them "covered" only routes that row through the
+    # kernel epilogue it already takes (zero real tiles ⇒ the zero tile
+    # computes exactly the trivial n_c=0 rule the wrapper would patch in).
+    batch_tiled = BlockTiledGraph(
+        tiles=jnp.asarray(tiles),
+        tile_rows=jnp.asarray(rows),
+        tile_cols=jnp.asarray(cols),
+        row_starts=jnp.asarray(row_starts),
+        n_tiles=bucket.n_tiles_pad,
+        n_nodes=n_total,
+        tile_size=T,
+        n_block_rows=bucket.n_blocks,
+        n_block_cols=bucket.n_blocks,
+    )
+
+    priorities = Priorities(
+        select=jnp.asarray(sel),
+        resolve=jnp.asarray(res) if has_resolve else None,
+    )
+    return PackedBatch(
+        g=batch_g,
+        tiled=batch_tiled,
+        priorities=priorities,
+        alive0=jnp.asarray(alive0),
+        col_gate=jnp.asarray(col_gate),
+        offsets=tuple(offsets),
+        sizes=tuple(sizes),
+        bucket=bucket,
+        n_real_edges=n_real_edges,
+        n_real_tiles=n_real_tiles,
+    )

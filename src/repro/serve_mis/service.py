@@ -1,0 +1,242 @@
+"""The MIS serving loop: requests in, validated per-graph solutions out.
+
+Request lifecycle (DESIGN.md §9):
+
+    submit ─ ingest (io) ─ plan (planner cache) ─┐
+    submit ─ ingest ─ plan ───────────────────────┤ queue
+    ...                                           │
+                 step(): pop ≤ max_batch ─ pack (batcher) ─ ONE jitted
+                 tc_mis dispatch ─ unpack ─ fused validity post-condition
+                 per member ─ Response
+
+Every response carries per-request stats — queue time, plan-cache layer
+(mem/disk/built), bucket signature, whether this batch reused a compiled
+program, batch solve time, rounds, |MIS| — and the post-condition verdict
+from `validate.is_valid_mis_jit` (one fused jitted check per member).
+
+The jit story: `_solve` is one `jax.jit` wrapper over `tc_mis`; its cache is
+keyed by the packed batch's static shapes, which the batcher buckets, so a
+steady request mix converges onto a handful of compiled programs.  The
+service additionally tracks bucket signatures it has seen to report
+compile reuse per batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.core.engine import get_engine
+from repro.core.tc_mis import TCMISConfig, tc_mis
+from repro.core.validate import is_valid_mis_jit
+from repro.graphs.graph import Graph
+from repro.serve_mis.batcher import PriorityCache, pack_batch, request_key
+from repro.serve_mis.io import load_graph
+from repro.serve_mis.planner import PlanCache, TilePlan
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs of the serving layer (the algorithm knobs mirror TCMISConfig)."""
+    tile_size: int = 32
+    heuristic: str = "h3"
+    engine: str = "fused_pallas"   # any registered round engine
+    phase1: str = "segment"
+    lanes: int = 8
+    skip_dma: bool = False
+    max_rounds: int = 1024
+    max_batch: int = 8             # requests per packed dispatch
+    reorder: Optional[str] = None  # None | 'rcm'
+    cache_dir: Optional[str] = None
+    plan_cache_entries: int = 256  # memory-layer LRU bound (disk is unbounded)
+    validate: bool = True
+    seed: int = 0
+
+    def mis_config(self) -> TCMISConfig:
+        return TCMISConfig(
+            heuristic=self.heuristic,
+            lanes=self.lanes,
+            backend=self.engine,
+            phase1=self.phase1,
+            skip_dma=self.skip_dma,
+            max_rounds=self.max_rounds,
+        )
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    source: str
+    plan: TilePlan
+    plan_status: str      # mem | disk | built
+    t_enqueue: float
+
+
+@dataclasses.dataclass
+class Response:
+    id: int
+    source: str
+    in_mis: np.ndarray    # (n_nodes,) bool, ORIGINAL vertex ids
+    mis_size: int
+    independent: bool
+    maximal: bool
+    converged: bool       # BATCH-global (the shared while_loop's flag)
+    rounds: int
+    stats: Dict[str, object]
+
+    @property
+    def valid(self) -> bool:
+        """Per-member verdict — deliberately NOT ANDed with `converged`.
+
+        `converged` is batch-global, so one max_rounds-limited member must
+        not poison its batchmates.  The invariants alone are exact per
+        member: a member cut off mid-solve still has alive vertices, and an
+        alive vertex is by construction unselected with no selected
+        neighbour — which is precisely a maximality violation, so
+        `maximal` is False for any unconverged member.
+        """
+        return self.independent and self.maximal
+
+    def summary(self) -> Dict[str, object]:
+        """JSON-friendly per-request record (solution vector elided)."""
+        return dict(
+            id=self.id,
+            source=self.source,
+            n_nodes=int(self.in_mis.shape[0]),
+            mis_size=self.mis_size,
+            valid=self.valid,
+            rounds=self.rounds,
+            **self.stats,
+        )
+
+
+class MISService:
+    """Request-queue MIS worker over the plan cache + block-diagonal batcher."""
+
+    def __init__(self, config: ServeConfig = ServeConfig()):
+        get_engine(config.engine)  # fail fast, before any request is queued
+        self.config = config
+        self.planner = PlanCache(
+            tile_size=config.tile_size,
+            reorder=config.reorder,
+            cache_dir=config.cache_dir,
+            max_mem_entries=config.plan_cache_entries,
+        )
+        self._queue: Deque[Request] = deque()
+        self._next_id = 0
+        self._base_key = jax.random.key(config.seed)
+        # sound per service instance: one base key, one heuristic (batcher)
+        self._priority_cache: PriorityCache = {}
+        self._seen_buckets: set = set()
+        self.stats = {"requests": 0, "batches": 0, "compiles": 0}
+        mis_cfg = config.mis_config()
+        self._solve = jax.jit(
+            lambda g, tiled, pri, alive0, gate: tc_mis(
+                g, tiled, self._base_key, mis_cfg,
+                priorities=pri, alive0=alive0, col_gate=gate,
+            )
+        )
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(
+        self,
+        source: Union[str, Graph],
+        *,
+        fmt: Optional[str] = None,
+        n_nodes: Optional[int] = None,
+    ) -> int:
+        """Ingest + plan (cache-aware) and enqueue; returns the request id."""
+        if isinstance(source, Graph):
+            graph, name = source, f"<graph:{source.n_nodes}v>"
+        else:
+            name = str(source)
+            graph = load_graph(name, fmt=fmt, n_nodes=n_nodes)
+        plan, status = self.planner.plan(graph)
+        req = Request(
+            id=self._next_id,
+            source=name,
+            plan=plan,
+            plan_status=status,
+            t_enqueue=time.perf_counter(),
+        )
+        self._next_id += 1
+        self.stats["requests"] += 1
+        self._queue.append(req)
+        return req.id
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- the worker step ----------------------------------------------------
+
+    def step(self) -> List[Response]:
+        """Pop ≤ max_batch requests, solve them in ONE dispatch, respond."""
+        if not self._queue:
+            return []
+        reqs = [
+            self._queue.popleft()
+            for _ in range(min(self.config.max_batch, len(self._queue)))
+        ]
+        t_pop = time.perf_counter()
+        batch = pack_batch(
+            [r.plan for r in reqs],
+            [request_key(self._base_key, r.plan) for r in reqs],
+            self.config.heuristic,
+            priority_cache=self._priority_cache,
+        )
+        sig = batch.signature()
+        reused = sig in self._seen_buckets
+        self._seen_buckets.add(sig)
+        self.stats["batches"] += 1
+        if not reused:
+            self.stats["compiles"] += 1
+
+        t0 = time.perf_counter()
+        result = self._solve(
+            batch.g, batch.tiled, batch.priorities, batch.alive0, batch.col_gate
+        )
+        jax.block_until_ready(result.in_mis)
+        solve_ms = (time.perf_counter() - t0) * 1e3
+        rounds = int(result.rounds)
+        converged = bool(result.converged)
+
+        responses = []
+        for req, mis_plan_ids in zip(reqs, batch.unpack(result.in_mis)):
+            independent = maximal = True
+            if self.config.validate:
+                independent, maximal = is_valid_mis_jit(
+                    req.plan.g, jax.numpy.asarray(mis_plan_ids)
+                )
+            in_mis = req.plan.to_original(mis_plan_ids).astype(bool)
+            responses.append(Response(
+                id=req.id,
+                source=req.source,
+                in_mis=in_mis,
+                mis_size=int(in_mis.sum()),
+                independent=independent,
+                maximal=maximal,
+                converged=converged,
+                rounds=rounds,
+                stats=dict(
+                    queue_ms=round((t_pop - req.t_enqueue) * 1e3, 3),
+                    solve_ms=round(solve_ms, 3),
+                    plan_cache=req.plan_status,
+                    bucket=sig,
+                    compile="reused" if reused else "compiled",
+                    batch_size=len(reqs),
+                ),
+            ))
+        return responses
+
+    def drain(self) -> List[Response]:
+        """Run worker steps until the queue is empty."""
+        out: List[Response] = []
+        while self._queue:
+            out.extend(self.step())
+        return out
