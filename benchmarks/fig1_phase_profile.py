@@ -17,33 +17,31 @@ from __future__ import annotations
 
 import os
 
-import jax
-
 from benchmarks.common import emit, suite_graphs
-from repro.core import TCMISConfig, build_block_tiles, engine_names, run_phases
+from repro.api import PlanCache, Solver, SolveOptions
+from repro.core import engine_names
 
 
-def _configs():
-    base = dict(heuristic="h3")
-    cfgs = [
-        ("segment", TCMISConfig(backend="segment", **base)),
-        ("tiled_ref", TCMISConfig(backend="tiled_ref", phase1="tiled", **base)),
+def _options():
+    base = dict(heuristic="h3", tile_size=64)
+    opts = [
+        ("segment", SolveOptions(engine="segment", **base)),
+        ("tiled_ref", SolveOptions(engine="tiled_ref", phase1="tiled", **base)),
     ]
     if os.environ.get("FIG1_ENGINES") == "all":
-        cfgs += [
-            (name, TCMISConfig(backend=name, phase1="tiled", **base))
+        opts += [
+            (name, SolveOptions(engine=name, phase1="tiled", **base))
             for name in engine_names()
             if name.endswith("pallas")
         ]
-    return cfgs
+    return opts
 
 
 def main() -> None:
+    plans = PlanCache(tile_size=64)   # shared: one BSR build per graph
     for gid, (spec, g) in suite_graphs(scale_div=8).items():
-        tiled = build_block_tiles(g, tile_size=64)
-        key = jax.random.key(0)
-        for label, cfg in _configs():
-            _, t = run_phases(g, tiled, key, cfg)
+        for label, opts in _options():
+            _, t = Solver(opts, plans=plans).profile(g)
             total = t["phase1"] + t["phase2"] + t["phase3"]
             emit(
                 f"fig1.{gid}.{label}",

@@ -8,21 +8,27 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, suite_graphs
-from repro.core import TCMISConfig, build_block_tiles, cardinality, ecl_mis, tc_mis
+from repro.api import PlanCache, Solver, SolveOptions
+from repro.core import cardinality, ecl_mis
 from repro.core.validate import is_valid_mis
 
 
 def main() -> None:
     devs = {"h1": [], "h2": [], "h3": []}
+    plans = PlanCache(tile_size=64)   # shared: one BSR build per graph
+    solvers = {
+        h: Solver(SolveOptions(heuristic=h, engine="tiled_ref", tile_size=64),
+                  plans=plans)
+        for h in ("h1", "h2", "h3")
+    }
     for gid, (spec, g) in suite_graphs().items():
-        tiled = build_block_tiles(g, tile_size=64)
         key = jax.random.key(0)
         base = cardinality(ecl_mis(g, key).in_mis)
         row = []
         for h in ("h1", "h2", "h3"):
-            res = tc_mis(g, tiled, key, TCMISConfig(heuristic=h))
-            assert is_valid_mis(g, res.in_mis), (gid, h)
-            c = cardinality(res.in_mis)
+            res = solvers[h].solve(g)
+            assert is_valid_mis(g, jax.numpy.asarray(res.in_mis)), (gid, h)
+            c = res.mis_size
             dev = 100.0 * (base - c) / base
             devs[h].append(dev)
             row.append(f"{h}={c}({dev:+.2f}%)")

@@ -162,19 +162,19 @@ def tcmis_engine(engine="fused_pallas", skip_dma=False):
     """
     import json as _json
 
-    import jax as _jax
-
     from benchmarks.common import suite_graphs
-    from repro.core import TCMISConfig, build_block_tiles, run_phases
+    from repro.api import PlanCache, Solver, SolveOptions
 
     gid, (spec, g) = next(iter(suite_graphs(scale_div=8).items()))
-    tiled = build_block_tiles(g, tile_size=64)
+    plans = PlanCache(tile_size=64)   # shared: one BSR build, two engines
     out = {}
     for name in ("tiled_ref", engine):
-        cfg = TCMISConfig(backend=name, phase1="tiled", skip_dma=skip_dma)
-        _, t = run_phases(g, tiled, _jax.random.key(0), cfg)
+        opts = SolveOptions(engine=name, phase1="tiled", skip_dma=skip_dma,
+                            tile_size=64)
+        _, t = Solver(opts, plans=plans).profile(g)
         out[name] = {k: round(v, 5) for k, v in t.items()}
-    print(_json.dumps(dict(graph=gid, tiles=tiled.n_tiles, **out), indent=1))
+    n_tiles = plans.plan(g, tile_size=64)[0].tiled.n_tiles
+    print(_json.dumps(dict(graph=gid, tiles=n_tiles, **out), indent=1))
 
 
 def tcmis_g3_rcm(rcm=True):

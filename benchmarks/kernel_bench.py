@@ -8,9 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import QUICK, emit, time_fn
+from repro.api import SolveOptions
 from repro.core import build_block_tiles, engine_names, get_engine
 from repro.core.engine import EngineContext
-from repro.core.tc_mis import TCMISConfig
 from repro.graphs.generators import erdos_renyi
 from repro.kernels.ref import embedding_bag_ref
 
@@ -30,7 +30,7 @@ def main() -> None:
         & (jax.random.uniform(jax.random.key(1), (tiled.n_padded,)) < 0.25)
         & (jnp.arange(tiled.n_padded) < tiled.n_padded // 4)
     )
-    ctx = EngineContext(g=g, tiled=tiled, cfg=TCMISConfig())
+    ctx = EngineContext(g=g, tiled=tiled, cfg=SolveOptions())
 
     for name in engine_names():
         eng = get_engine(name)

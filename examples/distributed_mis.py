@@ -1,5 +1,6 @@
 """Multi-chip TC-MIS: row-partitioned BSR + bit-packed frontier gathers,
-verified bit-identical to the single-device run.
+verified bit-identical to the single-device run — both reached through the
+same `Solver` front door (`placement` is the only thing that changes).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/distributed_mis.py
@@ -10,42 +11,39 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.dist.compat import install as _install_jax_compat
 
 _install_jax_compat()   # modern sharding API on 0.4.x jax too
 
-from repro.core import (
-    DistConfig, TCMISConfig, build_block_tiles, build_distributed_mis,
-    cardinality, is_valid_mis, make_priorities, shard_tiled, tc_mis,
-)
+from repro.api import PlanCache, Solver, SolveOptions
+from repro.core import is_valid_mis
 from repro.graphs.generators import GRAPH_SUITE
 
 
 def main() -> None:
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh(
-        (2, n_dev // 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
     g = GRAPH_SUITE["G5"].make(10_000, 0)  # web-Google stand-in
-    tiled = build_block_tiles(g, tile_size=64)
-    sharded = shard_tiled(tiled, n_shards=n_dev)
-    print(f"|V|={g.n_nodes:,}; {tiled.n_tiles:,} tiles -> "
-          f"{sharded.tiles.shape[1]:,}/shard × {n_dev} shards")
 
-    key = jax.random.key(0)
-    pri = make_priorities("h3", key, g.n_nodes, g.degrees())
-    run = build_distributed_mis(sharded, mesh, DistConfig(bitpack=True))
-    res = run(pri)
-    in_mis = res.in_mis[: g.n_nodes]
-    print(f"distributed: |MIS|={cardinality(in_mis):,} rounds={int(res.rounds)}"
-          f" valid={is_valid_mis(g, in_mis)}")
+    plans = PlanCache(tile_size=64)        # one BSR build, both placements
+    sharded = Solver(SolveOptions(heuristic="h3", tile_size=64,
+                                  placement="sharded", bitpack=True),
+                     plans=plans)
+    plan = sharded.plan(g)
+    print(f"|V|={g.n_nodes:,}; {plan.tiled.n_tiles:,} tiles over {n_dev} shards "
+          f"(routing: {sharded.route(plan)})")
 
-    single = tc_mis(g, tiled, key, TCMISConfig(heuristic="h3"))
+    res = sharded.solve(plan)
+    print(f"distributed: |MIS|={res.mis_size:,} rounds={res.rounds}"
+          f" valid={is_valid_mis(g, jax.numpy.asarray(res.in_mis))}"
+          f" shards={res.stats['n_shards']}")
+
+    local = Solver(SolveOptions(heuristic="h3", engine="tiled_ref",
+                                tile_size=64, placement="local"),
+                   plans=plans).solve(plan)
     print("matches single-device bit-for-bit:",
-          bool(jnp.all(in_mis == single.in_mis)))
+          bool(np.all(res.in_mis == local.in_mis)))
 
 
 if __name__ == "__main__":

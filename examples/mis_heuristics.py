@@ -3,35 +3,39 @@ vs ECL-MIS cardinality, plus the Pallas-kernel backend equivalence check.
 
     PYTHONPATH=src python examples/mis_heuristics.py
 """
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from repro.core import (
-    TCMISConfig, build_block_tiles, cardinality, ecl_mis, is_valid_mis, tc_mis,
-)
+import jax
+import numpy as np
+
+from repro.api import PlanCache, Solver, SolveOptions
+from repro.core import cardinality, ecl_mis, is_valid_mis
 from repro.graphs.generators import powerlaw
 
 
 def main() -> None:
     # hub-heavy graph (wiki-Talk-like) — where heuristics matter most
     g = powerlaw(20_000, avg_deg=4.0, seed=0)
-    tiled = build_block_tiles(g, tile_size=64)
+    plans = PlanCache(tile_size=64)   # one BSR build serves every solver below
     key = jax.random.key(0)
 
     base = cardinality(ecl_mis(g, key).in_mis)
     print(f"ECL-MIS baseline: |MIS| = {base:,}")
     for h in ("h1", "h2", "h3"):
-        res = tc_mis(g, tiled, key, TCMISConfig(heuristic=h))
-        c = cardinality(res.in_mis)
+        res = Solver(SolveOptions(heuristic=h, engine="tiled_ref", tile_size=64),
+                     plans=plans).solve(g)
+        c = res.mis_size
         print(f"TC-MIS {h}: |MIS| = {c:,}  ({100*(c-base)/base:+.2f}% vs ECL)"
-              f"  rounds={int(res.rounds)} valid={is_valid_mis(g, res.in_mis)}")
+              f"  rounds={res.rounds} "
+              f"valid={is_valid_mis(g, jax.numpy.asarray(res.in_mis))}")
 
     # the Pallas kernel path must agree bit-for-bit with the jnp oracle
-    r_ref = tc_mis(g, tiled, key, TCMISConfig(heuristic="h3", backend="ref",
-                                              phase1="tiled"))
-    r_pal = tc_mis(g, tiled, key, TCMISConfig(heuristic="h3", backend="pallas",
-                                              phase1="tiled"))
-    print("pallas == oracle:", bool(jnp.all(r_ref.in_mis == r_pal.in_mis)))
+    # (smaller graph: off-TPU the kernel interprets python per grid step)
+    g_s = powerlaw(2_000, avg_deg=4.0, seed=0)
+    opts = SolveOptions(heuristic="h3", phase1="tiled", tile_size=32)
+    r_ref = Solver(dataclasses.replace(opts, engine="tiled_ref"), plans=plans).solve(g_s)
+    r_pal = Solver(dataclasses.replace(opts, engine="tiled_pallas"), plans=plans).solve(g_s)
+    print("pallas == oracle:", bool(np.all(r_ref.in_mis == r_pal.in_mis)))
 
 
 if __name__ == "__main__":

@@ -3,11 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
+import numpy as np
 
-from repro.core import (
-    TCMISConfig, build_block_tiles, cardinality, ecl_mis, engine_names,
-    is_valid_mis, luby_mis, tc_mis,
-)
+from repro.api import PlanCache, Solver, SolveOptions
+from repro.core import cardinality, ecl_mis, engine_names, is_valid_mis, luby_mis
 from repro.graphs.generators import GRAPH_SUITE
 
 
@@ -16,36 +15,37 @@ def main() -> None:
     g = GRAPH_SUITE["G3"].make(8192, 0)
     print(f"graph: |V|={g.n_nodes:,} half-edges={g.n_edges:,}")
 
-    # 1. tile the adjacency matrix (the paper's §3.2 representation)
-    tiled = build_block_tiles(g, tile_size=64)
-    print(f"BSR: {tiled.n_tiles:,} tiles of {tiled.tile_size}×{tiled.tile_size}")
-
-    # 2. baselines on the edge list
+    # 1. baselines on the edge list
     key = jax.random.key(0)
     for name, res in [("luby", luby_mis(g, key)), ("ecl ", ecl_mis(g, key))]:
         assert is_valid_mis(g, res.in_mis)
         print(f"{name}  : |MIS|={cardinality(res.in_mis):,} "
               f"rounds={int(res.rounds)} valid=True")
 
-    # 3. TC-MIS on the oracle engine at full example scale
-    res = tc_mis(g, tiled, key, TCMISConfig(heuristic="h3"))
-    assert is_valid_mis(g, res.in_mis)
-    print(f"tc-mis: |MIS|={cardinality(res.in_mis):,} "
-          f"rounds={int(res.rounds)} valid=True")
+    # 2. TC-MIS through the front door: the Solver plans (BSR tiling, the
+    #    paper's §3.2 representation), routes, and runs to convergence
+    solver = Solver(SolveOptions(heuristic="h3", engine="tiled_ref", tile_size=64))
+    plan = solver.plan(g)
+    print(f"BSR: {plan.tiled.n_tiles:,} tiles of {plan.tile_size}×{plan.tile_size}"
+          f" (routing: {solver.route(plan)})")
+    res = solver.solve(plan)
+    assert is_valid_mis(g, jax.numpy.asarray(res.in_mis))
+    print(f"tc-mis: |MIS|={res.mis_size:,} rounds={res.rounds} valid=True")
 
-    # 4. the registry contract, one engine per line: same priorities ⇒ the
+    # 3. the registry contract, one engine per line: same priorities ⇒ the
     #    identical set from every backend.  (Smaller graph: the Pallas
     #    engines run interpret-mode on CPU — python per grid step.)
     g_s = GRAPH_SUITE["G3"].make(1024, 0)
-    tiled_s = build_block_tiles(g_s, tile_size=32)
+    plans = PlanCache(tile_size=32)   # shared plan cache: ONE tiling, 4 engines
     ref = None
     for backend in engine_names():
-        r = tc_mis(g_s, tiled_s, key, TCMISConfig(heuristic="h3", backend=backend))
-        assert is_valid_mis(g_s, r.in_mis)
+        r = Solver(SolveOptions(heuristic="h3", engine=backend, tile_size=32),
+                   plans=plans).solve(g_s)
+        assert is_valid_mis(g_s, jax.numpy.asarray(r.in_mis))
         ref = r.in_mis if ref is None else ref
-        assert bool(jax.numpy.all(r.in_mis == ref)), backend
-        print(f"tc-mis[{backend:12s}]: |MIS|={cardinality(r.in_mis):,} "
-              f"rounds={int(r.rounds)} valid=True")
+        assert bool(np.all(r.in_mis == ref)), backend
+        print(f"tc-mis[{backend:12s}]: |MIS|={r.mis_size:,} "
+              f"rounds={r.rounds} valid=True")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,36 @@
+"""repro.api — the public front door: `Plan` / `SolveOptions` / `Solver`.
+
+Three nouns route every MIS execution path in the system (DESIGN.md §10):
+
+  Plan          immutable solve artifact — canonical graph + BSR tiling +
+                build params + content hash, cached by content
+                (`Plan.build(graph, cache=...)`)
+  SolveOptions  every knob in one bundle — algorithm, engine, tile policy,
+                placement, seed (supersedes `TCMISConfig` and the
+                `priorities`/`alive0`/`col_gate` kwarg sprawl)
+  Solver        `solve` / `solve_many` / `profile`, owning compiled-program
+                reuse and the routing policy: small graphs → local engine
+                dispatch, many small graphs → the block-diagonal batcher,
+                large graphs (auto, multi-device) → the shard_map path
+
+Legacy entry points (`repro.core.tc_mis`, `TCMISConfig`, engine spellings
+`ref`/`pallas`) remain as deprecated shims; new code goes through here.
+"""
+from repro.api.options import SolveOptions
+from repro.api.plan import (
+    DEFAULT_TILE_BUDGET,
+    Plan,
+    PlanCache,
+    build_plan,
+    choose_tile_size,
+    fit_tile_size,
+    plan_cache_key,
+)
+from repro.api.solver import Solver, SolveResult
+
+__all__ = [
+    "SolveOptions",
+    "DEFAULT_TILE_BUDGET", "Plan", "PlanCache", "build_plan",
+    "choose_tile_size", "fit_tile_size", "plan_cache_key",
+    "Solver", "SolveResult",
+]

@@ -1,0 +1,88 @@
+"""`SolveOptions` — every knob of a MIS solve, in one immutable bundle.
+
+This supersedes the old split between `TCMISConfig` (algorithm knobs), the
+`priorities`/`alive0`/`col_gate` kwarg sprawl on `tc_mis` (batch-serving
+overrides, now internal to `Solver.solve_many`), and the preprocessing
+arguments scattered across `build_block_tiles` / `PlanCache`.  One options
+object fully determines how the `Solver` preprocesses, routes and executes
+a graph (DESIGN.md §10).
+
+The engine layer consumes this object directly: `EngineContext.cfg` only
+needs `backend` / `heuristic` / `lanes` / `phase1` / `skip_dma` /
+`max_rounds`, all of which `SolveOptions` provides (`backend` as an alias
+of `engine`, so the same object satisfies both the old and new spelling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+PLACEMENTS = ("auto", "local", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveOptions:
+    """How to solve: algorithm, engine, preprocessing, and placement.
+
+    Algorithm / engine (the former `TCMISConfig` surface):
+      heuristic:  h1 | h2 | h3 | ecl          (paper §3.3)
+      engine:     registered round engine — segment | tiled_ref |
+                  tiled_pallas | fused_pallas (core.engine registry)
+      phase1:     segment (paper-faithful) | tiled (beyond-paper)
+      lanes:      RHS lane count (128 on TPU; 8 keeps CPU cheap)
+      skip_dma:   empty-C slabs also skip their HBM read
+      max_rounds: convergence-loop bound
+
+    Preprocessing (the `Plan` build policy):
+      tile_size:  BSR tile edge T, power of two ≥ 8; None = auto-T (the
+                  budgeted policy of `repro.api.plan.choose_tile_size`)
+      reorder:    None | 'rcm' locality reordering
+
+    Placement (the routing policy, DESIGN.md §10):
+      placement:        auto | local | sharded.  `auto` solves on one
+                        device unless the padded graph reaches
+                        `shard_threshold` vertices AND >1 device is
+                        visible, in which case it takes the
+                        `core.distributed` shard_map path.
+      shard_threshold:  padded-vertex count at which `auto` shards
+      bitpack:          sharded path: gather uint8-packed frontiers
+
+    Reproducibility / caching:
+      seed:               base PRNG seed; `Solver.solve` uses
+                          `jax.random.key(seed)` (the classic single-graph
+                          spelling) while batched members get
+                          content-derived `request_key`s so a member's
+                          solution never depends on its batch.
+      cache_dir:          persist tile plans here (content-addressed .npz)
+      plan_cache_entries: memory-layer LRU bound of the plan cache
+    """
+
+    heuristic: str = "h3"
+    engine: str = "fused_pallas"
+    phase1: str = "segment"
+    lanes: int = 8
+    skip_dma: bool = False
+    max_rounds: int = 1024
+
+    tile_size: Optional[int] = None
+    reorder: Optional[str] = None
+
+    placement: str = "auto"
+    shard_threshold: int = 1 << 15
+    bitpack: bool = True
+
+    seed: int = 0
+    cache_dir: Optional[str] = None
+    plan_cache_entries: int = 256
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {self.placement!r}; options {PLACEMENTS}"
+            )
+
+    @property
+    def backend(self) -> str:
+        """Engine-layer alias: `EngineContext.cfg.backend` and the legacy
+        `TCMISConfig.backend` spell the same thing."""
+        return self.engine

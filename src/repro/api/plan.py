@@ -1,0 +1,340 @@
+"""`Plan` — the immutable solve artifact — and its content-addressed cache.
+
+BLEST and HC-SpMM both measure the format/preprocessing layer — not the
+kernel — as the dominant cost of end-to-end tensor-core graph workloads, and
+this repo is no different: RCM reordering plus the BSR tile scatter dwarfs a
+converged MIS solve at serving scale.  A `Plan` is everything that cost
+buys — the canonical (optionally RCM-permuted) graph, its per-graph BSR
+tiling, the build parameters (tile size, reorder choice), and the
+permutation to map results back — keyed by a sha256 over the canonical edge
+list and the build parameters, so a repeat request for the same graph (same
+*content*, regardless of which file or object it arrived in) skips
+preprocessing entirely:
+
+    memory hit    dict lookup, zero work
+    disk hit      one `np.load` (plans persist across processes)
+    miss          full build, then written through to both layers
+
+`Plan.build(graph, cache=...)` is the front door; the `PlanCache` it wraps
+(formerly `repro.serve_mis.planner`, absorbed here) stays available for
+callers that want cache-layer stats.  Per-graph plans are also exactly the
+unit the block-diagonal batcher (`serve_mis.batcher`) concatenates: a batch
+never re-tiles its members, it offsets their cached tile lists.
+
+This module also owns the default **auto-T policy**: when no tile size is
+given, `choose_tile_size` picks the largest MXU-friendly T whose worst-case
+BSR payload fits a per-chip byte budget — the paper's §3.2 memory/regularity
+trade-off made explicit (hub-less meshes take full 128×128 MXU tiles,
+hub-heavy power-law graphs fall back to smaller tiles exactly as the paper's
+16×16 WMMA does).  `configs.tcmis` drives the same `fit_tile_size` loop with
+its measured-occupancy estimator for the full-scale dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import uuid
+from collections import OrderedDict
+from typing import Callable, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import (
+    BlockTiledGraph,
+    build_block_tiles,
+    next_pow2,
+    rcm_ordering,
+)
+from repro.graphs.graph import Graph, from_edges
+
+_PLAN_VERSION = 1  # bump to invalidate on-disk plans when the layout changes
+
+# --------------------------------------------------------------------------
+# the auto-T policy (paper §3.2: largest T whose BSR fits the budget)
+# --------------------------------------------------------------------------
+
+DEFAULT_TILE_BUDGET = 512 << 20   # bytes of BSR payload per chip
+TILE_CANDIDATES = (128, 64, 32, 16)
+
+
+def fit_tile_size(
+    payload_bytes: Callable[[int], float],
+    *,
+    budget: int = DEFAULT_TILE_BUDGET,
+    candidates: Tuple[int, ...] = TILE_CANDIDATES,
+) -> int:
+    """Largest candidate T whose estimated per-chip payload fits `budget`.
+
+    `payload_bytes(T)` estimates the stored-BSR bytes at tile size T — the
+    caller chooses the estimator (worst-case bound here, measured block
+    occupancy in `configs.tcmis.choose_tile_size`).  Falls back to the
+    smallest candidate when nothing fits (the paper's 16×16 WMMA floor).
+    """
+    for T in candidates:
+        if payload_bytes(T) <= budget:
+            return T
+    return candidates[-1]
+
+
+def choose_tile_size(
+    n_nodes: int,
+    n_edges: int,
+    *,
+    n_chips: int = 1,
+    budget: int = DEFAULT_TILE_BUDGET,
+) -> int:
+    """Default auto-T for an arbitrary graph (no structure measured yet).
+
+    Worst-case tile count is `min(E, nb²)` — every half-edge its own tile,
+    capped by the block grid — so the bound never under-estimates.  Tiny
+    graphs are additionally capped to tiles no wider than their padded
+    vertex range (a 50-vertex graph never takes 128×128 tiles).
+    """
+    cap = next_pow2(max(min(int(n_nodes), TILE_CANDIDATES[0]), TILE_CANDIDATES[-1]))
+    candidates = tuple(T for T in TILE_CANDIDATES if T <= cap) or (TILE_CANDIDATES[-1],)
+
+    def worst_case_bytes(T: int) -> float:
+        nb = -(-max(int(n_nodes), 1) // T)
+        return min(max(int(n_edges), 1), nb * nb) * T * T / max(int(n_chips), 1)
+
+    return fit_tile_size(worst_case_bytes, budget=budget, candidates=candidates)
+
+
+# --------------------------------------------------------------------------
+# the plan artifact
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One graph's cached preprocessing artefacts — the immutable solve unit.
+
+    `g` and `tiled` index *plan ids*: the RCM-permuted vertex numbering when
+    `perm` is set, the original numbering otherwise.  Results computed on
+    plan ids map back through :meth:`to_original`.
+    """
+    g: Graph
+    tiled: BlockTiledGraph
+    key: str                           # content hash (the cache key)
+    perm: Optional[np.ndarray] = None  # perm[plan_id] = original_id
+    inv: Optional[np.ndarray] = None   # inv[original_id] = plan_id
+    reorder: Optional[str] = None      # the reorder choice this plan was built with
+
+    @property
+    def n_nodes(self) -> int:
+        return self.g.n_nodes
+
+    @property
+    def n_blocks(self) -> int:
+        return self.tiled.n_block_rows
+
+    @property
+    def tile_size(self) -> int:
+        return self.tiled.tile_size
+
+    def to_original(self, x: np.ndarray) -> np.ndarray:
+        """Map a per-vertex plan-id vector back to original vertex ids."""
+        x = np.asarray(x)[: self.g.n_nodes]
+        return x if self.inv is None else x[self.inv]
+
+    def to_plan_ids(self, x: np.ndarray) -> np.ndarray:
+        """Inverse of :meth:`to_original` (original-id vector → plan ids)."""
+        x = np.asarray(x)[: self.g.n_nodes]
+        return x if self.perm is None else x[self.perm]
+
+    @classmethod
+    def build(
+        cls,
+        graph: Union[Graph, "Plan"],
+        *,
+        tile_size: Optional[int] = None,
+        reorder: Optional[str] = None,
+        cache: Optional["PlanCache"] = None,
+    ) -> "Plan":
+        """The front door: plan a graph, through a cache when one is given.
+
+        `tile_size=None` applies the auto-T policy (`choose_tile_size`) —
+        with or without a cache, so the same call plans the same graph
+        identically either way (the cache's constructor `tile_size` is only
+        the default of its own `plan()` method).  A `Plan` passes through
+        untouched — callers may hold either.
+        """
+        if isinstance(graph, Plan):
+            return graph
+        T = tile_size or choose_tile_size(graph.n_nodes, graph.n_edges)
+        if cache is not None:
+            return cache.plan(graph, tile_size=T, reorder=reorder)[0]
+        return build_plan(graph, T, reorder, plan_cache_key(graph, T, reorder))
+
+
+# backwards-compatible spelling (`repro.serve_mis.planner.TilePlan`)
+TilePlan = Plan
+
+
+def plan_cache_key(g: Graph, tile_size: int, reorder: Optional[str]) -> str:
+    """Content hash of (canonical edges, n_nodes, build params).
+
+    `from_edges` already canonicalises (dedupe, both directions, sender-sorted),
+    so any two loads of the same graph — different files, different formats,
+    shuffled edge order — hash identically.
+    """
+    h = hashlib.sha256()
+    h.update(
+        f"tcmis-plan-v{_PLAN_VERSION}|{g.n_nodes}|{tile_size}|{reorder or ''}".encode()
+    )
+    h.update(np.asarray(g.senders)[: g.n_edges].astype(np.int32).tobytes())
+    h.update(np.asarray(g.receivers)[: g.n_edges].astype(np.int32).tobytes())
+    return h.hexdigest()
+
+
+def build_plan(g: Graph, tile_size: int, reorder: Optional[str], key: str) -> Plan:
+    """The cache-miss path: (optional) RCM + BSR tiling, no caching."""
+    perm = inv = None
+    if reorder == "rcm":
+        perm = np.asarray(rcm_ordering(g))
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(g.n_nodes)
+        s = np.asarray(g.senders)[: g.n_edges]
+        r = np.asarray(g.receivers)[: g.n_edges]
+        g = from_edges(inv[s], inv[r], g.n_nodes)
+    elif reorder is not None:
+        raise ValueError(f"unknown reorder {reorder!r} (None or 'rcm')")
+    tiled = build_block_tiles(g, tile_size=tile_size)
+    return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv, reorder=reorder)
+
+
+class PlanCache:
+    """Two-layer (memory + optional disk) content-addressed plan store.
+
+    The memory layer is a bounded LRU (`max_mem_entries`) — a long-running
+    service must not pin every graph it has ever seen (tiles are the big
+    arrays) in host/device memory.  The disk layer is unbounded by design:
+    content-addressed `.npz` files are cheap, shared between processes, and
+    an operator concern to garbage-collect.
+
+    `tile_size`/`reorder` given at construction are defaults; `plan` accepts
+    per-call overrides (the `Solver`'s auto-T policy picks a per-graph T),
+    and the cache key includes both, so entries never collide across builds.
+    """
+
+    def __init__(
+        self,
+        tile_size: int = 32,
+        reorder: Optional[str] = None,
+        cache_dir: Optional[str] = None,
+        max_mem_entries: int = 256,
+    ):
+        self.tile_size = int(tile_size)
+        self.reorder = reorder
+        self.cache_dir = cache_dir
+        self.max_mem_entries = max(int(max_mem_entries), 1)
+        self._mem: "OrderedDict[str, Plan]" = OrderedDict()
+        self.stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0}
+        if cache_dir:
+            os.makedirs(cache_dir, exist_ok=True)
+
+    def _remember(self, key: str, plan: Plan) -> None:
+        self._mem[key] = plan
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.max_mem_entries:
+            self._mem.popitem(last=False)
+
+    def plan(
+        self,
+        g: Graph,
+        *,
+        tile_size: Optional[int] = None,
+        reorder: Optional[str] = None,
+    ) -> Tuple[Plan, str]:
+        """Return (plan, status) with status ∈ {'mem', 'disk', 'built'}."""
+        T = self.tile_size if tile_size is None else int(tile_size)
+        ro = self.reorder if reorder is None else reorder
+        key = plan_cache_key(g, T, ro)
+        hit = self._mem.get(key)
+        if hit is not None:
+            self.stats["mem_hits"] += 1
+            self._mem.move_to_end(key)
+            return hit, "mem"
+        if self.cache_dir:
+            loaded = self._load(key, ro)
+            if loaded is not None:
+                self.stats["disk_hits"] += 1
+                self._remember(key, loaded)
+                return loaded, "disk"
+        self.stats["misses"] += 1
+        plan = build_plan(g, T, ro, key)
+        self._remember(key, plan)
+        if self.cache_dir:
+            self._store(plan)
+        return plan, "built"
+
+    # -- disk layer --------------------------------------------------------
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.cache_dir, f"{key}.npz")
+
+    def _store(self, plan: Plan) -> None:
+        g, t = plan.g, plan.tiled
+        arrays = dict(
+            senders=np.asarray(g.senders)[: g.n_edges],
+            receivers=np.asarray(g.receivers)[: g.n_edges],
+            tiles=np.asarray(t.tiles),
+            tile_rows=np.asarray(t.tile_rows),
+            tile_cols=np.asarray(t.tile_cols),
+            row_starts=np.asarray(t.row_starts),
+            meta=np.asarray(
+                [g.n_nodes, g.n_edges, t.n_tiles, t.tile_size,
+                 t.n_block_rows, t.n_block_cols],
+                dtype=np.int64,
+            ),
+        )
+        if plan.perm is not None:
+            arrays["perm"] = plan.perm
+        # write under a per-writer temp name, publish atomically: concurrent
+        # workers that both miss on one key each write their own temp file
+        # and the last rename wins with identical content
+        tmp = self._path(plan.key) + f".tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, self._path(plan.key))
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def _load(self, key: str, reorder: Optional[str]) -> Optional[Plan]:
+        path = self._path(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            with np.load(path) as z:
+                n_nodes, n_edges, n_tiles, tile_size, nbr, nbc = (
+                    int(v) for v in z["meta"]
+                )
+                g = Graph(
+                    senders=jnp.asarray(z["senders"]),
+                    receivers=jnp.asarray(z["receivers"]),
+                    n_nodes=n_nodes,
+                    n_edges=n_edges,
+                )
+                tiled = BlockTiledGraph(
+                    tiles=jnp.asarray(z["tiles"]),
+                    tile_rows=jnp.asarray(z["tile_rows"]),
+                    tile_cols=jnp.asarray(z["tile_cols"]),
+                    row_starts=jnp.asarray(z["row_starts"]),
+                    n_tiles=n_tiles,
+                    n_nodes=n_nodes,
+                    tile_size=tile_size,
+                    n_block_rows=nbr,
+                    n_block_cols=nbc,
+                )
+                perm = np.asarray(z["perm"]) if "perm" in z.files else None
+            inv = None
+            if perm is not None:
+                inv = np.empty_like(perm)
+                inv[perm] = np.arange(n_nodes)
+            return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv,
+                        reorder=reorder)
+        except Exception:  # noqa: BLE001 — np.load raises BadZipFile/EOFError/
+            return None    # pickle errors on torn files: any failure ⇒ rebuild

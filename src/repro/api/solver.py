@@ -1,0 +1,365 @@
+"""`Solver` — the one front door to every MIS execution path.
+
+The paper's pitch is that ONE tiled SpMV schedule serves every phase of
+MIS; the Solver is that idea at the API layer: one object that decides
+*where and how* a graph is solved (BLEST/HC-SpMM treat kernel choice as a
+pluggable policy over one schedule — placement is the same kind of policy
+one level up).  Routing (DESIGN.md §10):
+
+    solve(graph)         placement policy per graph:
+                           local    one jitted `lax.while_loop` dispatch
+                                    on the configured round engine
+                           sharded  the `core.distributed` shard_map path
+                                    (auto: big padded graphs, >1 device)
+    solve_many(graphs)   [] → [];  one graph → the single-graph path (no
+                         bucket is ever built for a singleton);  many →
+                         block-diagonal batcher, ONE dispatch per
+                         tile-size group, members bit-identical to solo
+                         runs; sharded-routed members peel off to their
+                         own dispatch
+    profile(graph)       the python-stepped profiler twin with per-phase
+                         timers (same engine round body as solve)
+
+The Solver owns compiled-program reuse: one jitted single-graph program and
+one jitted packed-batch program (their caches keyed by jax on the static
+shape buckets), a bounded cache of shard_map programs, and the signature
+set behind the `compile: reused|compiled` stat.  Determinism contract:
+`solve` uses `jax.random.key(options.seed)` — the classic single-graph
+spelling — while batched members get content-derived `request_key`s, so a
+member's solution never depends on its batch, slot, or arrival order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.options import SolveOptions
+from repro.api.plan import Plan, PlanCache, choose_tile_size
+from repro.core.engine import get_engine
+from repro.core.heuristics import make_priorities
+from repro.core.luby import MISResult
+from repro.core.tc_mis import _run_phases_impl, _tc_mis_impl
+from repro.graphs.graph import Graph
+
+GraphLike = Union[Graph, Plan]
+
+_DIST_PROGRAM_CACHE = 16       # shard_map closures kept per Solver (LRU)
+_SEEN_SIGNATURE_CAP = 4096     # compile-stat signature set bound (FIFO)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    """One graph's solution, in ORIGINAL vertex numbering.
+
+    `rounds` is this graph's OWN convergence round — for batched solves the
+    per-member counter (max of the member's per-vertex settle rounds), never
+    the batch-slowest.  `converged` is exact for local/single solves and
+    batch-global for packed members (one `lax.while_loop` flag is shared;
+    an unconverged member still fails maximality on its own, which is how
+    the serving layer's per-member verdict stays sound).
+    """
+    in_mis: np.ndarray          # (n_nodes,) bool, original vertex ids
+    rounds: int
+    converged: bool
+    placement: str              # local | batched | sharded
+    plan: Plan
+    stats: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def mis_size(self) -> int:
+        return int(np.asarray(self.in_mis).sum())
+
+    @property
+    def in_mis_plan(self) -> np.ndarray:
+        """The solution in PLAN-id numbering (RCM-permuted when the plan
+        reorders) — what validators over `plan.g` expect."""
+        return self.plan.to_plan_ids(self.in_mis)
+
+
+class Solver:
+    """Plan → route → execute, with compiled-program reuse (DESIGN.md §10)."""
+
+    def __init__(
+        self,
+        options: SolveOptions = SolveOptions(),
+        *,
+        plans: Optional[PlanCache] = None,
+    ):
+        get_engine(options.engine)   # fail fast, before any graph is planned
+        self.options = options
+        self.plans = plans if plans is not None else PlanCache(
+            tile_size=options.tile_size or 32,
+            reorder=options.reorder,
+            cache_dir=options.cache_dir,
+            max_mem_entries=options.plan_cache_entries,
+        )
+        self._base_key = jax.random.key(options.seed)
+        # host-side per-member priority cache for the batcher (sound per
+        # Solver: one base key, one heuristic, and ONLY default request_keys
+        # — solve_many bypasses it when the caller supplies custom keys,
+        # since entries are keyed by plan content alone)
+        self._priority_cache: Dict = {}
+        # bounded FIFO set behind the `compile: reused|compiled` stat (note:
+        # jax's own jit cache still grows per distinct static shape — a
+        # stream of unboundedly many distinct single-graph shapes should
+        # prefer solve_many, whose pow2 buckets bound the compiled programs)
+        self._seen_signatures: "OrderedDict" = OrderedDict()
+        self._dist_runs: "OrderedDict[str, object]" = OrderedDict()
+        self.stats = {"solves": 0, "batches": 0, "compiles": 0}
+        # the two compiled-program seams: jax's jit cache keys on the packed
+        # containers' static shape buckets, so a steady request mix converges
+        # onto a handful of compiled programs
+        self._jit_single = jax.jit(
+            lambda g, tiled, key: _tc_mis_impl(g, tiled, key, options)
+        )
+        self._jit_packed = jax.jit(
+            lambda g, tiled, pri, alive0, gate: _tc_mis_impl(
+                g, tiled, self._base_key, options,
+                priorities=pri, alive0=alive0, col_gate=gate,
+                member_rounds=True,
+            )
+        )
+
+    # -- planning ----------------------------------------------------------
+
+    def plan(self, graph: GraphLike) -> Plan:
+        """Plan a graph through the content-addressed cache (a `Plan` passes
+        through untouched).  Auto-T applies when `options.tile_size` is None."""
+        if isinstance(graph, Plan):
+            return graph
+        tile_size = self.options.tile_size or choose_tile_size(
+            graph.n_nodes, graph.n_edges
+        )
+        plan, _ = self.plans.plan(graph, tile_size=tile_size)
+        return plan
+
+    def request_key(self, plan: Plan) -> jax.Array:
+        """The content-derived per-graph key batched members are solved
+        under (`serve_mis.batcher.request_key` semantics): independent of
+        batch, slot and arrival order."""
+        from repro.serve_mis.batcher import request_key
+
+        return request_key(self._base_key, plan)
+
+    # -- routing -----------------------------------------------------------
+
+    def route(self, plan: Plan) -> str:
+        """The placement policy: where would this plan execute?"""
+        if self.options.placement != "auto":
+            return self.options.placement
+        big = plan.tiled.n_padded >= self.options.shard_threshold
+        if big and jax.device_count() > 1:
+            return "sharded"
+        return "local"
+
+    # -- execution ---------------------------------------------------------
+
+    def solve(self, graph: GraphLike, *, key: Optional[jax.Array] = None) -> SolveResult:
+        """Solve one graph on whatever path the routing policy picks."""
+        plan = self.plan(graph)
+        if key is None:
+            key = jax.random.key(self.options.seed)
+        if self.route(plan) == "sharded":
+            return self._solve_sharded(plan, key)
+        return self._solve_local(plan, key)
+
+    def solve_many(
+        self,
+        graphs: Iterable[GraphLike],
+        *,
+        keys: Optional[Sequence[jax.Array]] = None,
+    ) -> List[SolveResult]:
+        """Solve a workload, batching where it pays.
+
+        Empty input returns `[]` and a single graph routes through the
+        single-graph path — neither ever builds a bucket.  Two or more
+        local-routed members pack block-diagonally (grouped by tile size,
+        since a batch must share T) into ONE dispatch each; sharded-routed
+        members peel off to their own shard_map dispatch.  Results keep the
+        input order.
+        """
+        plans = [self.plan(g) for g in graphs]
+        if not plans:
+            return []
+        # the priority cache is keyed by plan content under the DEFAULT
+        # request_key; custom keys must bypass it or they would silently
+        # receive the cached default-key priorities
+        default_keys = keys is None
+        if default_keys:
+            keys = [self.request_key(p) for p in plans]
+        elif len(keys) != len(plans):
+            raise ValueError(f"{len(plans)} graphs but {len(keys)} keys")
+        if len(plans) == 1:
+            return [self.solve(plans[0], key=keys[0])]
+
+        out: List[Optional[SolveResult]] = [None] * len(plans)
+        groups: "OrderedDict[int, List[int]]" = OrderedDict()
+        for i, p in enumerate(plans):
+            if self.route(p) == "sharded":
+                out[i] = self._solve_sharded(p, keys[i])
+            else:
+                groups.setdefault(p.tile_size, []).append(i)
+        for idxs in groups.values():
+            if len(idxs) == 1:
+                i = idxs[0]
+                out[i] = self._solve_local(plans[i], keys[i])
+                continue
+            solved = self._solve_batched(
+                [plans[i] for i in idxs], [keys[i] for i in idxs],
+                use_priority_cache=default_keys,
+            )
+            for i, r in zip(idxs, solved):
+                out[i] = r
+        return out   # type: ignore[return-value]
+
+    def profile(self, graph: GraphLike, *, key: Optional[jax.Array] = None):
+        """The instrumented twin: python-stepped rounds with per-phase wall
+        clocks.  Returns `(SolveResult, times)` with times keyed phase1/
+        phase2/phase3/rounds; the result bit-matches `solve` on the same
+        graph and key (same engine round body)."""
+        plan = self.plan(graph)
+        if key is None:
+            key = jax.random.key(self.options.seed)
+        result, times = _run_phases_impl(plan.g, plan.tiled, key, self.options)
+        self.stats["solves"] += 1
+        return self._wrap(plan, result, "local", dict(times)), times
+
+    # -- the three execution paths ----------------------------------------
+
+    def _wrap(
+        self, plan: Plan, result: MISResult, placement: str, stats: Dict
+    ) -> SolveResult:
+        in_mis_plan = np.asarray(result.in_mis).astype(bool)
+        return SolveResult(
+            in_mis=plan.to_original(in_mis_plan).astype(bool),
+            rounds=int(result.rounds),
+            converged=bool(result.converged),
+            placement=placement,
+            plan=plan,
+            stats=stats,
+        )
+
+    def _note_signature(self, sig) -> str:
+        reused = sig in self._seen_signatures
+        self._seen_signatures[sig] = True
+        if not reused:
+            self.stats["compiles"] += 1
+            while len(self._seen_signatures) > _SEEN_SIGNATURE_CAP:
+                self._seen_signatures.popitem(last=False)
+        return "reused" if reused else "compiled"
+
+    def _solve_local(self, plan: Plan, key: jax.Array) -> SolveResult:
+        # every static trace input of the jitted program, or the stat lies
+        t = plan.tiled
+        compile_stat = self._note_signature(
+            ("local", t.tile_size, t.n_block_rows, t.n_block_cols, t.n_tiles,
+             int(t.tiles.shape[0]), t.n_nodes, plan.g.n_nodes,
+             plan.g.n_edges, plan.g.e_pad)
+        )
+        t0 = time.perf_counter()
+        result = self._jit_single(plan.g, plan.tiled, key)
+        jax.block_until_ready(result.in_mis)
+        solve_ms = (time.perf_counter() - t0) * 1e3
+        self.stats["solves"] += 1
+        return self._wrap(plan, result, "local", dict(
+            solve_ms=round(solve_ms, 3), compile=compile_stat, batch_size=1,
+        ))
+
+    def _solve_batched(
+        self,
+        plans: Sequence[Plan],
+        keys: Sequence[jax.Array],
+        use_priority_cache: bool = True,
+    ) -> List[SolveResult]:
+        from repro.serve_mis.batcher import pack_batch
+
+        batch = pack_batch(
+            plans, keys, self.options.heuristic,
+            priority_cache=self._priority_cache if use_priority_cache else None,
+        )
+        sig = batch.signature()
+        compile_stat = self._note_signature(sig)
+        self.stats["batches"] += 1
+
+        t0 = time.perf_counter()
+        result = self._jit_packed(
+            batch.g, batch.tiled, batch.priorities, batch.alive0, batch.col_gate
+        )
+        jax.block_until_ready(result.in_mis)
+        solve_ms = (time.perf_counter() - t0) * 1e3
+        self.stats["solves"] += len(plans)
+        converged = bool(result.converged)
+
+        shared = dict(
+            solve_ms=round(solve_ms, 3), bucket=sig,
+            compile=compile_stat, batch_size=len(plans),
+        )
+        out = []
+        for plan, mis, rnd in zip(
+            plans, batch.unpack(result.in_mis), batch.unpack(result.rounds)
+        ):
+            in_mis_plan = np.asarray(mis).astype(bool)
+            out.append(SolveResult(
+                in_mis=plan.to_original(in_mis_plan).astype(bool),
+                rounds=int(np.max(rnd)) if rnd.size else 0,
+                converged=converged,
+                placement="batched",
+                plan=plan,
+                stats=dict(shared),
+            ))
+        return out
+
+    def _solve_sharded(self, plan: Plan, key: jax.Array) -> SolveResult:
+        from repro.core.distributed import (
+            DistConfig, build_distributed_mis, shard_tiled,
+        )
+        from repro.dist import compat
+
+        n_dev = jax.device_count()
+        run = self._dist_runs.get(plan.key)
+        compile_stat = "reused" if run is not None else "compiled"
+        if run is None:
+            self.stats["compiles"] += 1
+            axis_type = getattr(jax.sharding, "AxisType", compat._AxisType)
+            mesh = compat.make_mesh(
+                (n_dev,), ("shard",), axis_types=(axis_type.Auto,)
+            )
+            sharded = shard_tiled(plan.tiled, n_shards=n_dev)
+            run = build_distributed_mis(sharded, mesh, DistConfig(
+                max_rounds=self.options.max_rounds,
+                bitpack=self.options.bitpack,
+                lanes=self.options.lanes,
+            ))
+            self._dist_runs[plan.key] = run
+            while len(self._dist_runs) > _DIST_PROGRAM_CACHE:
+                self._dist_runs.popitem(last=False)
+
+        pri = make_priorities(
+            self.options.heuristic, key, plan.g.n_nodes, plan.g.degrees()
+        )
+        t0 = time.perf_counter()
+        res = run(pri)
+        jax.block_until_ready(res.in_mis)
+        solve_ms = (time.perf_counter() - t0) * 1e3
+        self.stats["solves"] += 1
+        rounds = int(res.rounds)
+        in_mis_plan = np.asarray(res.in_mis)[: plan.g.n_nodes].astype(bool)
+        return SolveResult(
+            in_mis=plan.to_original(in_mis_plan).astype(bool),
+            rounds=rounds,
+            # the shard_map loop returns no explicit flag; exiting before the
+            # bound is the (conservative) convergence signal
+            converged=rounds < self.options.max_rounds,
+            placement="sharded",
+            plan=plan,
+            stats=dict(
+                solve_ms=round(solve_ms, 3), compile=compile_stat,
+                n_shards=n_dev, batch_size=1,
+            ),
+        )

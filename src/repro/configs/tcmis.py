@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.api.plan import DEFAULT_TILE_BUDGET, fit_tile_size
 from repro.configs.common import ArchDef, Cell, named_shardings, register
 from repro.core.distributed import DistConfig, make_mis_step_fn
 from repro.core.tiling import build_block_tiles
@@ -34,7 +35,8 @@ TABLE1_E = {
     "G5": 9_700_000, "G6": 14_440_000, "G7": 68_990_000, "G8": 182_080_000,
 }
 
-PER_CHIP_TILE_BUDGET = 512 << 20      # 512 MiB of BSR payload per chip
+# 512 MiB of BSR payload per chip — the shared auto-T budget (repro.api.plan)
+PER_CHIP_TILE_BUDGET = DEFAULT_TILE_BUDGET
 DRYRUN_LANES = 8                      # lanes carrying data (C, alive, spares)
 
 
@@ -59,12 +61,16 @@ def estimate_tiles(paper_id: str, tile_size: int) -> int:
 
 
 def choose_tile_size(paper_id: str, n_chips: int) -> int:
-    """Largest MXU-friendly T whose estimated BSR fits the per-chip budget."""
-    for T in (128, 64, 32, 16):
-        est = estimate_tiles(paper_id, T)
-        if est * T * T / n_chips <= PER_CHIP_TILE_BUDGET:
-            return T
-    return 16
+    """Largest MXU-friendly T whose estimated BSR fits the per-chip budget.
+
+    Same `fit_tile_size` loop as the API's default auto-T policy
+    (`repro.api.plan.choose_tile_size`), driven by the measured block
+    occupancy of the reduced-scale stand-in instead of the worst-case bound.
+    """
+    return fit_tile_size(
+        lambda T: estimate_tiles(paper_id, T) * T * T / n_chips,
+        budget=PER_CHIP_TILE_BUDGET,
+    )
 
 
 def _mis_cell(paper_id: str) -> Cell:
@@ -110,28 +116,22 @@ def _mis_cell(paper_id: str) -> Cell:
 
 
 def _smoke():
-    """Reduced-scale end-to-end TC-MIS on CPU: the oracle engine plus the
-    production fused engine must return the same valid set."""
-    import jax.numpy as jnp
+    """Reduced-scale end-to-end TC-MIS on CPU, through the `Solver` front
+    door: the oracle engine plus the production fused engine must return
+    the same valid set."""
+    import numpy as np
 
-    from repro.core import (
-        TCMISConfig, build_block_tiles, is_valid_mis, tc_mis,
-    )
+    from repro.api import Plan, Solver, SolveOptions
+    from repro.core import is_valid_mis
     from repro.graphs.generators import erdos_renyi
 
     g = erdos_renyi(500, avg_deg=6.0, seed=0)
-    tiled = build_block_tiles(g, tile_size=32)
-    ref = tc_mis(
-        g, tiled, jax.random.key(0),
-        TCMISConfig(heuristic="h3", backend="tiled_ref"),
-    )
-    assert bool(ref.converged)
-    assert is_valid_mis(g, ref.in_mis)
-    fused = tc_mis(
-        g, tiled, jax.random.key(0),
-        TCMISConfig(heuristic="h3", backend="fused_pallas"),
-    )
-    assert bool(jnp.all(fused.in_mis == ref.in_mis))
+    plan = Plan.build(g, tile_size=32)   # one plan serves both engines
+    ref = Solver(SolveOptions(heuristic="h3", engine="tiled_ref")).solve(plan)
+    assert ref.converged
+    assert is_valid_mis(g, jnp.asarray(ref.in_mis))
+    fused = Solver(SolveOptions(heuristic="h3", engine="fused_pallas")).solve(plan)
+    assert bool(np.all(fused.in_mis == ref.in_mis))
 
 
 ARCH = register(ArchDef(

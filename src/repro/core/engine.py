@@ -35,7 +35,8 @@ This module also owns the raw-array tile operators (`tile_spmv`,
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Tuple, TYPE_CHECKING
+import warnings
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,9 +44,6 @@ import numpy as np
 
 from repro.core.tiling import BlockTiledGraph, pack_vertex_vector
 from repro.graphs.graph import Graph
-
-if TYPE_CHECKING:  # avoid a cycle: tc_mis imports the engine layer
-    from repro.core.tc_mis import TCMISConfig
 
 _NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
 
@@ -115,10 +113,18 @@ def block_col_flags(x: jnp.ndarray, tile_size: int) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 class MISRoundState(NamedTuple):
-    """Per-round algorithm state, all shapes (n_padded,)."""
+    """Per-round algorithm state; `alive`/`in_mis` are (n_padded,).
+
+    `rnd` is polymorphic: a scalar int32 counts rounds globally (the classic
+    single-graph run), while an (n_padded,) int32 vector — the batched
+    serving mode — advances per vertex only while that vertex is alive, so
+    `rnd[v]` converges to v's settle round and a packed member's OWN round
+    count is the max over its slot (`round_increment`).  A member that
+    converges early stops counting even though the batch keeps looping.
+    """
     alive: jnp.ndarray    # bool
     in_mis: jnp.ndarray   # bool
-    rnd: jnp.ndarray      # int32
+    rnd: jnp.ndarray      # int32 — () global, or (n_padded,) per-vertex
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,18 +142,34 @@ class EngineContext:
     """
     g: Graph
     tiled: BlockTiledGraph
-    cfg: "TCMISConfig"
+    cfg: Any   # options bundle: anything with backend/heuristic/lanes/
+               # phase1/skip_dma/max_rounds (repro.api.SolveOptions, or the
+               # legacy TCMISConfig shim)
     col_gate: Optional[jnp.ndarray] = None
 
 
+def round_increment(state: MISRoundState) -> jnp.ndarray:
+    """The per-round `rnd` advance matching the state's counting mode.
+
+    Scalar `rnd` ⇒ +1 (the driver's while_loop only runs while something is
+    alive).  Vector `rnd` ⇒ +alive, so converged members / vertices stop
+    counting — the per-member round-counter contract (MISRoundState)."""
+    if getattr(state.rnd, "ndim", 0):
+        return state.alive.astype(jnp.int32)
+    return jnp.int32(1)
+
+
 def phase3_update(
-    state: MISRoundState, cand: jnp.ndarray, n_c: jnp.ndarray
+    state: MISRoundState,
+    cand: jnp.ndarray,
+    n_c: jnp.ndarray,
+    rnd_inc: Optional[jnp.ndarray] = None,
 ) -> MISRoundState:
     """③ lock-free own-state update (paper's three rules, verbatim)."""
     return MISRoundState(
         alive=state.alive & ~cand & ~(n_c > 0),
         in_mis=state.in_mis | cand,
-        rnd=state.rnd + 1,
+        rnd=state.rnd + (round_increment(state) if rnd_inc is None else rnd_inc),
     )
 
 
@@ -237,15 +259,16 @@ class RoundEngine:
     ) -> MISRoundState:
         cand = self.phase1_candidates(ctx, pri, state.alive)
         flags = self.col_flags(ctx, cand, state.alive)
+        inc = round_increment(state)
         if self.fused:
             new_alive, mis_add = self.fused_step(ctx, cand, state.alive, flags)
             return MISRoundState(
                 alive=new_alive,
                 in_mis=state.in_mis | mis_add,
-                rnd=state.rnd + 1,
+                rnd=state.rnd + inc,
             )
         n_c = self.phase2_counts(ctx, cand, state.alive, flags)
-        return phase3_update(state, cand, n_c)
+        return phase3_update(state, cand, n_c, inc)
 
 
 # --------------------------------------------------------------------------
@@ -254,8 +277,9 @@ class RoundEngine:
 
 ENGINES: Dict[str, RoundEngine] = {}
 
-# legacy TCMISConfig.backend spellings kept working
+# legacy TCMISConfig.backend spellings kept working (but deprecated)
 _ALIASES = {"ref": "tiled_ref", "pallas": "tiled_pallas", "fused": "fused_pallas"}
+_DEPRECATED_SPELLINGS = ("ref", "pallas")
 
 
 def register_engine(engine: RoundEngine) -> RoundEngine:
@@ -265,6 +289,13 @@ def register_engine(engine: RoundEngine) -> RoundEngine:
 
 def get_engine(name: str) -> RoundEngine:
     resolved = _ALIASES.get(name, name)
+    if name in _DEPRECATED_SPELLINGS:
+        warnings.warn(
+            f"engine spelling {name!r} is deprecated; use {resolved!r} "
+            f"(repro.api: SolveOptions(engine={resolved!r}))",
+            DeprecationWarning,
+            stacklevel=2,
+        )
     if resolved not in ENGINES:
         raise ValueError(
             f"unknown engine {name!r}; registered: {sorted(ENGINES)} "

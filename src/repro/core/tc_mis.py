@@ -16,16 +16,20 @@ Per round:
      INSIDE the kernel epilogue by the `fused_pallas` engine.
 
 How a round executes is delegated to a `RoundEngine` (core.engine): the
-`backend` config field names an engine from the registry — `segment`,
-`tiled_ref`, `tiled_pallas`, or `fused_pallas` (legacy spellings `ref` /
-`pallas` still resolve).  Both drivers here — the jitted `lax.while_loop`
-production entry and the python-stepped profiler twin — run the SAME
-engine round body; `run_phases` merely times its pieces.
+`backend` config field names an engine from the registry.  Both drivers here
+— the jitted `lax.while_loop` production entry and the python-stepped
+profiler twin — run the SAME engine round body.
+
+**Public entry points live in `repro.api`** (DESIGN.md §10): `Solver.solve`
+wraps `_tc_mis_impl`, `Solver.profile` wraps `_run_phases_impl`.  The
+module-level `tc_mis` / `run_phases` and `TCMISConfig` remain as thin
+deprecated shims for pre-API callers.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Tuple
 
 import jax
@@ -36,6 +40,7 @@ from repro.core.engine import (
     MISRoundState,
     get_engine,
     phase3_update,
+    round_increment,
 )
 from repro.core.heuristics import Priorities, make_priorities
 from repro.core.luby import MISResult
@@ -49,6 +54,9 @@ TCMISState = MISRoundState
 
 @dataclasses.dataclass(frozen=True)
 class TCMISConfig:
+    """DEPRECATED algorithm-knob bundle — superseded by
+    `repro.api.SolveOptions` (which adds preprocessing + placement policy).
+    Kept as the shim config for `tc_mis`/`run_phases` callers."""
     heuristic: str = "h3"        # h1 | h2 | h3 | ecl
     lanes: int = 8               # RHS lane count (128 on TPU; 8 keeps CPU cheap)
     backend: str = "ref"         # engine name: segment | tiled_ref |
@@ -71,20 +79,29 @@ def _setup(
     g: Graph,
     tiled: BlockTiledGraph,
     key: jax.Array,
-    config: TCMISConfig,
+    config,
     priorities: Priorities | None = None,
     alive0: jnp.ndarray | None = None,
     col_gate: jnp.ndarray | None = None,
+    member_rounds: bool = False,
 ):
     """Shared run prologue: engine resolution, context, priorities, state₀.
 
+    `config` is any options bundle with backend/heuristic/lanes/phase1/
+    skip_dma/max_rounds (`repro.api.SolveOptions` or the `TCMISConfig` shim).
+
     `priorities` / `alive0` / `col_gate` are the batch-serving overrides
-    (repro.serve_mis): a block-diagonal packed graph must carry *per-graph*
-    priorities (each member graph's own key and degree statistics — Eq. 1's
-    d̄ is per-graph, so batch-wide `make_priorities` would change every
-    member's solution) and must start padding-slot vertices dead so they
-    never enter the MIS or cost a round.  When `priorities` is given, `key`
-    is unused; vectors may be `n_nodes`- or `n_padded`-long.
+    (repro.api.Solver.solve_many): a block-diagonal packed graph must carry
+    *per-graph* priorities (each member graph's own key and degree statistics
+    — Eq. 1's d̄ is per-graph, so batch-wide `make_priorities` would change
+    every member's solution) and must start padding-slot vertices dead so
+    they never enter the MIS or cost a round.  When `priorities` is given,
+    `key` is unused; vectors may be `n_nodes`- or `n_padded`-long.
+
+    `member_rounds` switches `rnd` to the per-vertex counting mode
+    (core.engine.MISRoundState): each vertex's counter advances only while
+    it is alive, so a packed member's own convergence round is the max over
+    its slot — not the batch-slowest.
     """
     engine = get_engine(config.backend)
     ctx = EngineContext(g=g, tiled=tiled, cfg=config, col_gate=col_gate)
@@ -93,72 +110,87 @@ def _setup(
     pri = _pad_priorities(priorities, tiled)
     if alive0 is None:
         alive0 = jnp.ones((g.n_nodes,), dtype=bool)
+    rnd0 = (
+        jnp.zeros((tiled.n_padded,), dtype=jnp.int32)
+        if member_rounds
+        else jnp.int32(0)
+    )
     state0 = MISRoundState(
         alive=pack_vertex_vector(alive0.astype(bool), tiled),
         in_mis=jnp.zeros((tiled.n_padded,), dtype=bool),
-        rnd=jnp.int32(0),
+        rnd=rnd0,
     )
     return engine, ctx, pri, state0
 
 
-def tc_mis(
+def _result(final: MISRoundState, g: Graph) -> MISResult:
+    rounds = final.rnd[: g.n_nodes] if getattr(final.rnd, "ndim", 0) else final.rnd
+    return MISResult(
+        in_mis=final.in_mis[: g.n_nodes],
+        rounds=rounds,
+        converged=~jnp.any(final.alive),
+    )
+
+
+def _tc_mis_impl(
     g: Graph,
     tiled: BlockTiledGraph,
     key: jax.Array,
-    config: TCMISConfig = TCMISConfig(),
+    config,
     *,
     priorities: Priorities | None = None,
     alive0: jnp.ndarray | None = None,
     col_gate: jnp.ndarray | None = None,
+    member_rounds: bool = False,
 ) -> MISResult:
     """Run TC-MIS to convergence inside one `lax.while_loop`.
 
-    The keyword overrides serve the block-diagonal batch path (see `_setup`);
-    the whole function is jit-compatible with `config` static, which is how
-    `repro.serve_mis.service` amortises ONE compiled dispatch per shape
-    bucket over every request in a batch.
+    The production driver behind `repro.api.Solver.solve`/`solve_many`; the
+    whole function is jit-compatible with `config` static, which is how the
+    Solver amortises ONE compiled dispatch per shape bucket over every
+    request in a batch.  With `member_rounds`, `MISResult.rounds` is the
+    per-vertex settle-round vector (sliced to real vertices) instead of the
+    global round count.
     """
     engine, ctx, pri, state0 = _setup(
-        g, tiled, key, config, priorities, alive0, col_gate
+        g, tiled, key, config, priorities, alive0, col_gate, member_rounds
     )
 
     def cond(state: MISRoundState):
-        return jnp.any(state.alive) & (state.rnd < config.max_rounds)
+        return jnp.any(state.alive) & (jnp.max(state.rnd) < config.max_rounds)
 
     final = jax.lax.while_loop(
         cond, lambda s: engine.step(ctx, pri, s), state0
     )
-    return MISResult(
-        in_mis=final.in_mis[: g.n_nodes],
-        rounds=final.rnd,
-        converged=~jnp.any(final.alive),
-    )
+    return _result(final, g)
 
 
 # --------------------------------------------------------------------------
 # instrumented twin (python-stepped) for the Fig.-1 phase profiler
 # --------------------------------------------------------------------------
 
-def run_phases(
+def _run_phases_impl(
     g: Graph,
     tiled: BlockTiledGraph,
     key: jax.Array,
-    config: TCMISConfig = TCMISConfig(),
+    config,
     warmup: bool = True,
     *,
     priorities: Priorities | None = None,
     alive0: jnp.ndarray | None = None,
     col_gate: jnp.ndarray | None = None,
+    member_rounds: bool = False,
 ) -> Tuple[MISResult, Dict[str, float]]:
     """Same engine round body, stepped from python with per-phase timers.
 
-    Used only by benchmarks — the jitted `tc_mis` is the production entry.
+    The driver behind `repro.api.Solver.profile` — benchmarks only; the
+    jitted `_tc_mis_impl` is the production entry.
     Returns (result, {"phase1": s, "phase2": s, "phase3": s, "rounds": k}).
     For fused engines the ②+③ kernel pass is charged to phase2 and the
     residual state merge to phase3.
     """
     engine, ctx, pri, state0 = _setup(
-        g, tiled, key, config, priorities, alive0, col_gate
+        g, tiled, key, config, priorities, alive0, col_gate, member_rounds
     )
 
     p1 = jax.jit(lambda alive: engine.phase1_candidates(ctx, pri, alive))
@@ -169,8 +201,8 @@ def run_phases(
             )
         )
         p3 = jax.jit(
-            lambda state, out: MISRoundState(
-                alive=out[0], in_mis=state.in_mis | out[1], rnd=state.rnd + 1
+            lambda state, out, inc: MISRoundState(
+                alive=out[0], in_mis=state.in_mis | out[1], rnd=state.rnd + inc
             )
         )
     else:
@@ -181,10 +213,14 @@ def run_phases(
         )
         p3 = jax.jit(phase3_update)
 
+    def advance(state, cand, out):
+        inc = round_increment(state)
+        return p3(state, out, inc) if engine.fused else p3(state, cand, out, inc)
+
     if warmup:  # compile outside the timers
         c = p1(state0.alive)
         out = p2(c, state0.alive)
-        step = p3(state0, out) if engine.fused else p3(state0, c, out)
+        step = advance(state0, c, out)
         step.alive.block_until_ready()
 
     state = state0
@@ -198,7 +234,7 @@ def run_phases(
         out = p2(cand, state.alive)
         jax.block_until_ready(out)
         t2 = time.perf_counter()
-        state = p3(state, out) if engine.fused else p3(state, cand, out)
+        state = advance(state, cand, out)
         state.alive.block_until_ready()
         t3 = time.perf_counter()
         times["phase1"] += t1 - t0
@@ -208,7 +244,65 @@ def run_phases(
     times["rounds"] = rounds
     result = MISResult(
         in_mis=state.in_mis[: g.n_nodes],
-        rounds=jnp.int32(rounds),
+        rounds=state.rnd[: g.n_nodes] if member_rounds else jnp.int32(rounds),
         converged=~jnp.any(state.alive),
     )
     return result, times
+
+
+# --------------------------------------------------------------------------
+# deprecated shims — the pre-`repro.api` entry points
+# --------------------------------------------------------------------------
+
+def tc_mis(
+    g: Graph,
+    tiled: BlockTiledGraph,
+    key: jax.Array,
+    config: TCMISConfig = TCMISConfig(),
+    *,
+    priorities: Priorities | None = None,
+    alive0: jnp.ndarray | None = None,
+    col_gate: jnp.ndarray | None = None,
+    member_rounds: bool = False,
+) -> MISResult:
+    """DEPRECATED: use `repro.api.Solver`.
+
+    `Solver(SolveOptions(engine=..., tile_size=...)).solve(graph)` plans,
+    routes and runs in one call; `Solver.solve_many` replaces the
+    `priorities`/`alive0`/`col_gate` batch-kwarg spelling."""
+    warnings.warn(
+        "tc_mis(g, tiled, key, config) is deprecated; use repro.api: "
+        "Solver(SolveOptions(engine=..., tile_size=...)).solve(graph) "
+        "(solve_many for batches)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _tc_mis_impl(
+        g, tiled, key, config,
+        priorities=priorities, alive0=alive0, col_gate=col_gate,
+        member_rounds=member_rounds,
+    )
+
+
+def run_phases(
+    g: Graph,
+    tiled: BlockTiledGraph,
+    key: jax.Array,
+    config: TCMISConfig = TCMISConfig(),
+    warmup: bool = True,
+    *,
+    priorities: Priorities | None = None,
+    alive0: jnp.ndarray | None = None,
+    col_gate: jnp.ndarray | None = None,
+) -> Tuple[MISResult, Dict[str, float]]:
+    """DEPRECATED: use `repro.api.Solver.profile(graph)`."""
+    warnings.warn(
+        "run_phases(...) is deprecated; use repro.api: "
+        "Solver(SolveOptions(engine=...)).profile(graph)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _run_phases_impl(
+        g, tiled, key, config, warmup,
+        priorities=priorities, alive0=alive0, col_gate=col_gate,
+    )

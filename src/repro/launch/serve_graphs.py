@@ -1,10 +1,12 @@
 """Synthetic-traffic launcher for the MIS serving layer.
 
-Drives `repro.serve_mis.MISService` with a stream of requests drawn from the
-paper-suite generators (Table-1 structure classes at serving scale), with a
-configurable repeat rate so the tile-plan cache sees realistic re-request
-traffic.  Prints per-wave throughput and the cache/compile counters — the
-serving twin of `launch.serve` (LM decode loop).
+Drives `repro.serve_mis.MISService` — and through it the `repro.api.Solver`
+front door (plan cache → routing → batched dispatch) — with a stream of
+requests drawn from the paper-suite generators (Table-1 structure classes
+at serving scale), with a configurable repeat rate so the tile-plan cache
+sees realistic re-request traffic.  Prints per-wave throughput and the
+cache/compile counters — the serving twin of `launch.serve` (LM decode
+loop).
 
     PYTHONPATH=src python -m repro.launch.serve_graphs \
         --requests 32 --scale 512 --repeat-frac 0.5 --engine tiled_ref
@@ -74,7 +76,8 @@ def main() -> None:
     s, pc = service.stats, service.planner.stats
     print(
         f"total: requests={s['requests']} batches={s['batches']} "
-        f"compiles={s['compiles']} plan_cache mem={pc['mem_hits']} "
+        f"compiles={s['compiles']} graphs_solved={service.solver.stats['solves']} "
+        f"plan_cache mem={pc['mem_hits']} "
         f"disk={pc['disk_hits']} built={pc['misses']}"
     )
 

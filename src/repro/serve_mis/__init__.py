@@ -4,10 +4,11 @@ Turns the single-graph reproduction into a request-driven system
 (DESIGN.md §9):
 
   io        file ingestion (SNAP edge lists, MatrixMarket, DIMACS)
-  planner   content-hashed tile-plan cache (memory + disk)
+  planner   content-hashed tile-plan cache (absorbed into repro.api.plan;
+            re-exported here for compatibility)
   batcher   block-diagonal multi-graph packing into shape buckets
-  service   request queue → one jitted dispatch per batch → validated
-            per-graph responses with serving stats
+  service   request queue → one `repro.api.Solver.solve_many` dispatch per
+            batch → validated per-graph responses with serving stats
 
 CLI: ``python -m repro.serve_mis --once graph1.mtx graph2.edges``
 """

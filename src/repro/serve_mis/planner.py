@@ -1,219 +1,16 @@
-"""Tile-plan caching: pay the preprocessing cost once per graph *content*.
+"""Tile-plan caching — ABSORBED into `repro.api.plan` (DESIGN.md §10).
 
-BLEST and HC-SpMM both measure the format/preprocessing layer — not the
-kernel — as the dominant cost of end-to-end tensor-core graph workloads, and
-this repo is no different: RCM reordering plus the BSR tile scatter dwarfs a
-converged MIS solve at serving scale.  A `TilePlan` is everything that cost
-buys — the canonical (optionally RCM-permuted) graph, its per-graph BSR
-tiling, and the permutation to map results back — and the `PlanCache` keys
-it by a sha256 over the canonical edge list and the build parameters, so a
-repeat request for the same graph (same *content*, regardless of which file
-or object it arrived in) skips preprocessing entirely:
-
-    memory hit    dict lookup, zero work
-    disk hit      one `np.load` (plans persist across processes)
-    miss          full build, then written through to both layers
-
-Per-graph plans are also exactly the unit the block-diagonal batcher
-(`serve_mis.batcher`) concatenates: a batch never re-tiles its members, it
-offsets their cached tile lists.
+The `TilePlan`/`PlanCache` machinery that used to live here is now the
+public `Plan` artifact of the front-door API; this module re-exports the
+old names so pre-API importers (`repro.serve_mis.batcher`, tests) keep
+working.  `TilePlan` is literally `repro.api.plan.Plan`.
 """
-from __future__ import annotations
+from repro.api.plan import (  # noqa: F401 — compatibility re-exports
+    Plan,
+    PlanCache,
+    TilePlan,
+    build_plan,
+    plan_cache_key,
+)
 
-import dataclasses
-import hashlib
-import os
-import uuid
-from collections import OrderedDict
-from typing import Optional, Tuple
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.tiling import BlockTiledGraph, build_block_tiles, rcm_ordering
-from repro.graphs.graph import Graph, from_edges
-
-_PLAN_VERSION = 1  # bump to invalidate on-disk plans when the layout changes
-
-
-@dataclasses.dataclass(frozen=True)
-class TilePlan:
-    """One graph's cached preprocessing artefacts.
-
-    `g` and `tiled` index *plan ids*: the RCM-permuted vertex numbering when
-    `perm` is set, the original numbering otherwise.  Results computed on
-    plan ids map back through :meth:`to_original`.
-    """
-    g: Graph
-    tiled: BlockTiledGraph
-    key: str                          # content hash (the cache key)
-    perm: Optional[np.ndarray] = None  # perm[plan_id] = original_id
-    inv: Optional[np.ndarray] = None   # inv[original_id] = plan_id
-
-    @property
-    def n_nodes(self) -> int:
-        return self.g.n_nodes
-
-    @property
-    def n_blocks(self) -> int:
-        return self.tiled.n_block_rows
-
-    def to_original(self, x: np.ndarray) -> np.ndarray:
-        """Map a per-vertex plan-id vector back to original vertex ids."""
-        x = np.asarray(x)[: self.g.n_nodes]
-        return x if self.inv is None else x[self.inv]
-
-
-def plan_cache_key(g: Graph, tile_size: int, reorder: Optional[str]) -> str:
-    """Content hash of (canonical edges, n_nodes, build params).
-
-    `from_edges` already canonicalises (dedupe, both directions, sender-sorted),
-    so any two loads of the same graph — different files, different formats,
-    shuffled edge order — hash identically.
-    """
-    h = hashlib.sha256()
-    h.update(
-        f"tcmis-plan-v{_PLAN_VERSION}|{g.n_nodes}|{tile_size}|{reorder or ''}".encode()
-    )
-    h.update(np.asarray(g.senders)[: g.n_edges].astype(np.int32).tobytes())
-    h.update(np.asarray(g.receivers)[: g.n_edges].astype(np.int32).tobytes())
-    return h.hexdigest()
-
-
-def build_plan(g: Graph, tile_size: int, reorder: Optional[str], key: str) -> TilePlan:
-    """The cache-miss path: (optional) RCM + BSR tiling, no caching."""
-    perm = inv = None
-    if reorder == "rcm":
-        perm = np.asarray(rcm_ordering(g))
-        inv = np.empty_like(perm)
-        inv[perm] = np.arange(g.n_nodes)
-        s = np.asarray(g.senders)[: g.n_edges]
-        r = np.asarray(g.receivers)[: g.n_edges]
-        g = from_edges(inv[s], inv[r], g.n_nodes)
-    elif reorder is not None:
-        raise ValueError(f"unknown reorder {reorder!r} (None or 'rcm')")
-    tiled = build_block_tiles(g, tile_size=tile_size)
-    return TilePlan(g=g, tiled=tiled, key=key, perm=perm, inv=inv)
-
-
-class PlanCache:
-    """Two-layer (memory + optional disk) content-addressed plan store.
-
-    The memory layer is a bounded LRU (`max_mem_entries`) — a long-running
-    service must not pin every graph it has ever seen (tiles are the big
-    arrays) in host/device memory.  The disk layer is unbounded by design:
-    content-addressed `.npz` files are cheap, shared between processes, and
-    an operator concern to garbage-collect.
-    """
-
-    def __init__(
-        self,
-        tile_size: int = 32,
-        reorder: Optional[str] = None,
-        cache_dir: Optional[str] = None,
-        max_mem_entries: int = 256,
-    ):
-        self.tile_size = int(tile_size)
-        self.reorder = reorder
-        self.cache_dir = cache_dir
-        self.max_mem_entries = max(int(max_mem_entries), 1)
-        self._mem: "OrderedDict[str, TilePlan]" = OrderedDict()
-        self.stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0}
-        if cache_dir:
-            os.makedirs(cache_dir, exist_ok=True)
-
-    def _remember(self, key: str, plan: TilePlan) -> None:
-        self._mem[key] = plan
-        self._mem.move_to_end(key)
-        while len(self._mem) > self.max_mem_entries:
-            self._mem.popitem(last=False)
-
-    def plan(self, g: Graph) -> Tuple[TilePlan, str]:
-        """Return (plan, status) with status ∈ {'mem', 'disk', 'built'}."""
-        key = plan_cache_key(g, self.tile_size, self.reorder)
-        hit = self._mem.get(key)
-        if hit is not None:
-            self.stats["mem_hits"] += 1
-            self._mem.move_to_end(key)
-            return hit, "mem"
-        if self.cache_dir:
-            loaded = self._load(key)
-            if loaded is not None:
-                self.stats["disk_hits"] += 1
-                self._remember(key, loaded)
-                return loaded, "disk"
-        self.stats["misses"] += 1
-        plan = build_plan(g, self.tile_size, self.reorder, key)
-        self._remember(key, plan)
-        if self.cache_dir:
-            self._store(plan)
-        return plan, "built"
-
-    # -- disk layer --------------------------------------------------------
-
-    def _path(self, key: str) -> str:
-        return os.path.join(self.cache_dir, f"{key}.npz")
-
-    def _store(self, plan: TilePlan) -> None:
-        g, t = plan.g, plan.tiled
-        arrays = dict(
-            senders=np.asarray(g.senders)[: g.n_edges],
-            receivers=np.asarray(g.receivers)[: g.n_edges],
-            tiles=np.asarray(t.tiles),
-            tile_rows=np.asarray(t.tile_rows),
-            tile_cols=np.asarray(t.tile_cols),
-            row_starts=np.asarray(t.row_starts),
-            meta=np.asarray(
-                [g.n_nodes, g.n_edges, t.n_tiles, t.tile_size,
-                 t.n_block_rows, t.n_block_cols],
-                dtype=np.int64,
-            ),
-        )
-        if plan.perm is not None:
-            arrays["perm"] = plan.perm
-        # write under a per-writer temp name, publish atomically: concurrent
-        # workers that both miss on one key each write their own temp file
-        # and the last rename wins with identical content
-        tmp = self._path(plan.key) + f".tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
-        try:
-            with open(tmp, "wb") as f:
-                np.savez(f, **arrays)
-            os.replace(tmp, self._path(plan.key))
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-
-    def _load(self, key: str) -> Optional[TilePlan]:
-        path = self._path(key)
-        if not os.path.exists(path):
-            return None
-        try:
-            with np.load(path) as z:
-                n_nodes, n_edges, n_tiles, tile_size, nbr, nbc = (
-                    int(v) for v in z["meta"]
-                )
-                g = Graph(
-                    senders=jnp.asarray(z["senders"]),
-                    receivers=jnp.asarray(z["receivers"]),
-                    n_nodes=n_nodes,
-                    n_edges=n_edges,
-                )
-                tiled = BlockTiledGraph(
-                    tiles=jnp.asarray(z["tiles"]),
-                    tile_rows=jnp.asarray(z["tile_rows"]),
-                    tile_cols=jnp.asarray(z["tile_cols"]),
-                    row_starts=jnp.asarray(z["row_starts"]),
-                    n_tiles=n_tiles,
-                    n_nodes=n_nodes,
-                    tile_size=tile_size,
-                    n_block_rows=nbr,
-                    n_block_cols=nbc,
-                )
-                perm = np.asarray(z["perm"]) if "perm" in z.files else None
-            inv = None
-            if perm is not None:
-                inv = np.empty_like(perm)
-                inv[perm] = np.arange(n_nodes)
-            return TilePlan(g=g, tiled=tiled, key=key, perm=perm, inv=inv)
-        except Exception:  # noqa: BLE001 — np.load raises BadZipFile/EOFError/
-            return None    # pickle errors on torn files: any failure ⇒ rebuild
+__all__ = ["Plan", "PlanCache", "TilePlan", "build_plan", "plan_cache_key"]

@@ -5,20 +5,22 @@ Request lifecycle (DESIGN.md §9):
     submit ─ ingest (io) ─ plan (planner cache) ─┐
     submit ─ ingest ─ plan ───────────────────────┤ queue
     ...                                           │
-                 step(): pop ≤ max_batch ─ pack (batcher) ─ ONE jitted
-                 tc_mis dispatch ─ unpack ─ fused validity post-condition
-                 per member ─ Response
+                 step(): pop ≤ max_batch ─ Solver.solve_many (block-diagonal
+                 pack, ONE dispatch per batch) ─ fused validity
+                 post-condition per member ─ Response
 
 Every response carries per-request stats — queue time, plan-cache layer
 (mem/disk/built), bucket signature, whether this batch reused a compiled
-program, batch solve time, rounds, |MIS| — and the post-condition verdict
-from `validate.is_valid_mis_jit` (one fused jitted check per member).
+program, batch solve time, the member's OWN convergence round, |MIS| — and
+the post-condition verdict from `validate.is_valid_mis_jit` (one fused
+jitted check per member).
 
-The jit story: `_solve` is one `jax.jit` wrapper over `tc_mis`; its cache is
-keyed by the packed batch's static shapes, which the batcher buckets, so a
-steady request mix converges onto a handful of compiled programs.  The
-service additionally tracks bucket signatures it has seen to report
-compile reuse per batch.
+The execution seam is `repro.api.Solver` (DESIGN.md §10): the service owns
+the queue and the per-request bookkeeping, the Solver owns planning,
+routing (batched here; large graphs can peel off to the shard_map path on
+multi-device hosts) and compiled-program reuse — its jit cache is keyed by
+the packed batch's static shapes, which the batcher buckets, so a steady
+request mix converges onto a handful of compiled programs.
 """
 from __future__ import annotations
 
@@ -27,21 +29,19 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Union
 
-import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import get_engine
-from repro.core.tc_mis import TCMISConfig, tc_mis
+from repro.api import Solver, SolveOptions
 from repro.core.validate import is_valid_mis_jit
 from repro.graphs.graph import Graph
-from repro.serve_mis.batcher import PriorityCache, pack_batch, request_key
 from repro.serve_mis.io import load_graph
-from repro.serve_mis.planner import PlanCache, TilePlan
+from repro.serve_mis.planner import TilePlan
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    """Knobs of the serving layer (the algorithm knobs mirror TCMISConfig)."""
+    """Knobs of the serving layer (the solve knobs mirror `SolveOptions`)."""
     tile_size: int = 32
     heuristic: str = "h3"
     engine: str = "fused_pallas"   # any registered round engine
@@ -56,14 +56,21 @@ class ServeConfig:
     validate: bool = True
     seed: int = 0
 
-    def mis_config(self) -> TCMISConfig:
-        return TCMISConfig(
+    def solve_options(self) -> SolveOptions:
+        """The Solver half of this config (the front door, DESIGN.md §10)."""
+        return SolveOptions(
             heuristic=self.heuristic,
-            lanes=self.lanes,
-            backend=self.engine,
+            engine=self.engine,
             phase1=self.phase1,
+            lanes=self.lanes,
             skip_dma=self.skip_dma,
             max_rounds=self.max_rounds,
+            tile_size=self.tile_size,
+            reorder=self.reorder,
+            placement="auto",
+            seed=self.seed,
+            cache_dir=self.cache_dir,
+            plan_cache_entries=self.plan_cache_entries,
         )
 
 
@@ -85,7 +92,7 @@ class Response:
     independent: bool
     maximal: bool
     converged: bool       # BATCH-global (the shared while_loop's flag)
-    rounds: int
+    rounds: int           # this member's OWN convergence round
     stats: Dict[str, object]
 
     @property
@@ -115,31 +122,27 @@ class Response:
 
 
 class MISService:
-    """Request-queue MIS worker over the plan cache + block-diagonal batcher."""
+    """Request-queue MIS worker over the `Solver` front door."""
 
     def __init__(self, config: ServeConfig = ServeConfig()):
-        get_engine(config.engine)  # fail fast, before any request is queued
         self.config = config
-        self.planner = PlanCache(
-            tile_size=config.tile_size,
-            reorder=config.reorder,
-            cache_dir=config.cache_dir,
-            max_mem_entries=config.plan_cache_entries,
-        )
+        self.solver = Solver(config.solve_options())  # raises on bad engine
+        self.planner = self.solver.plans
         self._queue: Deque[Request] = deque()
         self._next_id = 0
-        self._base_key = jax.random.key(config.seed)
-        # sound per service instance: one base key, one heuristic (batcher)
-        self._priority_cache: PriorityCache = {}
-        self._seen_buckets: set = set()
-        self.stats = {"requests": 0, "batches": 0, "compiles": 0}
-        mis_cfg = config.mis_config()
-        self._solve = jax.jit(
-            lambda g, tiled, pri, alive0, gate: tc_mis(
-                g, tiled, self._base_key, mis_cfg,
-                priorities=pri, alive0=alive0, col_gate=gate,
-            )
-        )
+        self._requests = 0
+        # compat aliases for introspection (tests, tooling): the Solver owns
+        # the base key and the jitted packed dispatch now
+        self._base_key = self.solver._base_key
+        self._solve = self.solver._jit_packed
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {
+            "requests": self._requests,
+            "batches": self.solver.stats["batches"],
+            "compiles": self.solver.stats["compiles"],
+        }
 
     # -- intake ------------------------------------------------------------
 
@@ -165,7 +168,7 @@ class MISService:
             t_enqueue=time.perf_counter(),
         )
         self._next_id += 1
-        self.stats["requests"] += 1
+        self._requests += 1
         self._queue.append(req)
         return req.id
 
@@ -176,7 +179,7 @@ class MISService:
     # -- the worker step ----------------------------------------------------
 
     def step(self) -> List[Response]:
-        """Pop ≤ max_batch requests, solve them in ONE dispatch, respond."""
+        """Pop ≤ max_batch requests, solve them through the Solver, respond."""
         if not self._queue:
             return []
         reqs = [
@@ -184,36 +187,16 @@ class MISService:
             for _ in range(min(self.config.max_batch, len(self._queue)))
         ]
         t_pop = time.perf_counter()
-        batch = pack_batch(
-            [r.plan for r in reqs],
-            [request_key(self._base_key, r.plan) for r in reqs],
-            self.config.heuristic,
-            priority_cache=self._priority_cache,
-        )
-        sig = batch.signature()
-        reused = sig in self._seen_buckets
-        self._seen_buckets.add(sig)
-        self.stats["batches"] += 1
-        if not reused:
-            self.stats["compiles"] += 1
-
-        t0 = time.perf_counter()
-        result = self._solve(
-            batch.g, batch.tiled, batch.priorities, batch.alive0, batch.col_gate
-        )
-        jax.block_until_ready(result.in_mis)
-        solve_ms = (time.perf_counter() - t0) * 1e3
-        rounds = int(result.rounds)
-        converged = bool(result.converged)
+        results = self.solver.solve_many([r.plan for r in reqs])
 
         responses = []
-        for req, mis_plan_ids in zip(reqs, batch.unpack(result.in_mis)):
+        for req, res in zip(reqs, results):
             independent = maximal = True
             if self.config.validate:
                 independent, maximal = is_valid_mis_jit(
-                    req.plan.g, jax.numpy.asarray(mis_plan_ids)
+                    req.plan.g, jnp.asarray(res.in_mis_plan)
                 )
-            in_mis = req.plan.to_original(mis_plan_ids).astype(bool)
+            in_mis = np.asarray(res.in_mis).astype(bool)
             responses.append(Response(
                 id=req.id,
                 source=req.source,
@@ -221,14 +204,14 @@ class MISService:
                 mis_size=int(in_mis.sum()),
                 independent=independent,
                 maximal=maximal,
-                converged=converged,
-                rounds=rounds,
+                converged=res.converged,
+                rounds=res.rounds,
                 stats=dict(
                     queue_ms=round((t_pop - req.t_enqueue) * 1e3, 3),
-                    solve_ms=round(solve_ms, 3),
+                    solve_ms=res.stats.get("solve_ms", 0.0),
                     plan_cache=req.plan_status,
-                    bucket=sig,
-                    compile="reused" if reused else "compiled",
+                    bucket=res.stats.get("bucket", res.placement),
+                    compile=res.stats.get("compile", "n/a"),
                     batch_size=len(reqs),
                 ),
             ))

@@ -434,6 +434,24 @@ def test_unconverged_member_does_not_poison_batchmates():
     assert not big_resp.maximal and not big_resp.valid
 
 
+def test_service_reports_per_member_rounds():
+    """ROADMAP item: a batch member reports ITS OWN convergence round, not
+    the global round count of the batch's slowest member."""
+    svc = MISService(ServeConfig(tile_size=8, engine="tiled_ref", max_batch=4))
+    fast = from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64), 4)
+    slow = erdos_renyi(48, avg_deg=6.0, seed=0)
+    svc.submit(fast)
+    svc.submit(slow)
+    r_fast, r_slow = svc.drain()
+    plan, _ = svc.planner.plan(slow)
+    solo = tc_mis(plan.g, plan.tiled, request_key(svc._base_key, plan),
+                  TCMISConfig(backend="tiled_ref"))
+    assert int(solo.rounds) > 1, "fixture must need more than one round"
+    assert r_slow.rounds == int(solo.rounds)   # == its solo round count
+    assert r_fast.rounds == 1                  # edgeless: done in one round
+    assert r_fast.stats["bucket"] == r_slow.stats["bucket"]  # same dispatch
+
+
 def test_cli_survives_bad_request_path(capsys):
     rc = serve_main([
         "--once", "--tile-size", "8", "--engine", "tiled_ref",
