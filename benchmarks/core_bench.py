@@ -1,0 +1,158 @@
+"""Core perf trajectory: kernel + end-to-end round timings, both storage
+formats, persisted to ``BENCH_core.json`` at the repo root.
+
+Three layers per storage format (int8 | bitpack, DESIGN.md §11):
+
+  spmv / nbr_max   the raw tile operators on the jnp oracle substrate —
+                   the honest CPU numbers (Pallas interpret mode executes
+                   python per grid step, which would benchmark the
+                   interpreter; on TPU the same harness times the Mosaic
+                   kernels)
+  kernel_spmv      ONE small Pallas interpret-mode case per storage so the
+                   kernel path's trajectory is tracked at all off-TPU
+  solve            `Solver.solve` end-to-end, per-round wall clock
+
+The JSON also records the T=128 memory-footprint reduction (the storage
+axis's acceptance bar, see benchmarks/memory_footprint.py).
+
+    PYTHONPATH=src python -m benchmarks.core_bench
+    BENCH_ONLY=core PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, emit, time_fn
+from repro.api import Solver, SolveOptions
+from repro.core import build_block_tiles, tile_stats
+from repro.core.engine import tile_neighbor_max, tile_spmv
+from repro.core.spmv import _NEG
+from repro.graphs.generators import erdos_renyi
+from repro.kernels import tc_spmv
+
+OUT_PATH = os.environ.get("BENCH_CORE_OUT", "BENCH_core.json")
+STORAGES = ("int8", "bitpack")
+
+
+def _bench_tile_ops(n: int, T: int, lanes: int) -> list:
+    g = erdos_renyi(n, avg_deg=8.0, seed=0)
+    base = build_block_tiles(g, tile_size=T)
+    rhs = jax.random.normal(jax.random.key(1), (base.n_padded, lanes), jnp.float32)
+    pm = jnp.where(
+        jax.random.uniform(jax.random.key(2), (base.n_padded,)) > 0.2,
+        jax.random.randint(
+            jax.random.key(3), (base.n_padded,), 0, 1 << 20, dtype=jnp.int32
+        ),
+        _NEG,
+    )
+    rows = []
+    for storage in STORAGES:
+        t = base.to_storage(storage)
+        spmv = jax.jit(
+            lambda tiles, tr, tc: tile_spmv(tiles, tr, tc, rhs, t.n_block_rows, T)
+        )
+        nbr = jax.jit(
+            lambda tiles, tr, tc: tile_neighbor_max(
+                tiles, tr, tc, pm, t.n_block_rows, T
+            )
+        )
+        s_spmv = time_fn(spmv, t.tiles, t.tile_rows, t.tile_cols)
+        s_nbr = time_fn(nbr, t.tiles, t.tile_rows, t.tile_cols)
+        rows.append(dict(
+            op="spmv", storage=storage, n=n, tile_size=T, lanes=lanes,
+            n_tiles=t.n_tiles, us_per_call=round(s_spmv * 1e6, 1),
+            tile_payload_bytes=t.tile_payload_bytes(),
+        ))
+        rows.append(dict(
+            op="nbr_max", storage=storage, n=n, tile_size=T, lanes=lanes,
+            n_tiles=t.n_tiles, us_per_call=round(s_nbr * 1e6, 1),
+            tile_payload_bytes=t.tile_payload_bytes(),
+        ))
+        emit(f"core.spmv.{storage}.T{T}", s_spmv * 1e6, f"n_tiles={t.n_tiles}")
+        emit(f"core.nbr_max.{storage}.T{T}", s_nbr * 1e6, f"n_tiles={t.n_tiles}")
+    return rows
+
+
+def _bench_pallas_kernel(n: int, T: int) -> list:
+    """One small interpret-mode case per storage: trajectory, not truth."""
+    g = erdos_renyi(n, avg_deg=6.0, seed=4)
+    base = build_block_tiles(g, tile_size=T)
+    rhs = jax.random.normal(jax.random.key(5), (base.n_padded, 2), jnp.float32)
+    rows = []
+    for storage in STORAGES:
+        t = base.to_storage(storage)
+        s = time_fn(lambda: tc_spmv(t, rhs), warmup=1, iters=2)
+        rows.append(dict(
+            op="kernel_spmv", storage=storage, n=n, tile_size=T,
+            n_tiles=t.n_tiles, us_per_call=round(s * 1e6, 1),
+            interpret=jax.default_backend() != "tpu",
+        ))
+        emit(f"core.kernel_spmv.{storage}.T{T}", s * 1e6, f"n_tiles={t.n_tiles}")
+    return rows
+
+
+def _bench_solve(n: int, T: int) -> list:
+    g = erdos_renyi(n, avg_deg=6.0, seed=6)
+    rows = []
+    for storage in STORAGES:
+        solver = Solver(SolveOptions(
+            engine="tiled_ref", tile_size=T, storage=storage, placement="local",
+        ))
+        solver.solve(g)          # warm: plan + compile outside the timer
+        res = solver.solve(g)
+        rounds = max(res.rounds, 1)
+        ms = float(res.stats["solve_ms"])
+        rows.append(dict(
+            op="solve", storage=storage, engine="tiled_ref", n=n, tile_size=T,
+            rounds=res.rounds, solve_ms=ms,
+            us_per_round=round(ms * 1e3 / rounds, 1),
+            mis_size=res.mis_size,
+        ))
+        emit(f"core.solve.{storage}.T{T}", ms * 1e3 / rounds,
+             f"rounds={res.rounds};mis={res.mis_size}")
+    return rows
+
+
+def main() -> None:
+    n = 2048 if QUICK else 8192
+    T = 64
+    results = []
+    results += _bench_tile_ops(n, T, lanes=8)
+    results += _bench_pallas_kernel(256, 32)
+    results += _bench_solve(n, T)
+
+    # the storage axis's memory bar, recorded alongside the timings
+    g = erdos_renyi(2048, avg_deg=8.0, seed=7)
+    tiled = build_block_tiles(g, tile_size=128)
+    s_int8 = tile_stats(tiled)
+    s_pack = tile_stats(tiled.to_storage("bitpack"))
+    # whole-representation ratio (indices included) — the payload-only
+    # ratio is 8.0 by dtype arithmetic and says nothing about real HBM
+    reduction = s_int8["bsr_bytes"] / max(s_pack["bsr_bytes"], 1)
+    emit("core.mem.T128_reduction", 0.0, f"{reduction:.2f}x")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(dict(
+            bench="core",
+            backend=jax.default_backend(),
+            quick=QUICK,
+            results=results,
+            t128_tile_hbm_reduction=round(reduction, 2),
+        ), f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+
+    # bit-parity of the storage formats is asserted by tier-1 tests; here we
+    # only guard that both formats actually ran all three layers
+    by_op = {r["op"] for r in results}
+    assert by_op == {"spmv", "nbr_max", "kernel_spmv", "solve"}, by_op
+    assert all(
+        any(r["storage"] == s for r in results) for s in STORAGES
+    ), "both storage formats must be measured"
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ def main() -> None:
     only = os.environ.get("BENCH_ONLY")
     sections = [
         ("table1", "benchmarks.table1_graphs"),
+        ("core", "benchmarks.core_bench"),
         ("mem", "benchmarks.memory_footprint"),
         ("fig3", "benchmarks.fig3_quality"),
         ("fig1", "benchmarks.fig1_phase_profile"),

@@ -16,21 +16,25 @@ Three nouns route every MIS execution path in the system (DESIGN.md §10):
 Legacy entry points (`repro.core.tc_mis`, `TCMISConfig`, engine spellings
 `ref`/`pallas`) remain as deprecated shims; new code goes through here.
 """
-from repro.api.options import SolveOptions
+from repro.api.options import STORAGES, SolveOptions
 from repro.api.plan import (
+    BITPACK_AUTO_THRESHOLD,
     DEFAULT_TILE_BUDGET,
     Plan,
     PlanCache,
     build_plan,
     choose_tile_size,
     fit_tile_size,
+    graph_content_key,
     plan_cache_key,
+    resolve_storage,
 )
 from repro.api.solver import Solver, SolveResult
 
 __all__ = [
-    "SolveOptions",
-    "DEFAULT_TILE_BUDGET", "Plan", "PlanCache", "build_plan",
-    "choose_tile_size", "fit_tile_size", "plan_cache_key",
+    "SolveOptions", "STORAGES",
+    "BITPACK_AUTO_THRESHOLD", "DEFAULT_TILE_BUDGET", "Plan", "PlanCache",
+    "build_plan", "choose_tile_size", "fit_tile_size", "graph_content_key",
+    "plan_cache_key", "resolve_storage",
     "Solver", "SolveResult",
 ]

@@ -18,6 +18,7 @@ import dataclasses
 from typing import Optional
 
 PLACEMENTS = ("auto", "local", "sharded")
+STORAGES = ("auto", "int8", "bitpack")   # tile storage axis (DESIGN.md §11)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +38,13 @@ class SolveOptions:
       tile_size:  BSR tile edge T, power of two ≥ 8; None = auto-T (the
                   budgeted policy of `repro.api.plan.choose_tile_size`)
       reorder:    None | 'rcm' locality reordering
+      storage:    tile storage format (DESIGN.md §11) — 'int8' (one byte
+                  per cell), 'bitpack' (1 bit per cell, uint32 words, 8×
+                  less HBM/DMA/cache bytes), or 'auto': bitpack once the
+                  estimated int8 tile payload crosses
+                  `repro.api.plan.BITPACK_AUTO_THRESHOLD` bytes
+                  (`repro.api.plan.resolve_storage`).  Solutions are
+                  bit-identical in either format.
 
     Placement (the routing policy, DESIGN.md §10):
       placement:        auto | local | sharded.  `auto` solves on one
@@ -66,6 +74,7 @@ class SolveOptions:
 
     tile_size: Optional[int] = None
     reorder: Optional[str] = None
+    storage: str = "auto"
 
     placement: str = "auto"
     shard_threshold: int = 1 << 15
@@ -79,6 +88,10 @@ class SolveOptions:
         if self.placement not in PLACEMENTS:
             raise ValueError(
                 f"unknown placement {self.placement!r}; options {PLACEMENTS}"
+            )
+        if self.storage not in STORAGES:
+            raise ValueError(
+                f"unknown storage {self.storage!r}; valid: {STORAGES}"
             )
 
     @property

@@ -32,9 +32,11 @@ its measured-occupancy estimator for the full-scale dry-runs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import os
 import uuid
+import warnings
 from collections import OrderedDict
 from typing import Callable, Optional, Tuple, Union
 
@@ -42,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tiling import (
+    STORAGES as TILE_STORAGES,
     BlockTiledGraph,
     build_block_tiles,
     next_pow2,
@@ -49,7 +52,16 @@ from repro.core.tiling import (
 )
 from repro.graphs.graph import Graph, from_edges
 
-_PLAN_VERSION = 1  # bump to invalidate on-disk plans when the layout changes
+# v2: the storage axis (DESIGN.md §11) — packed uint32 tiles on disk, storage
+# in the cache key, and a version+storage tail on the npz `meta` record.
+# The version is deliberately NOT part of the cache key: future bumps land
+# on the SAME filename, where `_load`'s meta check detects the stale layout,
+# warns once per eviction, deletes the file and rebuilds.  (v1 files are the
+# one exception — `storage` joined the key string in v2, so they sit at old
+# key paths; `PlanCache.plan` probes the legacy v1 key on a disk miss and
+# evicts those too.)
+_PLAN_VERSION = 2
+_META_LEN = 8  # n_nodes, n_edges, n_tiles, tile_size, nbr, nbc, version, storage
 
 # --------------------------------------------------------------------------
 # the auto-T policy (paper §3.2: largest T whose BSR fits the budget)
@@ -57,6 +69,16 @@ _PLAN_VERSION = 1  # bump to invalidate on-disk plans when the layout changes
 
 DEFAULT_TILE_BUDGET = 512 << 20   # bytes of BSR payload per chip
 TILE_CANDIDATES = (128, 64, 32, 16)
+
+
+def worst_case_tile_bytes(n_nodes: int, n_edges: int, tile_size: int) -> float:
+    """Worst-case stored int8 BSR payload: `min(E, nb²)·T²` — every
+    half-edge its own tile, capped by the block grid, so the bound never
+    under-estimates.  THE shared estimate of both auto policies (auto-T
+    and auto-storage): one definition, or their decisions desynchronise."""
+    T = int(tile_size)
+    nb = -(-max(int(n_nodes), 1) // T)
+    return min(max(int(n_edges), 1), nb * nb) * T * T
 
 
 def fit_tile_size(
@@ -78,6 +100,36 @@ def fit_tile_size(
     return candidates[-1]
 
 
+# --------------------------------------------------------------------------
+# the auto-storage policy (DESIGN.md §11: bitpack once tile bytes bite)
+# --------------------------------------------------------------------------
+
+BITPACK_AUTO_THRESHOLD = 1 << 20   # est. int8 tile payload bytes → bitpack
+
+
+def resolve_storage(
+    storage: str,
+    n_nodes: int,
+    n_edges: int,
+    tile_size: int,
+    *,
+    threshold: int = BITPACK_AUTO_THRESHOLD,
+) -> str:
+    """Concrete tile storage for a graph: 'auto' flips to bitpack once the
+    worst-case int8 tile payload (`worst_case_tile_bytes`, shared with the
+    auto-T policy so the two agree on the estimate) crosses `threshold`
+    bytes — small graphs keep the simpler dense tiles, large ones take the
+    8× HBM/DMA reduction.  Concrete spellings pass through."""
+    if storage in TILE_STORAGES:
+        return storage
+    if storage != "auto":
+        raise ValueError(
+            f"unknown storage {storage!r}; valid: {('auto',) + TILE_STORAGES}"
+        )
+    est = worst_case_tile_bytes(n_nodes, n_edges, tile_size)
+    return "bitpack" if est >= threshold else "int8"
+
+
 def choose_tile_size(
     n_nodes: int,
     n_edges: int,
@@ -95,11 +147,10 @@ def choose_tile_size(
     cap = next_pow2(max(min(int(n_nodes), TILE_CANDIDATES[0]), TILE_CANDIDATES[-1]))
     candidates = tuple(T for T in TILE_CANDIDATES if T <= cap) or (TILE_CANDIDATES[-1],)
 
-    def worst_case_bytes(T: int) -> float:
-        nb = -(-max(int(n_nodes), 1) // T)
-        return min(max(int(n_edges), 1), nb * nb) * T * T / max(int(n_chips), 1)
+    def per_chip_bytes(T: int) -> float:
+        return worst_case_tile_bytes(n_nodes, n_edges, T) / max(int(n_chips), 1)
 
-    return fit_tile_size(worst_case_bytes, budget=budget, candidates=candidates)
+    return fit_tile_size(per_chip_bytes, budget=budget, candidates=candidates)
 
 
 # --------------------------------------------------------------------------
@@ -133,6 +184,19 @@ class Plan:
     def tile_size(self) -> int:
         return self.tiled.tile_size
 
+    @property
+    def storage(self) -> str:
+        """Tile storage format this plan was built with (DESIGN.md §11)."""
+        return self.tiled.storage
+
+    @functools.cached_property
+    def graph_key(self) -> str:
+        """Build-parameter-free content hash — the identity of the *graph*
+        alone.  Per-request PRNG keys derive from this (not `key`, which
+        bakes in tile_size/reorder/storage), so a member's priorities — and
+        therefore its solution — are invariant across storage formats."""
+        return graph_content_key(self.g)
+
     def to_original(self, x: np.ndarray) -> np.ndarray:
         """Map a per-vertex plan-id vector back to original vertex ids."""
         x = np.asarray(x)[: self.g.n_nodes]
@@ -150,6 +214,7 @@ class Plan:
         *,
         tile_size: Optional[int] = None,
         reorder: Optional[str] = None,
+        storage: str = "int8",
         cache: Optional["PlanCache"] = None,
     ) -> "Plan":
         """The front door: plan a graph, through a cache when one is given.
@@ -157,38 +222,82 @@ class Plan:
         `tile_size=None` applies the auto-T policy (`choose_tile_size`) —
         with or without a cache, so the same call plans the same graph
         identically either way (the cache's constructor `tile_size` is only
-        the default of its own `plan()` method).  A `Plan` passes through
-        untouched — callers may hold either.
+        the default of its own `plan()` method).  `storage` may be a
+        concrete format or 'auto' (`resolve_storage`).  A `Plan` passes
+        through untouched — callers may hold either.
         """
         if isinstance(graph, Plan):
             return graph
         T = tile_size or choose_tile_size(graph.n_nodes, graph.n_edges)
+        storage = resolve_storage(storage, graph.n_nodes, graph.n_edges, T)
         if cache is not None:
-            return cache.plan(graph, tile_size=T, reorder=reorder)[0]
-        return build_plan(graph, T, reorder, plan_cache_key(graph, T, reorder))
+            return cache.plan(
+                graph, tile_size=T, reorder=reorder, storage=storage
+            )[0]
+        return build_plan(
+            graph, T, reorder, plan_cache_key(graph, T, reorder, storage),
+            storage=storage,
+        )
 
 
 # backwards-compatible spelling (`repro.serve_mis.planner.TilePlan`)
 TilePlan = Plan
 
 
-def plan_cache_key(g: Graph, tile_size: int, reorder: Optional[str]) -> str:
+def graph_content_key(g: Graph) -> str:
+    """Content hash of the graph ALONE — no build parameters.  The identity
+    `request_key` derivations hang off (see `Plan.graph_key`): the same
+    graph must draw the same priorities whatever tile size, reordering or
+    storage format it was planned with."""
+    h = hashlib.sha256()
+    h.update(f"tcmis-graph|{g.n_nodes}".encode())
+    h.update(np.asarray(g.senders)[: g.n_edges].astype(np.int32).tobytes())
+    h.update(np.asarray(g.receivers)[: g.n_edges].astype(np.int32).tobytes())
+    return h.hexdigest()
+
+
+def plan_cache_key(
+    g: Graph,
+    tile_size: int,
+    reorder: Optional[str],
+    storage: str = "int8",
+) -> str:
     """Content hash of (canonical edges, n_nodes, build params).
 
     `from_edges` already canonicalises (dedupe, both directions, sender-sorted),
     so any two loads of the same graph — different files, different formats,
-    shuffled edge order — hash identically.
+    shuffled edge order — hash identically.  `storage` is a build param:
+    int8 and bitpack plans of one graph are distinct cache entries.
     """
     h = hashlib.sha256()
+    # no version in the key: a format bump must hit the SAME file so the
+    # meta check in `PlanCache._load` can detect + evict the stale layout
     h.update(
-        f"tcmis-plan-v{_PLAN_VERSION}|{g.n_nodes}|{tile_size}|{reorder or ''}".encode()
+        f"tcmis-plan|{g.n_nodes}|{tile_size}|{reorder or ''}|{storage}".encode()
     )
     h.update(np.asarray(g.senders)[: g.n_edges].astype(np.int32).tobytes())
     h.update(np.asarray(g.receivers)[: g.n_edges].astype(np.int32).tobytes())
     return h.hexdigest()
 
 
-def build_plan(g: Graph, tile_size: int, reorder: Optional[str], key: str) -> Plan:
+def _legacy_v1_cache_key(g: Graph, tile_size: int, reorder: Optional[str]) -> str:
+    """The pre-storage-axis (v1) key derivation — kept ONLY so the cache can
+    find and evict v1 disk entries, which live at different paths because
+    `storage` joined the key string in v2."""
+    h = hashlib.sha256()
+    h.update(f"tcmis-plan-v1|{g.n_nodes}|{tile_size}|{reorder or ''}".encode())
+    h.update(np.asarray(g.senders)[: g.n_edges].astype(np.int32).tobytes())
+    h.update(np.asarray(g.receivers)[: g.n_edges].astype(np.int32).tobytes())
+    return h.hexdigest()
+
+
+def build_plan(
+    g: Graph,
+    tile_size: int,
+    reorder: Optional[str],
+    key: str,
+    storage: str = "int8",
+) -> Plan:
     """The cache-miss path: (optional) RCM + BSR tiling, no caching."""
     perm = inv = None
     if reorder == "rcm":
@@ -200,7 +309,7 @@ def build_plan(g: Graph, tile_size: int, reorder: Optional[str], key: str) -> Pl
         g = from_edges(inv[s], inv[r], g.n_nodes)
     elif reorder is not None:
         raise ValueError(f"unknown reorder {reorder!r} (None or 'rcm')")
-    tiled = build_block_tiles(g, tile_size=tile_size)
+    tiled = build_block_tiles(g, tile_size=tile_size, storage=storage)
     return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv, reorder=reorder)
 
 
@@ -213,9 +322,13 @@ class PlanCache:
     content-addressed `.npz` files are cheap, shared between processes, and
     an operator concern to garbage-collect.
 
-    `tile_size`/`reorder` given at construction are defaults; `plan` accepts
-    per-call overrides (the `Solver`'s auto-T policy picks a per-graph T),
-    and the cache key includes both, so entries never collide across builds.
+    `tile_size`/`reorder`/`storage` given at construction are defaults;
+    `plan` accepts per-call overrides (the `Solver`'s auto policies pick
+    per-graph values), and the cache key includes all of them, so entries
+    never collide across builds.  Disk entries carry the cache-format
+    version (`_PLAN_VERSION`); entries written by an older format — e.g.
+    pre-storage-axis v1 files — are detected on load, evicted with a
+    warning, and rebuilt rather than mis-read.
     """
 
     def __init__(
@@ -224,13 +337,15 @@ class PlanCache:
         reorder: Optional[str] = None,
         cache_dir: Optional[str] = None,
         max_mem_entries: int = 256,
+        storage: str = "int8",
     ):
         self.tile_size = int(tile_size)
         self.reorder = reorder
+        self.storage = storage
         self.cache_dir = cache_dir
         self.max_mem_entries = max(int(max_mem_entries), 1)
         self._mem: "OrderedDict[str, Plan]" = OrderedDict()
-        self.stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0}
+        self.stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "evicted_stale": 0}
         if cache_dir:
             os.makedirs(cache_dir, exist_ok=True)
 
@@ -246,11 +361,16 @@ class PlanCache:
         *,
         tile_size: Optional[int] = None,
         reorder: Optional[str] = None,
+        storage: Optional[str] = None,
     ) -> Tuple[Plan, str]:
         """Return (plan, status) with status ∈ {'mem', 'disk', 'built'}."""
         T = self.tile_size if tile_size is None else int(tile_size)
         ro = self.reorder if reorder is None else reorder
-        key = plan_cache_key(g, T, ro)
+        st = resolve_storage(
+            self.storage if storage is None else storage,
+            g.n_nodes, g.n_edges, T,
+        )
+        key = plan_cache_key(g, T, ro, st)
         hit = self._mem.get(key)
         if hit is not None:
             self.stats["mem_hits"] += 1
@@ -262,8 +382,14 @@ class PlanCache:
                 self.stats["disk_hits"] += 1
                 self._remember(key, loaded)
                 return loaded, "disk"
+            # disk miss: a v1 entry for this graph (pre-storage-axis key)
+            # may still sit at its legacy path — evict it so upgrades
+            # clean up rather than orphan old-format files
+            legacy = self._path(_legacy_v1_cache_key(g, T, ro))
+            if os.path.exists(legacy):
+                self._evict_stale(legacy, "pre-storage-axis entry (v1 key)")
         self.stats["misses"] += 1
-        plan = build_plan(g, T, ro, key)
+        plan = build_plan(g, T, ro, key, storage=st)
         self._remember(key, plan)
         if self.cache_dir:
             self._store(plan)
@@ -276,6 +402,8 @@ class PlanCache:
 
     def _store(self, plan: Plan) -> None:
         g, t = plan.g, plan.tiled
+        # tiles persist AS STORED — a bitpack plan's disk entry is the same
+        # 8× smaller than its int8 twin as its HBM copy
         arrays = dict(
             senders=np.asarray(g.senders)[: g.n_edges],
             receivers=np.asarray(g.receivers)[: g.n_edges],
@@ -285,7 +413,8 @@ class PlanCache:
             row_starts=np.asarray(t.row_starts),
             meta=np.asarray(
                 [g.n_nodes, g.n_edges, t.n_tiles, t.tile_size,
-                 t.n_block_rows, t.n_block_cols],
+                 t.n_block_rows, t.n_block_cols,
+                 _PLAN_VERSION, TILE_STORAGES.index(t.storage)],
                 dtype=np.int64,
             ),
         )
@@ -303,15 +432,37 @@ class PlanCache:
             if os.path.exists(tmp):
                 os.unlink(tmp)
 
+    def _evict_stale(self, path: str, found: str) -> None:
+        """Old-format disk entry: warn (one line), delete, let the caller
+        rebuild — a stale layout must never be mis-read as current."""
+        self.stats["evicted_stale"] += 1
+        warnings.warn(
+            f"evicting stale plan-cache entry {os.path.basename(path)}: "
+            f"{found}, current format v{_PLAN_VERSION} — rebuilding",
+            stacklevel=3,
+        )
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+
     def _load(self, key: str, reorder: Optional[str]) -> Optional[Plan]:
         path = self._path(key)
         if not os.path.exists(path):
             return None
         try:
             with np.load(path) as z:
+                meta = z["meta"]
+                if meta.shape[0] < _META_LEN:
+                    self._evict_stale(path, "pre-versioned entry (v1 layout)")
+                    return None
+                if int(meta[6]) != _PLAN_VERSION:
+                    self._evict_stale(path, f"format v{int(meta[6])}")
+                    return None
                 n_nodes, n_edges, n_tiles, tile_size, nbr, nbc = (
-                    int(v) for v in z["meta"]
+                    int(v) for v in meta[:6]
                 )
+                storage = TILE_STORAGES[int(meta[7])]
                 g = Graph(
                     senders=jnp.asarray(z["senders"]),
                     receivers=jnp.asarray(z["receivers"]),
@@ -328,6 +479,7 @@ class PlanCache:
                     tile_size=tile_size,
                     n_block_rows=nbr,
                     n_block_cols=nbc,
+                    storage=storage,
                 )
                 perm = np.asarray(z["perm"]) if "perm" in z.files else None
             inv = None

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.options import SolveOptions
-from repro.api.plan import Plan, PlanCache, choose_tile_size
+from repro.api.plan import Plan, PlanCache, choose_tile_size, resolve_storage
 from repro.core.engine import get_engine
 from repro.core.heuristics import make_priorities
 from repro.core.luby import MISResult
@@ -96,6 +96,7 @@ class Solver:
         self.plans = plans if plans is not None else PlanCache(
             tile_size=options.tile_size or 32,
             reorder=options.reorder,
+            storage=options.storage,   # cache default mirrors the Solver
             cache_dir=options.cache_dir,
             max_mem_entries=options.plan_cache_entries,
         )
@@ -130,13 +131,18 @@ class Solver:
 
     def plan(self, graph: GraphLike) -> Plan:
         """Plan a graph through the content-addressed cache (a `Plan` passes
-        through untouched).  Auto-T applies when `options.tile_size` is None."""
+        through untouched).  Auto-T applies when `options.tile_size` is
+        None; `options.storage='auto'` resolves per graph (bitpack once the
+        estimated tile payload crosses the threshold, DESIGN.md §11)."""
         if isinstance(graph, Plan):
             return graph
         tile_size = self.options.tile_size or choose_tile_size(
             graph.n_nodes, graph.n_edges
         )
-        plan, _ = self.plans.plan(graph, tile_size=tile_size)
+        storage = resolve_storage(
+            self.options.storage, graph.n_nodes, graph.n_edges, tile_size
+        )
+        plan, _ = self.plans.plan(graph, tile_size=tile_size, storage=storage)
         return plan
 
     def request_key(self, plan: Plan) -> jax.Array:
@@ -199,12 +205,13 @@ class Solver:
             return [self.solve(plans[0], key=keys[0])]
 
         out: List[Optional[SolveResult]] = [None] * len(plans)
-        groups: "OrderedDict[int, List[int]]" = OrderedDict()
+        # a batch must share T AND tile storage (one block-diagonal dtype)
+        groups: "OrderedDict[tuple, List[int]]" = OrderedDict()
         for i, p in enumerate(plans):
             if self.route(p) == "sharded":
                 out[i] = self._solve_sharded(p, keys[i])
             else:
-                groups.setdefault(p.tile_size, []).append(i)
+                groups.setdefault((p.tile_size, p.tiled.storage), []).append(i)
         for idxs in groups.values():
             if len(idxs) == 1:
                 i = idxs[0]
@@ -258,8 +265,8 @@ class Solver:
         # every static trace input of the jitted program, or the stat lies
         t = plan.tiled
         compile_stat = self._note_signature(
-            ("local", t.tile_size, t.n_block_rows, t.n_block_cols, t.n_tiles,
-             int(t.tiles.shape[0]), t.n_nodes, plan.g.n_nodes,
+            ("local", t.tile_size, t.storage, t.n_block_rows, t.n_block_cols,
+             t.n_tiles, int(t.tiles.shape[0]), t.n_nodes, plan.g.n_nodes,
              plan.g.n_edges, plan.g.e_pad)
         )
         t0 = time.perf_counter()

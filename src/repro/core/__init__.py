@@ -14,10 +14,14 @@ from repro.core.luby import MISResult, luby_mis
 from repro.core.ecl_mis import ecl_mis
 from repro.core.tc_mis import TCMISConfig, tc_mis, run_phases
 from repro.core.tiling import (
+    STORAGES,
     BlockTiledGraph,
     build_block_tiles,
+    pack_tile_bits,
     pack_vertex_vector,
+    packed_words,
     tile_stats,
+    unpack_tile_bits,
     unpack_vertex_vector,
 )
 from repro.core.validate import (
@@ -40,8 +44,9 @@ __all__ = [
     "HEURISTICS", "Priorities", "make_priorities",
     "MISResult", "luby_mis", "ecl_mis",
     "TCMISConfig", "tc_mis", "run_phases",
-    "BlockTiledGraph", "build_block_tiles", "pack_vertex_vector",
-    "unpack_vertex_vector", "tile_stats",
+    "STORAGES", "BlockTiledGraph", "build_block_tiles", "pack_tile_bits",
+    "pack_vertex_vector", "packed_words", "tile_stats", "unpack_tile_bits",
+    "unpack_vertex_vector",
     "cardinality", "is_independent", "is_maximal", "is_valid_mis",
     "is_valid_mis_jit",
     "DistConfig", "ShardedTiledGraph", "build_distributed_mis", "shard_tiled",

@@ -37,7 +37,9 @@ from repro.core.tiling import BlockTiledGraph
 class ShardedTiledGraph:
     """Row-partitioned BSR; leading axis is the shard axis.
 
-    tiles:     (S, nt_pad, T, T) int8
+    tiles:     (S, nt_pad, T, T) int8 — or (S, nt_pad, T, W) uint32 when the
+               source tiling is bit-packed (DESIGN.md §11); sharding is
+               storage-agnostic, each shard's slab stays in the source format
     tile_rows: (S, nt_pad) int32 — block-row LOCAL to the shard
     tile_cols: (S, nt_pad) int32 — GLOBAL block-column
     """
@@ -57,7 +59,10 @@ class ShardedTiledGraph:
 
 
 def shard_tiled(tiled: BlockTiledGraph, n_shards: int) -> ShardedTiledGraph:
-    """Split a BSR graph into ``n_shards`` row slabs, padded to a rectangle."""
+    """Split a BSR graph into ``n_shards`` row slabs, padded to a rectangle.
+
+    Storage-agnostic: packed uint32 tiles shard shard-locally in their
+    packed form (the per-shard HBM slab shrinks by the same 8×)."""
     T = tiled.tile_size
     nbr = tiled.n_block_rows
     rows_per_shard = -(-nbr // n_shards)
@@ -73,7 +78,7 @@ def shard_tiled(tiled: BlockTiledGraph, n_shards: int) -> ShardedTiledGraph:
     max_nt = max(int(np.max(np.bincount(owner, minlength=n_shards))) if tr.size else 0, 1)
     max_nt = ((max_nt + 7) // 8) * 8
 
-    tiles_s = np.zeros((n_shards, max_nt, T, T), dtype=np.int8)
+    tiles_s = np.zeros((n_shards, max_nt) + t.shape[1:], dtype=t.dtype)
     # padding tiles carry the last local row (monotone) and column 0
     rows_s = np.full((n_shards, max_nt), rows_per_shard - 1, dtype=np.int32)
     cols_s = np.zeros((n_shards, max_nt), dtype=np.int32)

@@ -4,10 +4,12 @@ Every execution path of the system — the paper-faithful CC baseline, the jnp
 tile oracle, the Pallas SpMV kernel, and the fused phase-②+③ kernel — is a
 `RoundEngine`: an object that knows how to run one MIS round (DESIGN.md §4).
 The driver (`core.tc_mis`) is engine-agnostic; it owns only the convergence
-loop.  Benchmarks, examples and future backends (GPU Pallas, bit-packed
-masks) select engines from the registry instead of hard-coding call sites —
-kernel selection is a pluggable policy over one tiled schedule, the way
-BLEST/HC-SpMM treat their kernel zoos.
+loop.  Benchmarks, examples and future backends (GPU Pallas) select engines
+from the registry instead of hard-coding call sites — kernel selection is a
+pluggable policy over one tiled schedule, the way BLEST/HC-SpMM treat their
+kernel zoos.  (Bit-packed masks — once a forward reference here — are now a
+first-class STORAGE axis, not a backend: every engine runs either tile
+format, see DESIGN.md §11 and `core.tiling.STORAGES`.)
 
 Registered engines:
 
@@ -42,7 +44,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tiling import BlockTiledGraph, pack_vertex_vector
+from repro.core.tiling import (
+    BlockTiledGraph,
+    dense_tiles,
+    pack_vertex_vector,
+)
 from repro.graphs.graph import Graph
 
 _NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
@@ -53,7 +59,7 @@ _NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under
 # --------------------------------------------------------------------------
 
 def tile_spmv(
-    tiles: jnp.ndarray,          # (nt, T, T) int8
+    tiles: jnp.ndarray,          # (nt, T, T) int8 | (nt, T, W) uint32 packed
     tile_rows: jnp.ndarray,      # (nt,) int32, non-decreasing
     tile_cols: jnp.ndarray,      # (nt,) int32
     rhs: jnp.ndarray,            # (nbc*T, L) float
@@ -69,6 +75,7 @@ def tile_spmv(
     contributes nothing on any lane).  Returns (n_block_rows*T, L) float32.
     """
     T = tile_size
+    tiles = dense_tiles(tiles, T)
     blocks = rhs.reshape(-1, T, rhs.shape[-1])
     gathered = blocks[tile_cols]                             # (nt, T, L)
     if col_flags is not None:
@@ -92,6 +99,7 @@ def tile_neighbor_max(
 ) -> jnp.ndarray:
     """Max_Np over the same BSR schedule (VPU work — max has no MXU form)."""
     T = tile_size
+    tiles = dense_tiles(tiles, T)
     gathered = pm.reshape(-1, T)[tile_cols]                  # (nt, T)
     # tile (T,T) row v, col u: edge v->u.  masked max over columns.
     vals = jnp.where(tiles != 0, gathered[:, None, :], _NEG)  # (nt, T, T)

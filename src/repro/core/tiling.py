@@ -10,7 +10,20 @@ The paper uses T=16 (WMMA fragment size).  The TPU MXU is a 128×128 systolic
 array, so T defaults to 128 here; the builder takes any power of two ≥ 8 and
 the benchmarks sweep it (see DESIGN.md §2 for the density trade-off).
 
-Tiles store 0/1 in int8 (HBM-compact); kernels upcast to bf16 at the MXU.
+Tiles are 0/1 matrices, stored in one of two formats — the `storage` axis of
+the representation (DESIGN.md §11):
+
+  int8      (nt, T, T) int8 — one byte per cell.  The original layout and
+            the oracle substrate; kernels upcast to bf16/f32 at the MXU.
+  bitpack   (nt, T, W) uint32 with W = max(T // 32, 1) — 1 bit per cell,
+            packed along columns (bit j of word w of row v = column
+            32·w + j).  8× less HBM, DMA traffic and plan-cache bytes; the
+            Pallas kernels unpack per-tile in VMEM after the DMA, so HBM
+            only ever sees packed words.
+
+`pack_tile_bits` (host, numpy) and `unpack_tile_bits` (jnp, jit- and
+kernel-safe) convert between them; every consumer detects the format from
+the tile dtype, so raw-array call sites stay storage-polymorphic.
 """
 from __future__ import annotations
 
@@ -22,6 +35,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.graph import Graph
+
+STORAGES = ("int8", "bitpack")   # concrete tile storage formats
+_BITS = 32                       # bits per packed word (uint32)
+
+
+def packed_words(tile_size: int) -> int:
+    """Words per packed tile row: ceil over 32, floor 1 (T=8/16 use the low
+    T bits of a single word)."""
+    return max(int(tile_size) // _BITS, 1)
+
+
+def pack_tile_bits(tiles) -> np.ndarray:
+    """(..., T, T) 0/1 -> (..., T, W) uint32, bits packed along columns.
+
+    Host-side (numpy): the build/cache path packs once; unpacking is the
+    jit/kernel-side operation (`unpack_tile_bits`)."""
+    t = np.asarray(tiles)
+    T = t.shape[-1]
+    W = packed_words(T)
+    bits = (t != 0).astype(np.uint32)
+    if W * _BITS != T:  # T < 32: pad columns up to one full word
+        pad = np.zeros(t.shape[:-1] + (W * _BITS - T,), np.uint32)
+        bits = np.concatenate([bits, pad], axis=-1)
+    bits = bits.reshape(t.shape[:-1] + (W, _BITS))
+    weights = np.uint32(1) << np.arange(_BITS, dtype=np.uint32)
+    # disjoint bit positions ⇒ OR-reduce is an overflow-free sum
+    return np.bitwise_or.reduce(bits * weights, axis=-1)
+
+
+def unpack_tile_bits(packed: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """(..., T, W) uint32 -> (..., T, T) int8 — the jit/kernel-side inverse.
+
+    Uses `broadcasted_iota` (not 1-D arange) so the same expression lowers
+    inside Pallas TPU kernel bodies, where it runs on the VMEM-resident
+    block right after the (8× smaller) DMA."""
+    W = packed.shape[-1]
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint32, packed.shape + (_BITS,), len(packed.shape)
+    )
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    full = bits.reshape(packed.shape[:-1] + (W * _BITS,))
+    return full[..., : int(tile_size)].astype(jnp.int8)
+
+
+def dense_tiles(tiles: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """Storage dispatch for ORACLE paths (jnp engine ops, `kernels/ref.py`):
+    packed uint32 tiles densify under jit, int8 tiles pass through.  The
+    Pallas kernels must never call this — they unpack per-tile in VMEM so
+    HBM only sees packed words (enforced by tools/ci_guards.py)."""
+    if tiles.dtype == jnp.uint32:
+        return unpack_tile_bits(tiles, tile_size)
+    return tiles
 
 
 def next_pow2(x: int) -> int:
@@ -37,7 +102,8 @@ class BlockTiledGraph:
     """BSR adjacency: only non-empty T×T tiles, row-major block order.
 
     Attributes:
-      tiles:      (n_tiles_pad, T, T) int8 — 0/1 dense tiles (padding = zeros).
+      tiles:      (n_tiles_pad, T, T) int8 or (n_tiles_pad, T, W) uint32 —
+                  0/1 dense tiles per `storage` (padding = zeros).
       tile_rows:  (n_tiles_pad,) int32 — block-row of each tile (padding tiles
                   carry the *last real* block-row so revisit-accumulation
                   stays monotone and adds zero).
@@ -48,6 +114,8 @@ class BlockTiledGraph:
       n_nodes:    static — vertex count (pre-padding).
       tile_size:  static — T.
       n_block_rows / n_block_cols: static — ceil(n_nodes / T).
+      storage:    static — 'int8' | 'bitpack' (the tile dtype's declared
+                  format; raw-array consumers detect it from the dtype).
     """
     tiles: jnp.ndarray
     tile_rows: jnp.ndarray
@@ -58,6 +126,7 @@ class BlockTiledGraph:
     tile_size: int = dataclasses.field(metadata=dict(static=True))
     n_block_rows: int = dataclasses.field(metadata=dict(static=True))
     n_block_cols: int = dataclasses.field(metadata=dict(static=True))
+    storage: str = dataclasses.field(default="int8", metadata=dict(static=True))
 
     @property
     def n_tiles_pad(self) -> int:
@@ -68,18 +137,54 @@ class BlockTiledGraph:
         """Vertex count rounded up to a whole number of tiles."""
         return self.n_block_rows * self.tile_size
 
+    def nnz(self) -> int:
+        """Edge count over stored tiles, computed ON DEVICE — only the
+        scalar crosses to host (bitpack counts bits via popcount)."""
+        if self.n_tiles == 0:
+            return 0
+        t = self.tiles[: self.n_tiles]
+        if self.storage == "bitpack":
+            count = jnp.sum(
+                jax.lax.population_count(t).astype(jnp.int32), dtype=jnp.int32
+            )
+        else:
+            count = jnp.count_nonzero(t)
+        return int(count)
+
     def density(self) -> float:
         """Fraction of tile cells that are real edges (the paper's trade-off)."""
-        t = np.asarray(self.tiles[: self.n_tiles])
-        return float(t.sum()) / max(t.size, 1)
+        cells = self.n_tiles * self.tile_size * self.tile_size
+        return self.nnz() / max(cells, 1)
+
+    def tile_payload_bytes(self) -> int:
+        """Bytes of stored tile payload alone (the HBM/DMA term the storage
+        axis shrinks 8×)."""
+        return self.tiles.size * self.tiles.dtype.itemsize
 
     def memory_bytes(self) -> int:
-        """HBM footprint of the tiled representation."""
+        """HBM footprint of the tiled representation (payload + indices)."""
         return (
-            self.tiles.size * self.tiles.dtype.itemsize
+            self.tile_payload_bytes()
             + self.tile_rows.size * 4
             + self.tile_cols.size * 4
+            + self.row_starts.size * 4
         )
+
+    def to_storage(self, storage: str) -> "BlockTiledGraph":
+        """Convert between tile storage formats (host-side, exact)."""
+        if storage not in STORAGES:
+            raise ValueError(
+                f"unknown storage {storage!r}; valid: {STORAGES}"
+            )
+        if storage == self.storage:
+            return self
+        if storage == "bitpack":
+            tiles = jnp.asarray(pack_tile_bits(np.asarray(self.tiles)))
+        else:
+            tiles = jnp.asarray(
+                np.asarray(unpack_tile_bits(self.tiles, self.tile_size))
+            )
+        return dataclasses.replace(self, tiles=tiles, storage=storage)
 
 
 def rcm_ordering(g: Graph) -> np.ndarray:
@@ -107,6 +212,7 @@ def build_block_tiles(
     *,
     pad_tiles_to: int | None = None,
     reorder: str | None = None,   # None | 'rcm'
+    storage: str = "int8",        # 'int8' | 'bitpack'
 ) -> BlockTiledGraph:
     """Tile ``g``'s adjacency matrix (host-side, numpy).
 
@@ -115,7 +221,8 @@ def build_block_tiles(
       2. map each half-edge (u, v) to tile key (u//T, v//T),
       3. unique keys, sorted row-major → tile index per edge,
       4. scatter edges into dense tiles,
-      5. pad the tile list so shapes are static/shardable.
+      5. pad the tile list so shapes are static/shardable,
+      6. (storage='bitpack') pack each tile's columns into uint32 words.
 
     NOTE with reorder='rcm' the returned tiling indexes PERMUTED vertex ids;
     callers must map priorities/results through the same permutation (the
@@ -125,6 +232,8 @@ def build_block_tiles(
     T = int(tile_size)
     if T < 8 or (T & (T - 1)):
         raise ValueError(f"tile_size must be a power of two >= 8, got {T}")
+    if storage not in STORAGES:
+        raise ValueError(f"unknown storage {storage!r}; valid: {STORAGES}")
     s = np.asarray(g.senders)[: g.n_edges].astype(np.int64)
     r = np.asarray(g.receivers)[: g.n_edges].astype(np.int64)
     if reorder == "rcm":
@@ -171,6 +280,8 @@ def build_block_tiles(
             [tile_cols, np.zeros(target - stored, dtype=np.int32)]
         )
 
+    if storage == "bitpack":
+        tiles = pack_tile_bits(tiles)
     return BlockTiledGraph(
         tiles=jnp.asarray(tiles),
         tile_rows=jnp.asarray(tile_rows),
@@ -181,6 +292,7 @@ def build_block_tiles(
         tile_size=T,
         n_block_rows=int(nb),
         n_block_cols=int(nb),
+        storage=storage,
     )
 
 
@@ -195,16 +307,21 @@ def unpack_vertex_vector(x: jnp.ndarray, tiled: BlockTiledGraph) -> jnp.ndarray:
 
 
 def tile_stats(tiled: BlockTiledGraph) -> dict:
-    """Host-side stats for the memory-footprint benchmark (paper §3.2)."""
-    t = np.asarray(tiled.tiles[: max(tiled.n_tiles, 1)])
-    nnz = int(t.sum())
+    """Stats for the memory-footprint benchmark (paper §3.2).
+
+    nnz is computed on device (`BlockTiledGraph.nnz`) — only the scalar is
+    transferred; the old `np.asarray(tiles)` full-array pull is gone."""
+    nnz = tiled.nnz()
+    cells = tiled.n_tiles * tiled.tile_size * tiled.tile_size
     total_blocks = tiled.n_block_rows * tiled.n_block_cols
     return dict(
         tile_size=tiled.tile_size,
         n_tiles=tiled.n_tiles,
+        storage=tiled.storage,
         block_grid=total_blocks,
         block_occupancy=tiled.n_tiles / max(total_blocks, 1),
-        intra_tile_density=nnz / max(t.size, 1),
+        intra_tile_density=nnz / max(cells, 1),
+        tile_payload_bytes=tiled.tile_payload_bytes(),
         bsr_bytes=tiled.memory_bytes(),
         csr_bytes=8 * nnz + 4 * (tiled.n_nodes + 1),  # int32 idx + int64-ish ptr
     )

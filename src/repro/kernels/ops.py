@@ -4,6 +4,12 @@ Dispatch policy: on CPU (this container) kernels run `interpret=True`, which
 executes the kernel body in Python per grid step — bit-identical semantics to
 the TPU lowering, minus performance.  On TPU the same call sites compile the
 real Mosaic kernels.  `interpret=None` means "auto by backend".
+
+Storage axis (DESIGN.md §11): `tiled.tiles` is passed to the kernels AS
+STORED — dense int8 or bit-packed uint32 — and never densified here; a
+pre-kernel unpack would materialise the (nt, T, T) array in HBM and forfeit
+the 8× DMA saving (CI guards this: `tools/ci_guards.py`).  The kernels
+detect the format from the dtype and unpack per-tile in VMEM.
 """
 from __future__ import annotations
 

@@ -2,13 +2,17 @@
 
 These are intentionally naive — materialise-gather-einsum-segment — so they
 are obviously correct and serve as the numerical ground truth for the
-shape/dtype sweeps in tests/test_kernels_*.py.
+shape/dtype sweeps in tests/test_kernels_*.py.  Bit-packed uint32 tiles are
+densified up front (this IS the oracle/int8 path — the one place a full
+(nt, T, T) unpack is allowed; the Pallas kernels unpack per-tile in VMEM).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.tiling import dense_tiles
 
 _NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
 
@@ -25,6 +29,7 @@ def tc_spmv_ref(
     """Oracle for tc_spmv_pallas (col_flags only gates *empty* slabs, so the
     result is identical with or without them — asserted in tests)."""
     nt, T, _ = tiles.shape
+    tiles = dense_tiles(tiles, T)
     L = rhs.shape[-1]
     blocks = rhs.reshape(-1, T, L)
     gathered = blocks[tile_cols].astype(jnp.float32)
@@ -42,6 +47,7 @@ def tc_neighbor_max_ref(
 ) -> jnp.ndarray:
     """Oracle for tc_neighbor_max_pallas."""
     nt, T, _ = tiles.shape
+    tiles = dense_tiles(tiles, T)
     pm2 = pm.reshape(-1, T)
     gathered = pm2[tile_cols]                                # (nt, T)
     vals = jnp.where(tiles != 0, gathered[:, None, :], _NEG)  # (nt, T, T)

@@ -12,6 +12,10 @@ whole MIS round becomes tile-regular (DESIGN.md §6.1).
 
 Priorities are int32; "dead" columns are encoded by the caller as _NEG
 (−2^30) *before* the call, which keeps the kernel a pure max-reduce.
+
+Storage axis (DESIGN.md §11): bit-packed uint32 tiles are supported exactly
+as in `tc_spmv` — the DMA carries packed words, the kernel body unpacks the
+VMEM-resident block before the masked max.
 """
 from __future__ import annotations
 
@@ -22,10 +26,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.tiling import unpack_tile_bits
+
 _NEG = -(1 << 30)  # plain int: jnp scalars would be captured as kernel consts
 
 
-def _nbr_max_kernel(rows_ref, cols_ref, tiles_ref, pm_ref, out_ref):
+def _nbr_max_kernel(rows_ref, cols_ref, tiles_ref, pm_ref, out_ref,
+                    *, packed: bool, tile_size: int):
     i = pl.program_id(0)
     row = rows_ref[i]
     prev = rows_ref[jnp.maximum(i - 1, 0)]
@@ -35,6 +42,8 @@ def _nbr_max_kernel(rows_ref, cols_ref, tiles_ref, pm_ref, out_ref):
         out_ref[...] = jnp.full_like(out_ref, _NEG)
 
     tile = tiles_ref[0]                       # (T, T): row v, col u
+    if packed:                                # in-VMEM unpack, post-DMA
+        tile = unpack_tile_bits(tile, tile_size)
     pm = pm_ref[...]                          # (1, T) masked priorities
     vals = jnp.where(tile != 0, pm, _NEG)     # broadcast over rows
     out_ref[...] = jnp.maximum(out_ref[...], vals.max(axis=1, keepdims=True).T)
@@ -42,7 +51,7 @@ def _nbr_max_kernel(rows_ref, cols_ref, tiles_ref, pm_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("n_block_rows", "interpret"))
 def tc_neighbor_max_pallas(
-    tiles: jnp.ndarray,       # (nt, T, T) int8, block-row-major
+    tiles: jnp.ndarray,       # (nt, T, T) int8 | (nt, T, W) uint32, row-major
     tile_rows: jnp.ndarray,   # (nt,) int32, non-decreasing
     tile_cols: jnp.ndarray,   # (nt,) int32
     pm: jnp.ndarray,          # (nbc*T,) int32 — priorities, _NEG where masked
@@ -51,20 +60,21 @@ def tc_neighbor_max_pallas(
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Max_Np over BSR tiles. Returns (n_block_rows*T,) int32 (_NEG = none)."""
-    nt, T, _ = tiles.shape
+    nt, T, tw = tiles.shape
+    packed = tiles.dtype == jnp.uint32
     pm2 = pm.reshape(-1, T)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(nt,),
         in_specs=[
-            pl.BlockSpec((1, T, T), lambda i, rows, cols: (i, 0, 0)),
+            pl.BlockSpec((1, T, tw), lambda i, rows, cols: (i, 0, 0)),
             pl.BlockSpec((1, T), lambda i, rows, cols: (cols[i], 0)),
         ],
         out_specs=pl.BlockSpec((1, T), lambda i, rows, cols: (rows[i], 0)),
     )
     out = pl.pallas_call(
-        _nbr_max_kernel,
+        functools.partial(_nbr_max_kernel, packed=packed, tile_size=T),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_block_rows, T), jnp.int32),
         interpret=interpret,

@@ -24,6 +24,13 @@ TPU-native replacements for the paper's GPU mechanics (DESIGN.md §2):
     slab is all-zero skip the MXU op (`@pl.when`).  The DMA itself is also
     skippable by pointing the index_map at the previous block — that variant
     is `skip_dma=True` (hill-climb knob; both validated against the oracle).
+
+Storage axis (DESIGN.md §11): tiles arrive either dense int8 (T, T) or
+bit-packed uint32 (T, W) with W = max(T//32, 1).  Packed tiles are unpacked
+IN VMEM inside the kernel body, right after the DMA — HBM only ever carries
+the 8×-smaller packed words, and with `skip_dma` the skipped-or-not transfer
+shrinks by the same factor.  The format is detected from the tile dtype, so
+call sites are storage-polymorphic.
 """
 from __future__ import annotations
 
@@ -34,8 +41,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.tiling import unpack_tile_bits
 
-def _spmv_kernel(rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, out_ref):
+
+def _spmv_kernel(rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, out_ref,
+                 *, packed: bool, tile_size: int):
     i = pl.program_id(0)
     row = rows_ref[i]
     prev = rows_ref[jnp.maximum(i - 1, 0)]
@@ -46,7 +56,10 @@ def _spmv_kernel(rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, out_ref):
 
     @pl.when(flags_ref[cols_ref[i]] != 0)
     def _mma():
-        a = tiles_ref[0].astype(jnp.float32)       # (T, T) 0/1 adjacency tile
+        a = tiles_ref[0]                           # (T, T) i8 | (T, W) u32
+        if packed:                                 # in-VMEM unpack, post-DMA
+            a = unpack_tile_bits(a, tile_size)
+        a = a.astype(jnp.float32)                  # (T, T) 0/1 adjacency tile
         b = rhs_ref[...].astype(jnp.float32)       # (T, L) packed RHS lanes
         out_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
@@ -65,8 +78,12 @@ def tc_spmv_pallas(
     interpret: bool = True,
     skip_dma: bool = False,
 ) -> jnp.ndarray:
-    """N = A @ rhs over BSR tiles. Returns (n_block_rows*T, L) float32."""
-    nt, T, _ = tiles.shape
+    """N = A @ rhs over BSR tiles. Returns (n_block_rows*T, L) float32.
+
+    `tiles` may be dense int8 (nt, T, T) or bit-packed uint32 (nt, T, W) —
+    the packed form DMAs 8× fewer bytes and unpacks in VMEM."""
+    nt, T, tw = tiles.shape
+    packed = tiles.dtype == jnp.uint32
     L = rhs.shape[-1]
     nbc = rhs.shape[0] // T
     if col_flags is None:
@@ -87,7 +104,7 @@ def tc_spmv_pallas(
         num_scalar_prefetch=3,
         grid=(nt,),
         in_specs=[
-            pl.BlockSpec((1, T, T), lambda i, rows, cols, flags: (i, 0, 0)),
+            pl.BlockSpec((1, T, tw), lambda i, rows, cols, flags: (i, 0, 0)),
             pl.BlockSpec((T, L), rhs_index),
         ],
         out_specs=pl.BlockSpec(
@@ -95,7 +112,7 @@ def tc_spmv_pallas(
         ),
     )
     return pl.pallas_call(
-        _spmv_kernel,
+        functools.partial(_spmv_kernel, packed=packed, tile_size=T),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_block_rows * T, L), jnp.float32),
         interpret=interpret,
@@ -111,7 +128,7 @@ def tc_spmv_pallas(
 
 def _spmv_fused_kernel(
     rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, cand_ref, alive_ref,
-    nc_ref, alive_out_ref, mis_out_ref,
+    nc_ref, alive_out_ref, mis_out_ref, *, packed: bool, tile_size: int,
 ):
     i = pl.program_id(0)
     nt = pl.num_programs(0)
@@ -125,7 +142,10 @@ def _spmv_fused_kernel(
 
     @pl.when(flags_ref[cols_ref[i]] != 0)
     def _mma():
-        a = tiles_ref[0].astype(jnp.float32)
+        a = tiles_ref[0]
+        if packed:                                 # in-VMEM unpack, post-DMA
+            a = unpack_tile_bits(a, tile_size)
+        a = a.astype(jnp.float32)
         b = rhs_ref[...].astype(jnp.float32)
         nc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
@@ -155,8 +175,12 @@ def tc_spmv_fused_pallas(
     interpret: bool = True,
     skip_dma: bool = False,
 ):
-    """Fused phase ②+③: returns (n_c (nbr*T, L) f32, new_alive i8, mis_add i8)."""
-    nt, T, _ = tiles.shape
+    """Fused phase ②+③: returns (n_c (nbr*T, L) f32, new_alive i8, mis_add i8).
+
+    Storage-polymorphic like the split kernel: bit-packed uint32 tiles DMA
+    8× fewer bytes and unpack in VMEM inside the kernel body."""
+    nt, T, tw = tiles.shape
+    packed = tiles.dtype == jnp.uint32
     L = rhs.shape[-1]
     nbc = rhs.shape[0] // T
     if col_flags is None:
@@ -176,7 +200,7 @@ def tc_spmv_fused_pallas(
         num_scalar_prefetch=3,
         grid=(nt,),
         in_specs=[
-            pl.BlockSpec((1, T, T), lambda i, rows, cols, flags: (i, 0, 0)),
+            pl.BlockSpec((1, T, tw), lambda i, rows, cols, flags: (i, 0, 0)),
             pl.BlockSpec((T, L), rhs_index),
             pl.BlockSpec((T, 1), lambda i, rows, cols, flags: (rows[i], 0)),
             pl.BlockSpec((T, 1), lambda i, rows, cols, flags: (rows[i], 0)),
@@ -188,7 +212,7 @@ def tc_spmv_fused_pallas(
         ],
     )
     n_c, new_alive, mis_add = pl.pallas_call(
-        _spmv_fused_kernel,
+        functools.partial(_spmv_fused_kernel, packed=packed, tile_size=T),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n_block_rows * T, L), jnp.float32),

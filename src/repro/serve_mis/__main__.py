@@ -32,6 +32,9 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--repeat", type=int, default=1,
                    help="submit every input N times (exercises the plan cache)")
     p.add_argument("--tile-size", type=int, default=32)
+    p.add_argument("--storage", default="auto",
+                   choices=["auto", "int8", "bitpack"],
+                   help="tile storage format (DESIGN.md §11)")
     p.add_argument("--engine", default="fused_pallas")
     p.add_argument("--heuristic", default="h3")
     p.add_argument("--max-batch", type=int, default=8)
@@ -46,6 +49,7 @@ def main(argv=None) -> int:
     args = _parser().parse_args(argv)
     service = MISService(ServeConfig(
         tile_size=args.tile_size,
+        storage=args.storage,
         engine=args.engine,
         heuristic=args.heuristic,
         max_batch=args.max_batch,

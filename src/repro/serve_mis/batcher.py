@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.core.heuristics import Priorities, make_priorities
 from repro.core.spmv import _NEG
-from repro.core.tiling import BlockTiledGraph, next_pow2
+from repro.core.tiling import BlockTiledGraph, next_pow2, packed_words
 from repro.graphs.graph import Graph
 from repro.serve_mis.planner import TilePlan
 
@@ -57,6 +57,7 @@ class Bucket(NamedTuple):
     n_blocks: int      # total block rows/cols (incl. empty trailing slots)
     n_tiles_pad: int   # padded stored-tile count
     e_pad: int         # padded half-edge count
+    storage: str = "int8"   # tile storage format (members must agree)
 
 
 def bucket_for(plans: Sequence[TilePlan], tile_size: int) -> Bucket:
@@ -70,14 +71,19 @@ def bucket_for(plans: Sequence[TilePlan], tile_size: int) -> Bucket:
         n_blocks=next_pow2(max(blocks, 1)),
         n_tiles_pad=next_pow2(max(tiles, 8)),
         e_pad=next_pow2(max(edges, 8)),
+        storage=plans[0].tiled.storage if plans else "int8",
     )
 
 
 def request_key(base_key: jax.Array, plan: TilePlan) -> jax.Array:
     """Per-graph PRNG key, derived from graph *content* so the priorities a
     member gets do not depend on its batch, slot, or arrival order — the
-    property that makes packed results reproducible against solo runs."""
-    return jax.random.fold_in(base_key, int(plan.key[:8], 16) & 0x7FFFFFFF)
+    property that makes packed results reproducible against solo runs.
+
+    Derived from `plan.graph_key` — the build-parameter-free hash — NOT the
+    cache key, so the same graph draws the same priorities in either tile
+    storage format (the int8-vs-bitpack bit-parity contract)."""
+    return jax.random.fold_in(base_key, int(plan.graph_key[:8], 16) & 0x7FFFFFFF)
 
 
 # host-side (select, resolve) per plan content hash — see pack_batch.
@@ -138,7 +144,10 @@ class PackedBatch:
         """Shape-class id: batches with equal signatures reuse one compile."""
         b = self.bucket
         resolve = "r" if self.priorities.resolve is not None else "-"
-        return f"T{b.tile_size}.b{b.n_blocks}.t{b.n_tiles_pad}.e{b.e_pad}.{resolve}"
+        return (
+            f"T{b.tile_size}.b{b.n_blocks}.t{b.n_tiles_pad}.e{b.e_pad}"
+            f".{resolve}.{b.storage}"
+        )
 
     def unpack(self, x) -> List[np.ndarray]:
         """Slice a packed per-vertex vector into per-member vectors (plan ids)."""
@@ -162,11 +171,15 @@ def pack_batch(
     T = plans[0].tiled.tile_size
     if any(p.tiled.tile_size != T for p in plans):
         raise ValueError("all plans in a batch must share tile_size")
+    storage = plans[0].tiled.storage
+    if any(p.tiled.storage != storage for p in plans):
+        raise ValueError("all plans in a batch must share tile storage")
     if bucket is None:
         bucket = bucket_for(plans, T)
     need = bucket_for(plans, T)
     if (need.n_blocks > bucket.n_blocks or need.n_tiles_pad > bucket.n_tiles_pad
-            or need.e_pad > bucket.e_pad or bucket.tile_size != T):
+            or need.e_pad > bucket.e_pad or bucket.tile_size != T
+            or bucket.storage != storage):
         raise ValueError(f"batch needs {need}, bucket {bucket} too small")
 
     n_total = bucket.n_blocks * T
@@ -228,19 +241,28 @@ def pack_batch(
         n_edges=bucket.e_pad,
     )
 
-    # -- tiles: concat + zero-tile pad pinned to the last real block-row ---
+    # -- tiles: concat + zero-tile pad pinned to the last real block-row.
+    # Block-diagonal concatenation is storage-agnostic: packed members
+    # concatenate their (nt, T, W) uint32 words exactly like int8 tiles,
+    # and all-zero packed padding tiles are equally inert.
+    if storage == "bitpack":
+        empty_shape, tile_dtype = (0, T, packed_words(T)), np.uint32
+    else:
+        empty_shape, tile_dtype = (0, T, T), np.int8
     if tile_parts:
         tiles = np.concatenate(tile_parts)
         rows = np.concatenate(row_parts).astype(np.int32)
         cols = np.concatenate(col_parts).astype(np.int32)
     else:
-        tiles = np.zeros((0, T, T), dtype=np.int8)
+        tiles = np.zeros(empty_shape, dtype=tile_dtype)
         rows = np.zeros(0, dtype=np.int32)
         cols = np.zeros(0, dtype=np.int32)
     n_real_tiles = int(tiles.shape[0])
     n_pad_tiles = bucket.n_tiles_pad - n_real_tiles
     last_row = np.int32(rows[-1]) if n_real_tiles else np.int32(0)
-    tiles = np.concatenate([tiles, np.zeros((n_pad_tiles, T, T), np.int8)])
+    tiles = np.concatenate(
+        [tiles, np.zeros((n_pad_tiles,) + tiles.shape[1:], tiles.dtype)]
+    )
     rows = np.concatenate([rows, np.full(n_pad_tiles, last_row, np.int32)])
     cols = np.concatenate([cols, np.zeros(n_pad_tiles, np.int32)])
 
@@ -263,6 +285,7 @@ def pack_batch(
         tile_size=T,
         n_block_rows=bucket.n_blocks,
         n_block_cols=bucket.n_blocks,
+        storage=storage,
     )
 
     priorities = Priorities(

@@ -10,7 +10,12 @@ from repro.api.plan import (  # noqa: F401 — compatibility re-exports
     PlanCache,
     TilePlan,
     build_plan,
+    graph_content_key,
     plan_cache_key,
+    resolve_storage,
 )
 
-__all__ = ["Plan", "PlanCache", "TilePlan", "build_plan", "plan_cache_key"]
+__all__ = [
+    "Plan", "PlanCache", "TilePlan", "build_plan", "graph_content_key",
+    "plan_cache_key", "resolve_storage",
+]

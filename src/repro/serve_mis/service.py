@@ -51,6 +51,7 @@ class ServeConfig:
     max_rounds: int = 1024
     max_batch: int = 8             # requests per packed dispatch
     reorder: Optional[str] = None  # None | 'rcm'
+    storage: str = "auto"          # tile storage: auto | int8 | bitpack
     cache_dir: Optional[str] = None
     plan_cache_entries: int = 256  # memory-layer LRU bound (disk is unbounded)
     validate: bool = True
@@ -67,6 +68,7 @@ class ServeConfig:
             max_rounds=self.max_rounds,
             tile_size=self.tile_size,
             reorder=self.reorder,
+            storage=self.storage,
             placement="auto",
             seed=self.seed,
             cache_dir=self.cache_dir,

@@ -1,0 +1,92 @@
+"""CI source guards that a grep can't express precisely (DESIGN.md §11).
+
+Guard 1 — packed tiles must stay packed until VMEM: in the kernel modules
+(`src/repro/kernels/`, excluding the oracle `ref.py`), `unpack_tile_bits`
+may only be CALLED inside Pallas kernel-body functions (names ending in
+`_kernel`).  An unpack anywhere else — e.g. in `ops.py` before the
+`pallas_call` — would materialise the dense (nt, T, T) array in HBM and
+forfeit the 8× DMA reduction the storage axis exists for.  The jnp oracle
+paths (`kernels/ref.py`, `core/engine.py`) are the sanctioned exceptions.
+
+Guard 2 — kernel modules must not densify via the whole-array helpers
+either: `dense_tiles` (the oracle dispatch) and `to_storage` (the format
+converter) never appear under `src/repro/kernels/` outside `ref.py`.
+
+Run: python tools/ci_guards.py   (exit 0 = clean)
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+KERNEL_DIR = pathlib.Path(__file__).resolve().parent.parent / "src/repro/kernels"
+ORACLE_FILES = {"ref.py"}          # the sanctioned full-unpack path
+KERNEL_FN_SUFFIX = "_kernel"
+
+
+def _violations(path: pathlib.Path) -> list:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out = []
+
+    class Visitor(ast.NodeVisitor):
+        def __init__(self):
+            self.stack = []
+
+        def _visit_fn(self, node):
+            self.stack.append(node.name)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        visit_FunctionDef = _visit_fn
+        visit_AsyncFunctionDef = _visit_fn
+
+        def visit_Call(self, node):
+            name = None
+            if isinstance(node.func, ast.Name):
+                name = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                name = node.func.attr
+            if name in ("unpack_tile_bits", "dense_tiles"):
+                in_kernel_body = any(
+                    fn.endswith(KERNEL_FN_SUFFIX) for fn in self.stack
+                )
+                if name == "dense_tiles" or not in_kernel_body:
+                    out.append(
+                        f"{path}:{node.lineno}: {name} called "
+                        f"outside a *{KERNEL_FN_SUFFIX} body (scope: "
+                        f"{'.'.join(self.stack) or '<module>'}) — this "
+                        f"materialises (nt, T, T) in HBM"
+                    )
+            if name == "to_storage":
+                out.append(
+                    f"{path}:{node.lineno}: to_storage() in a kernel module "
+                    f"— kernels must consume tiles as stored"
+                )
+            self.generic_visit(node)
+
+    Visitor().visit(tree)
+    return out
+
+
+def main() -> int:
+    problems = []
+    for path in sorted(KERNEL_DIR.glob("*.py")):
+        if path.name in ORACLE_FILES:
+            continue
+        problems += _violations(path)
+    for p in problems:
+        print(p, file=sys.stderr)
+    if problems:
+        print(
+            f"\n{len(problems)} packed-storage guard violation(s): HBM must "
+            f"only ever see packed words outside the oracle/int8 path",
+            file=sys.stderr,
+        )
+        return 1
+    print("ci_guards: kernel packed-storage guard clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
