@@ -1,0 +1,113 @@
+"""Dynamic-graph trajectory: incremental repair vs cold re-solve, persisted
+to ``BENCH_dyngraph.json`` at the repo root (DESIGN.md §12).
+
+For each tile storage format and each delta size (as a fraction of the
+graph's edges), one pre-solved graph takes a random `EdgeDelta`
+(adds + removes, strict-valid by construction) and is re-solved twice:
+
+  repair   `Solver.update` with repair='incremental' — tile-local plan
+           patch + warm-started round-engine re-entry from the prior
+           solution (only the dirty frontier alive)
+  cold     a fresh `Solver.solve` of the SAME patched plan (identical
+           priorities/key, so the two differ only in the warm start)
+
+Reported per case: wall time (warm second run — each delta changes the
+static edge shapes, so the first run of either path pays an XLA compile
+that would swamp the per-round comparison), round counts, |MIS| of both
+answers, and validity of the repaired solution.  The acceptance bar is
+encoded as an assert: at delta fractions ≤ 1% the incremental repair runs
+STRICTLY fewer rounds than the cold re-solve, in both storage formats.
+
+    PYTHONPATH=src python -m benchmarks.dyngraph_bench
+    BENCH_ONLY=dyngraph PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, emit
+from repro.api import Solver, SolveOptions
+from repro.core.validate import is_valid_mis_jit
+from repro.dyngraph import random_delta
+from repro.graphs.generators import erdos_renyi
+
+OUT_PATH = os.environ.get("BENCH_DYNGRAPH_OUT", "BENCH_dyngraph.json")
+STORAGES = ("int8", "bitpack")
+DELTA_FRACS = (0.002, 0.01, 0.05)   # of the graph's undirected edges
+SMALL_FRAC = 0.01                   # the strictly-fewer-rounds bar
+
+
+def _timed(fn):
+    """Warm wall-clock of one already-compiled call."""
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jnp.asarray(out.in_mis))
+    return out, (time.perf_counter() - t0) * 1e3
+
+
+def _bench_storage(storage: str, n: int, T: int) -> list:
+    g = erdos_renyi(n, avg_deg=8.0, seed=0)
+    solver = Solver(SolveOptions(
+        engine="tiled_ref", tile_size=T, storage=storage,
+        placement="local", repair="incremental",
+    ))
+    prior = solver.solve(g)
+    n_und = g.n_edges // 2
+    rows = []
+    for frac in DELTA_FRACS:
+        k = max(int(n_und * frac) // 2, 1)   # k adds + k removes
+        delta = random_delta(g, n_add=k, n_remove=k, seed=int(frac * 1e4))
+        # first runs compile (new static shapes per delta); time the reruns
+        rep = solver.update(prior, delta)
+        rep, repair_ms = _timed(lambda: solver.update(prior, delta))
+        cold = solver.solve(rep.plan)
+        cold, cold_ms = _timed(lambda: solver.solve(rep.plan))
+        valid = all(is_valid_mis_jit(rep.plan.g, jnp.asarray(rep.in_mis_plan)))
+        rows.append(dict(
+            storage=storage, n=n, tile_size=T, delta_frac=frac,
+            n_add=delta.n_add, n_remove=delta.n_remove,
+            touched=int(delta.touched().size),
+            repair_rounds=rep.rounds, cold_rounds=cold.rounds,
+            repair_ms=round(repair_ms, 3), cold_ms=round(cold_ms, 3),
+            repair_mis=rep.mis_size, cold_mis=cold.mis_size,
+            repair_valid=valid,
+        ))
+        emit(
+            f"dyngraph.repair.{storage}.f{frac}", repair_ms * 1e3,
+            f"rounds={rep.rounds}/{cold.rounds};cold_ms={cold_ms:.1f}",
+        )
+        assert valid, f"repaired solution invalid ({storage}, frac={frac})"
+        if frac <= SMALL_FRAC:
+            assert rep.rounds < cold.rounds, (
+                f"incremental repair must run strictly fewer rounds than a "
+                f"cold re-solve at delta_frac={frac} ({storage}): "
+                f"{rep.rounds} vs {cold.rounds}"
+            )
+    return rows
+
+
+def main() -> None:
+    n = 2048 if QUICK else 8192
+    T = 32
+    results = []
+    for storage in STORAGES:
+        results += _bench_storage(storage, n, T)
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(dict(
+            bench="dyngraph",
+            backend=jax.default_backend(),
+            quick=QUICK,
+            small_delta_frac=SMALL_FRAC,
+            results=results,
+        ), f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ def main() -> None:
         ("fig4", "benchmarks.fig4_runtime"),
         ("kernel", "benchmarks.kernel_bench"),
         ("serve", "benchmarks.serve_throughput"),
+        ("dyngraph", "benchmarks.dyngraph_bench"),
     ]
     failures = 0
     for name, module in sections:

@@ -16,7 +16,7 @@ Three nouns route every MIS execution path in the system (DESIGN.md §10):
 Legacy entry points (`repro.core.tc_mis`, `TCMISConfig`, engine spellings
 `ref`/`pallas`) remain as deprecated shims; new code goes through here.
 """
-from repro.api.options import STORAGES, SolveOptions
+from repro.api.options import REPAIRS, STORAGES, SolveOptions
 from repro.api.plan import (
     BITPACK_AUTO_THRESHOLD,
     DEFAULT_TILE_BUDGET,
@@ -24,17 +24,19 @@ from repro.api.plan import (
     PlanCache,
     build_plan,
     choose_tile_size,
+    delta_cache_key,
     fit_tile_size,
     graph_content_key,
+    patch_plan,
     plan_cache_key,
     resolve_storage,
 )
 from repro.api.solver import Solver, SolveResult
 
 __all__ = [
-    "SolveOptions", "STORAGES",
+    "SolveOptions", "STORAGES", "REPAIRS",
     "BITPACK_AUTO_THRESHOLD", "DEFAULT_TILE_BUDGET", "Plan", "PlanCache",
-    "build_plan", "choose_tile_size", "fit_tile_size", "graph_content_key",
-    "plan_cache_key", "resolve_storage",
+    "build_plan", "choose_tile_size", "delta_cache_key", "fit_tile_size",
+    "graph_content_key", "patch_plan", "plan_cache_key", "resolve_storage",
     "Solver", "SolveResult",
 ]

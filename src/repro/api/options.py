@@ -19,6 +19,7 @@ from typing import Optional
 
 PLACEMENTS = ("auto", "local", "sharded")
 STORAGES = ("auto", "int8", "bitpack")   # tile storage axis (DESIGN.md §11)
+REPAIRS = ("auto", "cold", "incremental")   # delta-repair policy (§12)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,19 @@ class SolveOptions:
       shard_threshold:  padded-vertex count at which `auto` shards
       bitpack:          sharded path: gather uint8-packed frontiers
 
+    Dynamic graphs (`Solver.update`, DESIGN.md §12):
+      repair:  how an `EdgeDelta` update re-solves the patched graph —
+               'incremental' warm-starts the round engine from the prior
+               solution with only the dirty frontier alive
+               (`repro.dyngraph.repair`), 'cold' re-solves from scratch,
+               and 'auto' picks incremental while the delta touches at
+               most `repair_threshold` of the graph's vertices (small
+               deltas converge in a handful of rounds; a delta that dirties
+               most of the graph might as well re-solve).  Empty deltas
+               are bit-identical across all three spellings.
+      repair_threshold: the 'auto' cutover — dirty-vertex fraction above
+               which updates fall back to a cold solve.
+
     Reproducibility / caching:
       seed:               base PRNG seed; `Solver.solve` uses
                           `jax.random.key(seed)` (the classic single-graph
@@ -80,6 +94,9 @@ class SolveOptions:
     shard_threshold: int = 1 << 15
     bitpack: bool = True
 
+    repair: str = "auto"
+    repair_threshold: float = 0.25
+
     seed: int = 0
     cache_dir: Optional[str] = None
     plan_cache_entries: int = 256
@@ -92,6 +109,10 @@ class SolveOptions:
         if self.storage not in STORAGES:
             raise ValueError(
                 f"unknown storage {self.storage!r}; valid: {STORAGES}"
+            )
+        if self.repair not in REPAIRS:
+            raise ValueError(
+                f"unknown repair {self.repair!r}; valid: {REPAIRS}"
             )
 
     @property

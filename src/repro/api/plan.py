@@ -59,7 +59,10 @@ from repro.graphs.graph import Graph, from_edges
 # warns once per eviction, deletes the file and rebuilds.  (v1 files are the
 # one exception — `storage` joined the key string in v2, so they sit at old
 # key paths; `PlanCache.plan` probes the legacy v1 key on a disk miss and
-# evicts those too.)
+# evicts those too.)  Patched plans (`Plan.apply_delta`, DESIGN.md §12)
+# persist in the same v2 layout under delta-chained keys (`delta_cache_key`)
+# with an optional `epoch` tail record; superseded pre-delta entries are
+# retired through the same eviction machinery (`PlanCache.apply_delta`).
 _PLAN_VERSION = 2
 _META_LEN = 8  # n_nodes, n_edges, n_tiles, tile_size, nbr, nbc, version, storage
 
@@ -164,6 +167,11 @@ class Plan:
     `g` and `tiled` index *plan ids*: the RCM-permuted vertex numbering when
     `perm` is set, the original numbering otherwise.  Results computed on
     plan ids map back through :meth:`to_original`.
+
+    `epoch` counts applied `EdgeDelta`s along this plan's lineage
+    (DESIGN.md §12): epoch 0 is a from-scratch build, and each
+    :meth:`apply_delta` produces epoch+1 under a delta-chained cache key
+    (`delta_cache_key`) — mutation never aliases the parent's entry.
     """
     g: Graph
     tiled: BlockTiledGraph
@@ -171,6 +179,7 @@ class Plan:
     perm: Optional[np.ndarray] = None  # perm[plan_id] = original_id
     inv: Optional[np.ndarray] = None   # inv[original_id] = plan_id
     reorder: Optional[str] = None      # the reorder choice this plan was built with
+    epoch: int = 0                     # deltas applied since the epoch-0 build
 
     @property
     def n_nodes(self) -> int:
@@ -239,6 +248,27 @@ class Plan:
             storage=storage,
         )
 
+    def apply_delta(
+        self, delta, *, cache: Optional["PlanCache"] = None
+    ) -> "Plan":
+        """Patch this plan with an `EdgeDelta` — tile-local, never a rebuild.
+
+        The delta arrives in ORIGINAL vertex ids (the ids callers hold);
+        RCM-reordered plans map it through their permutation first.  The
+        patched plan keeps this plan's tile size, storage, reorder choice
+        and permutation (the RCM ordering is NOT recomputed — locality can
+        drift over many epochs; re-plan from scratch to re-anchor it) and
+        carries `epoch + 1` under the delta-chained key.  An empty delta
+        returns `self` unchanged — same key, same epoch — which is what
+        keeps `repair="incremental"` bit-identical to cold on no-op
+        updates.  With `cache`, the patch goes through
+        :meth:`PlanCache.apply_delta` (memoised; stale pre-delta disk
+        entries evicted).
+        """
+        if cache is not None:
+            return cache.apply_delta(self, delta)[0]
+        return patch_plan(self, delta)
+
 
 # backwards-compatible spelling (`repro.serve_mis.planner.TilePlan`)
 TilePlan = Plan
@@ -289,6 +319,43 @@ def _legacy_v1_cache_key(g: Graph, tile_size: int, reorder: Optional[str]) -> st
     h.update(np.asarray(g.senders)[: g.n_edges].astype(np.int32).tobytes())
     h.update(np.asarray(g.receivers)[: g.n_edges].astype(np.int32).tobytes())
     return h.hexdigest()
+
+
+def delta_cache_key(parent_key: str, delta_content_key: str) -> str:
+    """Cache key of a patched plan: sha256 chained over the parent plan's
+    key and the delta's content hash (`EdgeDelta.content_key`).  Chaining —
+    rather than re-hashing the mutated edge list — makes patching O(delta)
+    and names the *lineage*: the same graph state reached through a
+    different delta history keys differently, which is deliberate (the
+    entry records how the tiling was patched, and epochs retire in lineage
+    order)."""
+    h = hashlib.sha256()
+    h.update(f"tcmis-plan-delta|{parent_key}|{delta_content_key}".encode())
+    return h.hexdigest()
+
+
+def patch_plan(plan: Plan, delta) -> Plan:
+    """The uncached patch path: map, mutate both representations, re-key.
+
+    Graph-level strictness (`apply_graph_delta` raises on absent removes /
+    present adds) runs FIRST, so the tile edit — which trusts its input —
+    only ever sees a validated batch.
+    """
+    from repro.dyngraph.retile import apply_delta as apply_tiled_delta
+    from repro.dyngraph.retile import apply_graph_delta
+
+    if delta.is_empty:
+        return plan
+    mapped = delta if plan.inv is None else delta.mapped(plan.inv)
+    g2 = apply_graph_delta(plan.g, mapped)
+    tiled2 = apply_tiled_delta(plan.tiled, mapped)
+    return dataclasses.replace(
+        plan,
+        g=g2,
+        tiled=tiled2,
+        key=delta_cache_key(plan.key, delta.content_key),
+        epoch=plan.epoch + 1,
+    )
 
 
 def build_plan(
@@ -395,6 +462,54 @@ class PlanCache:
             self._store(plan)
         return plan, "built"
 
+    def apply_delta(self, plan: Plan, delta) -> Tuple[Plan, str]:
+        """Patch a plan through the cache: return (patched, status) with
+        status ∈ {'mem', 'disk', 'built'} — 'built' here means *patched*,
+        the tile-local `patch_plan`, never a from-scratch rebuild.
+
+        The patched entry persists under the current (v2) npz format at its
+        delta-chained key; the parent's now-stale pre-delta entry is then
+        retired exactly like PR 4's v1-format entries — detected, warned
+        about once, unlinked, and counted in `stats.evicted_stale` — so a
+        mutating graph's lineage keeps ONE live disk entry instead of
+        accreting an epoch per delta.  (A re-request of the pre-delta
+        content simply rebuilds: for a graph that mutates between
+        requests, the superseded epoch is the stale layout, the same way
+        a superseded format version was.)
+        """
+        if delta.is_empty:
+            return plan, "mem"
+        key = delta_cache_key(plan.key, delta.content_key)
+        hit = self._mem.get(key)
+        if hit is not None:
+            self.stats["mem_hits"] += 1
+            self._mem.move_to_end(key)
+            return hit, "mem"
+        if self.cache_dir:
+            loaded = self._load(key, plan.reorder)
+            if loaded is not None:
+                self.stats["disk_hits"] += 1
+                self._remember(key, loaded)
+                self._retire_parent(plan)
+                return loaded, "disk"
+        self.stats["misses"] += 1
+        patched = patch_plan(plan, delta)
+        self._remember(patched.key, patched)
+        if self.cache_dir:
+            self._store(patched)
+            self._retire_parent(plan)
+        return patched, "built"
+
+    def _retire_parent(self, parent: Plan) -> None:
+        """Unlink the superseded pre-delta disk entry and drop its memory
+        copy — the epoch analogue of the v1-format eviction."""
+        path = self._path(parent.key)
+        if os.path.exists(path):
+            self._evict_stale(
+                path, f"pre-delta entry (epoch {parent.epoch} superseded)"
+            )
+        self._mem.pop(parent.key, None)
+
     # -- disk layer --------------------------------------------------------
 
     def _path(self, key: str) -> str:
@@ -420,6 +535,11 @@ class PlanCache:
         )
         if plan.perm is not None:
             arrays["perm"] = plan.perm
+        if plan.epoch:
+            # optional tail record, like `perm`: patched plans stay within
+            # the v2 layout (the 8-int meta is untouched), readers without
+            # the field default to epoch 0
+            arrays["epoch"] = np.asarray([plan.epoch], dtype=np.int64)
         # write under a per-writer temp name, publish atomically: concurrent
         # workers that both miss on one key each write their own temp file
         # and the last rename wins with identical content
@@ -482,11 +602,12 @@ class PlanCache:
                     storage=storage,
                 )
                 perm = np.asarray(z["perm"]) if "perm" in z.files else None
+                epoch = int(z["epoch"][0]) if "epoch" in z.files else 0
             inv = None
             if perm is not None:
                 inv = np.empty_like(perm)
                 inv[perm] = np.arange(n_nodes)
             return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv,
-                        reorder=reorder)
+                        reorder=reorder, epoch=epoch)
         except Exception:  # noqa: BLE001 — np.load raises BadZipFile/EOFError/
             return None    # pickle errors on torn files: any failure ⇒ rebuild

@@ -19,6 +19,11 @@ one level up).  Routing (DESIGN.md §10):
                          own dispatch
     profile(graph)       the python-stepped profiler twin with per-phase
                          timers (same engine round body as solve)
+    update(prior, delta) dynamic graphs (DESIGN.md §12): patch the plan
+                         tile-locally through the cache, then repair the
+                         solution per `options.repair` — warm-started
+                         round-engine re-entry for small deltas, cold
+                         re-solve otherwise
 
 The Solver owns compiled-program reuse: one jitted single-graph program and
 one jitted packed-batch program (their caches keyed by jax on the static
@@ -126,6 +131,10 @@ class Solver:
                 member_rounds=True,
             )
         )
+        # the warm-start (delta-repair) program; built on the first
+        # `update` — repro.dyngraph imports the serving layer, so the seam
+        # resolves lazily rather than at api-import time
+        self._jit_repair = None
 
     # -- planning ----------------------------------------------------------
 
@@ -224,6 +233,89 @@ class Solver:
             for i, r in zip(idxs, solved):
                 out[i] = r
         return out   # type: ignore[return-value]
+
+    def update(
+        self,
+        prior: SolveResult,
+        delta,
+        *,
+        key: Optional[jax.Array] = None,
+    ) -> SolveResult:
+        """Apply an `EdgeDelta` to a solved graph and re-solve (DESIGN.md §12).
+
+        The plan is patched tile-locally through the plan cache
+        (`PlanCache.apply_delta` — delta-chained epoch key, stale pre-delta
+        entry evicted), then the mutated graph is re-solved per
+        `options.repair`:
+
+          incremental   warm-start the round engine from `prior.in_mis`
+                        with only the dirty frontier alive — small deltas
+                        converge in a handful of rounds
+          cold          a fresh `solve` of the patched plan
+          auto          incremental while the delta touches ≤
+                        `options.repair_threshold` of the vertices; also
+                        falls back to cold when the patched plan routes
+                        sharded (the shard_map loop has no warm seam yet)
+
+        `prior` must be a converged result for the plan the delta applies
+        to (chain updates by passing each result to the next `update`).
+        Both paths solve under the same key and NEW-graph priorities, so an
+        empty delta returns the prior solution bit-exactly either way.
+        Stats gain `repair` (the mode taken), `patch` (plan-cache layer of
+        the patched plan), `plan_epoch` and the delta sizes.
+        """
+        from repro.dyngraph.repair import dirty_mask, repair_mis
+
+        plan2, patch_status = self.plans.apply_delta(prior.plan, delta)
+        extra = dict(
+            patch=patch_status, plan_epoch=plan2.epoch,
+            delta_add=delta.n_add, delta_remove=delta.n_remove,
+        )
+        touched = delta.touched()
+        mode = self.options.repair
+        if mode == "auto":
+            frac = touched.size / max(plan2.n_nodes, 1)
+            mode = "incremental" if frac <= self.options.repair_threshold \
+                else "cold"
+        if mode == "incremental" and self.route(plan2) == "sharded":
+            mode = "cold"
+        if mode == "cold":
+            res = self.solve(plan2, key=key)
+            return dataclasses.replace(
+                res, stats=dict(res.stats, repair="cold", **extra)
+            )
+
+        if self._jit_repair is None:
+            opts = self.options
+            # priorities build INSIDE the compiled program from the key —
+            # the same construction (new-graph degrees, same heuristic) the
+            # cold path jits, so neither path pays eager priority dispatches
+            self._jit_repair = jax.jit(
+                lambda g, tiled, key, prior_mis, dirty: repair_mis(
+                    g, tiled, key, opts, prior_mis, dirty
+                )
+            )
+        if key is None:
+            key = jax.random.key(self.options.seed)
+        touched_plan = touched if plan2.inv is None else \
+            np.asarray(plan2.inv)[touched]
+        dirty = jnp.asarray(dirty_mask(plan2.n_nodes, touched_plan))
+        prior_plan = jnp.asarray(plan2.to_plan_ids(prior.in_mis).astype(bool))
+        t = plan2.tiled
+        compile_stat = self._note_signature(
+            ("repair", t.tile_size, t.storage, t.n_block_rows,
+             t.n_block_cols, t.n_tiles, int(t.tiles.shape[0]), t.n_nodes,
+             plan2.g.n_nodes, plan2.g.n_edges, plan2.g.e_pad)
+        )
+        t0 = time.perf_counter()
+        result = self._jit_repair(plan2.g, plan2.tiled, key, prior_plan, dirty)
+        jax.block_until_ready(result.in_mis)
+        solve_ms = (time.perf_counter() - t0) * 1e3
+        self.stats["solves"] += 1
+        return self._wrap(plan2, result, "local", dict(
+            solve_ms=round(solve_ms, 3), compile=compile_stat, batch_size=1,
+            repair="incremental", **extra,
+        ))
 
     def profile(self, graph: GraphLike, *, key: Optional[jax.Array] = None):
         """The instrumented twin: python-stepped rounds with per-phase wall

@@ -84,6 +84,7 @@ def _setup(
     alive0: jnp.ndarray | None = None,
     col_gate: jnp.ndarray | None = None,
     member_rounds: bool = False,
+    in_mis0: jnp.ndarray | None = None,
 ):
     """Shared run prologue: engine resolution, context, priorities, state₀.
 
@@ -102,6 +103,12 @@ def _setup(
     (core.engine.MISRoundState): each vertex's counter advances only while
     it is alive, so a packed member's own convergence round is the max over
     its slot — not the batch-slowest.
+
+    `in_mis0` is the warm-start override (repro.dyngraph.repair): seed the
+    MIS set with a prior solution so the convergence loop only works the
+    dirty frontier the caller left alive.  Callers guarantee `in_mis0` is
+    independent in `g` and disjoint from `alive0` — the engine preserves
+    both invariants but never re-checks them.
     """
     engine = get_engine(config.backend)
     ctx = EngineContext(g=g, tiled=tiled, cfg=config, col_gate=col_gate)
@@ -117,7 +124,11 @@ def _setup(
     )
     state0 = MISRoundState(
         alive=pack_vertex_vector(alive0.astype(bool), tiled),
-        in_mis=jnp.zeros((tiled.n_padded,), dtype=bool),
+        in_mis=(
+            jnp.zeros((tiled.n_padded,), dtype=bool)
+            if in_mis0 is None
+            else pack_vertex_vector(in_mis0.astype(bool), tiled)
+        ),
         rnd=rnd0,
     )
     return engine, ctx, pri, state0
@@ -142,6 +153,7 @@ def _tc_mis_impl(
     alive0: jnp.ndarray | None = None,
     col_gate: jnp.ndarray | None = None,
     member_rounds: bool = False,
+    in_mis0: jnp.ndarray | None = None,
 ) -> MISResult:
     """Run TC-MIS to convergence inside one `lax.while_loop`.
 
@@ -150,10 +162,13 @@ def _tc_mis_impl(
     Solver amortises ONE compiled dispatch per shape bucket over every
     request in a batch.  With `member_rounds`, `MISResult.rounds` is the
     per-vertex settle-round vector (sliced to real vertices) instead of the
-    global round count.
+    global round count.  `alive0`+`in_mis0` together are the warm-start
+    seam (`repro.dyngraph.repair`): an already-converged warm state runs
+    ZERO rounds — the while_loop condition fails on entry.
     """
     engine, ctx, pri, state0 = _setup(
-        g, tiled, key, config, priorities, alive0, col_gate, member_rounds
+        g, tiled, key, config, priorities, alive0, col_gate, member_rounds,
+        in_mis0,
     )
 
     def cond(state: MISRoundState):

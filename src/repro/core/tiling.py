@@ -89,6 +89,17 @@ def dense_tiles(tiles: jnp.ndarray, tile_size: int) -> jnp.ndarray:
     return tiles
 
 
+def padded_tile_count(n_real: int, pad_tiles_to: int | None = None) -> int:
+    """Stored tile count for `n_real` real tiles: floor 1 (an empty graph
+    still stores one zero tile), optional caller floor, aligned up to 8
+    for sharding.  THE single definition of the tile-list pad convention —
+    `build_block_tiles` and the delta path (`repro.dyngraph.retile`) must
+    agree on it, or patched tilings stop being bit-exact with rebuilds."""
+    stored = max(int(n_real), 1)
+    target = max(pad_tiles_to or stored, stored)
+    return ((target + 7) // 8) * 8
+
+
 def next_pow2(x: int) -> int:
     """Smallest power of two ≥ x (≥ 1) — the shape-bucket quantiser shared by
     the serving batcher and the bucketed validator (one definition, or their
@@ -265,9 +276,7 @@ def build_block_tiles(
 
     # pad: zero tiles pinned to the last real block-row (monotone, no-op adds)
     stored = tiles.shape[0]
-    target = pad_tiles_to or stored
-    target = max(target, stored)
-    target = ((target + 7) // 8) * 8  # modest alignment for sharding
+    target = padded_tile_count(n_tiles, pad_tiles_to)
     if target > stored:
         last_row = tile_rows[-1] if n_tiles else 0
         tiles = np.concatenate(

@@ -1,0 +1,36 @@
+"""repro.dyngraph — dynamic graphs: streaming ingestion, deltas, MIS repair.
+
+The subsystem that lets a SERVED graph mutate without paying the static
+pipeline's full price (DESIGN.md §12):
+
+  stream    chunked edge readers over SNAP/.mtx/DIMACS (`iter_edges`,
+            `load_graph_stream`) — ingestion without the whole-file line
+            list — plus the `+/- u v` delta file format (`load_delta`)
+  delta     `EdgeDelta`: canonical, content-hashed add/remove batches with
+            a true `inverse()` (strict set semantics)
+  retile    `apply_delta` / `apply_graph_delta`: tile-local repacking —
+            word-level bit edits on packed tiles, byte edits on int8 —
+            bit-exact with a from-scratch rebuild of the mutated graph
+  repair    warm-started round-engine re-entry: seed the prior solution,
+            reset only the dirty frontier, converge in a handful of rounds
+
+Front-door plumbing: `Plan.apply_delta` (epoch-suffixed cache keys, stale
+pre-delta entries evicted), `SolveOptions.repair`, `Solver.update`, and the
+serve_mis `update` service op / CLI verb.
+"""
+from repro.dyngraph.delta import EdgeDelta, random_delta
+from repro.dyngraph.repair import dirty_mask, repair_mis, warm_state
+from repro.dyngraph.retile import apply_delta, apply_graph_delta
+from repro.dyngraph.stream import (
+    iter_edges,
+    load_delta,
+    load_graph_stream,
+    parse_delta,
+)
+
+__all__ = [
+    "EdgeDelta", "random_delta",
+    "apply_delta", "apply_graph_delta",
+    "dirty_mask", "repair_mis", "warm_state",
+    "iter_edges", "load_delta", "load_graph_stream", "parse_delta",
+]

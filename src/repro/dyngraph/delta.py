@@ -1,0 +1,188 @@
+"""`EdgeDelta` — a canonical, content-hashed batch of edge mutations.
+
+The unit of graph change the whole dyngraph subsystem speaks (DESIGN.md
+§12): a set of undirected edges to add and a set to remove, canonicalised
+exactly the way `graphs.graph.from_edges` canonicalises a graph — self
+loops dropped, duplicates merged, endpoints ordered (lo, hi), pairs sorted
+— so two deltas describing the same mutation hash identically whatever
+order their edges arrived in.
+
+Semantics are STRICT set operations against the graph a delta is applied
+to: every `add` edge must be absent and every `remove` edge present
+(`retile.apply_graph_delta` raises otherwise).  Strictness is what makes
+`inverse()` a real inverse — `apply(apply(g, d), d.inverse()) == g`
+bit-exactly, at both the edge-list and the tile level (the property test in
+tests/test_dyngraph.py) — and what keeps the delta-chained plan-cache keys
+honest: a key names one concrete graph state, never "this edge, maybe".
+
+`content_key` is the sha256 the epoch-suffixed plan keys chain over
+(`repro.api.plan.delta_cache_key`); it covers the canonical pairs only, so
+it is independent of input edge order, direction and duplication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional
+
+import numpy as np
+
+from repro.graphs.graph import Graph
+
+
+def _canonical_pairs(src, dst) -> np.ndarray:
+    """(k,) + (k,) endpoint arrays → (m, 2) int64 canonical (lo, hi) pairs:
+    self loops dropped, deduped, sorted lexicographically."""
+    src = np.asarray(src, dtype=np.int64).reshape(-1)
+    dst = np.asarray(dst, dtype=np.int64).reshape(-1)
+    if src.shape != dst.shape:
+        raise ValueError(f"endpoint arrays disagree: {src.shape} vs {dst.shape}")
+    keep = src != dst
+    lo = np.minimum(src[keep], dst[keep])
+    hi = np.maximum(src[keep], dst[keep])
+    pairs = np.unique(np.stack([lo, hi], axis=1), axis=0)
+    return pairs.reshape(-1, 2)
+
+
+def _pair_keys(pairs: np.ndarray, n: int) -> np.ndarray:
+    """Scalar int64 key per (lo, hi) pair — the set-membership currency."""
+    return pairs[:, 0] * np.int64(n) + pairs[:, 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeDelta:
+    """An immutable edge-mutation batch in canonical form.
+
+    Build through :meth:`make` (which canonicalises); the raw constructor
+    trusts its inputs and is for internal use (`inverse`, tests that
+    already hold canonical arrays).
+
+    Attributes:
+      add:    (n_add, 2) int64 — canonical (lo, hi) pairs to insert.
+      remove: (n_remove, 2) int64 — canonical pairs to delete.
+    """
+    add: np.ndarray
+    remove: np.ndarray
+
+    @classmethod
+    def make(cls, add_src=(), add_dst=(), rem_src=(), rem_dst=()) -> "EdgeDelta":
+        """Canonicalise raw endpoint arrays into a delta.
+
+        An edge appearing in BOTH sets is rejected — "add then remove" (or
+        the reverse) has no order-free meaning inside one atomic batch, and
+        silently picking one would break the inverse property.
+        """
+        add = _canonical_pairs(add_src, add_dst)
+        rem = _canonical_pairs(rem_src, rem_dst)
+        if add.size and rem.size:
+            n = int(max(add.max(), rem.max())) + 1
+            overlap = np.intersect1d(_pair_keys(add, n), _pair_keys(rem, n))
+            if overlap.size:
+                raise ValueError(
+                    f"{overlap.size} edge(s) appear in both add and remove — "
+                    f"a delta is one atomic set mutation, split it instead"
+                )
+        return cls(add=add, remove=rem)
+
+    @property
+    def n_add(self) -> int:
+        return int(self.add.shape[0])
+
+    @property
+    def n_remove(self) -> int:
+        return int(self.remove.shape[0])
+
+    @property
+    def is_empty(self) -> bool:
+        return self.n_add == 0 and self.n_remove == 0
+
+    @property
+    def content_key(self) -> str:
+        """sha256 over the canonical pairs — the hash the epoch-suffixed
+        plan-cache keys chain over (`repro.api.plan.delta_cache_key`)."""
+        h = hashlib.sha256()
+        h.update(f"tcmis-edgedelta|{self.n_add}|{self.n_remove}".encode())
+        h.update(self.add.astype(np.int64).tobytes())
+        h.update(self.remove.astype(np.int64).tobytes())
+        return h.hexdigest()
+
+    def inverse(self) -> "EdgeDelta":
+        """The undo delta: applying `d` then `d.inverse()` restores the
+        graph — and its tiling — bit-exactly (strict semantics guarantee
+        the inverse's adds are absent and removes present)."""
+        return EdgeDelta(add=self.remove, remove=self.add)
+
+    def touched(self) -> np.ndarray:
+        """Sorted unique vertex ids incident to any delta edge — the seed
+        of the dirty frontier the MIS repair resets (repair.warm_state)."""
+        return np.unique(np.concatenate([
+            self.add.reshape(-1), self.remove.reshape(-1),
+        ])).astype(np.int64) if not self.is_empty else np.zeros(0, np.int64)
+
+    def mapped(self, mapping: np.ndarray) -> "EdgeDelta":
+        """Relabel endpoints through `mapping[old_id] = new_id` and
+        re-canonicalise (a permutation may flip (lo, hi) order) — how
+        RCM-reordered plans take original-id deltas (`Plan.apply_delta`)."""
+        mapping = np.asarray(mapping)
+        return EdgeDelta.make(
+            mapping[self.add[:, 0]], mapping[self.add[:, 1]],
+            mapping[self.remove[:, 0]], mapping[self.remove[:, 1]],
+        )
+
+    def check_bounds(self, n_nodes: int) -> None:
+        """Deltas never grow the vertex set — a graph's identity (and every
+        static shape compiled against it) is its vertex count; growing is a
+        new graph, not a delta."""
+        hi = -1
+        for pairs in (self.add, self.remove):
+            if pairs.size:
+                hi = max(hi, int(pairs.max()))
+        if hi >= n_nodes:
+            raise ValueError(
+                f"delta references vertex {hi} but the graph has "
+                f"{n_nodes} vertices — deltas cannot grow the vertex set"
+            )
+
+
+def random_delta(
+    g: Graph,
+    n_add: int = 0,
+    n_remove: int = 0,
+    seed: int = 0,
+    rng: Optional[np.random.Generator] = None,
+) -> EdgeDelta:
+    """Sample a strict-valid delta for `g`: removals drawn from existing
+    edges, additions from non-edges (rejection-sampled).  The generator
+    behind the example, the benchmark's delta stream, and the round-trip
+    property test — by construction `apply_graph_delta(g, d)` succeeds and
+    `d.inverse()` restores `g`.
+    """
+    rng = np.random.default_rng(seed) if rng is None else rng
+    n = g.n_nodes
+    s = np.asarray(g.senders)[: g.n_edges].astype(np.int64)
+    r = np.asarray(g.receivers)[: g.n_edges].astype(np.int64)
+    und = np.unique(np.stack(
+        [np.minimum(s, r), np.maximum(s, r)], axis=1), axis=0)
+    existing = set(_pair_keys(und, n).tolist()) if und.size else set()
+
+    n_remove = min(int(n_remove), und.shape[0])
+    rem = und[rng.choice(und.shape[0], size=n_remove, replace=False)] \
+        if n_remove else np.zeros((0, 2), np.int64)
+
+    adds: list = []
+    picked = set()
+    # rejection sampling; bail out gracefully on near-complete graphs
+    max_tries = max(int(n_add), 1) * 64
+    while len(adds) < int(n_add) and max_tries > 0 and n >= 2:
+        max_tries -= 1
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        if u == v:
+            continue
+        lo, hi = min(u, v), max(u, v)
+        k = lo * n + hi
+        if k in existing or k in picked:
+            continue
+        picked.add(k)
+        adds.append((lo, hi))
+    add = np.asarray(adds, np.int64).reshape(-1, 2)
+    return EdgeDelta.make(add[:, 0], add[:, 1], rem[:, 0], rem[:, 1])

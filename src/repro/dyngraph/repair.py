@@ -1,0 +1,136 @@
+"""Incremental MIS repair: re-enter the round engine from a warm state.
+
+The frontier-driven TC line (BLEST, Graph Traversal on Tensor Cores) rests
+on one observation: delta-shaped work is still SpMV-shaped.  The same holds
+for MIS repair.  After an `EdgeDelta`, the prior solution is *almost* right
+— only the delta endpoints and their neighbourhoods can be wrong — so
+instead of a cold re-solve we seed `MISRoundState` with the prior solution
+and hand the round engine a candidate set that is just the dirty frontier
+(DESIGN.md §12):
+
+  in_mis₀ = prior \\ dirty       dirty = delta endpoints.  Every NEW edge
+                                 runs between dirty vertices, so the seed
+                                 set is independent in the mutated graph
+                                 by construction — eviction needs no
+                                 conflict search.
+  alive₀  = ~in_mis₀ & ~(A·in_mis₀ > 0)
+                                 one SpMV pass over the PATCHED
+                                 representation, on the configured
+                                 engine's OWN phase-② substrate
+                                 (`_covered`: Pallas kernel / segment ops /
+                                 jnp oracle) — recovers exactly the
+                                 vertices the seed set no longer
+                                 dominates: evicted dirty vertices, their
+                                 orphaned neighbours, and anything
+                                 uncovered by a removed edge.
+
+From there the unmodified engine round body (`engine.step` — any
+registered engine) runs to convergence: candidates spread only through the
+alive set, so a small delta converges in a handful of rounds while the
+untouched bulk of the graph never re-enters phase ①.  Convergence yields a
+full valid MIS of the mutated graph — maximality is global because alive₀
+is computed globally, not guessed from a k-hop ball.
+
+An EMPTY warm frontier runs zero rounds (`lax.while_loop` fails on entry),
+which is what makes `repair="incremental"` on an empty delta bit-identical
+to the prior (= cold) solution, per the Solver's repair contract.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SegmentEngine, TiledPallasEngine, get_engine, tile_spmv
+from repro.core.heuristics import Priorities
+from repro.core.luby import MISResult
+from repro.core.tc_mis import _tc_mis_impl
+from repro.core.tiling import BlockTiledGraph, pack_vertex_vector
+from repro.graphs.graph import Graph
+
+
+def dirty_mask(n_nodes: int, touched: np.ndarray) -> np.ndarray:
+    """(n_nodes,) bool host vector flagging the delta endpoints — the seed
+    of the repair frontier (`EdgeDelta.touched()`, already in plan ids)."""
+    mask = np.zeros(n_nodes, dtype=bool)
+    if touched.size:
+        mask[touched] = True
+    return mask
+
+
+def _covered(config, g: Graph, tiled: BlockTiledGraph, in_mis0) -> jnp.ndarray:
+    """(n_nodes,) bool — which vertices the seed set dominates (A·S > 0),
+    computed on the CONFIGURED engine's own phase-② substrate: the Pallas
+    kernel for the `*_pallas` engines (packed tiles unpack in VMEM, never
+    in HBM — the same discipline Guard 3 enforces on the rest of the delta
+    path), the segment ops for the CC baseline (no tiles touched), the jnp
+    oracle for `tiled_ref` and custom engines.  Counts are exact integers
+    in every substrate, so the warm state is engine-independent."""
+    n = g.n_nodes
+    engine = get_engine(config.backend)
+    if isinstance(engine, SegmentEngine):
+        from repro.core.spmv import neighbor_any_segment
+
+        return neighbor_any_segment(g, in_mis0[:n])
+    if isinstance(engine, TiledPallasEngine):   # incl. the fused subclass
+        from repro.kernels.ops import tc_spmv
+
+        rhs = jnp.zeros((tiled.n_padded, config.lanes), dtype=jnp.float32)
+        rhs = rhs.at[:, 0].set(pack_vertex_vector(
+            in_mis0.astype(jnp.float32), tiled
+        ))
+        return tc_spmv(tiled, rhs, skip_dma=config.skip_dma)[:n, 0] > 0
+    rhs = pack_vertex_vector(in_mis0.astype(jnp.float32), tiled)[:, None]
+    return tile_spmv(
+        tiled.tiles, tiled.tile_rows, tiled.tile_cols, rhs,
+        tiled.n_block_rows, tiled.tile_size,
+    )[:n, 0] > 0
+
+
+def warm_state(
+    g: Graph,
+    tiled: BlockTiledGraph,
+    config,
+    prior_in_mis: jnp.ndarray,   # (n_nodes,) bool, plan ids, valid pre-delta MIS
+    dirty: jnp.ndarray,          # (n_nodes,) bool — delta endpoints
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(alive₀, in_mis₀) for the warm re-entry, both (n_nodes,) bool.
+
+    Pure jnp/Pallas over the PATCHED representation, so the Solver jits it
+    together with the convergence loop — warm-start construction costs one
+    SpMV (`_covered`, on the configured engine's substrate) inside the same
+    compiled program.
+    """
+    n = tiled.n_nodes
+    in_mis0 = prior_in_mis[:n].astype(bool) & ~dirty[:n].astype(bool)
+    alive0 = ~in_mis0 & ~_covered(config, g, tiled, in_mis0)
+    return alive0, in_mis0
+
+
+def repair_mis(
+    g: Graph,                    # the PATCHED graph (plan ids)
+    tiled: BlockTiledGraph,      # its patched tiling
+    key: jax.Array,
+    config,                      # SolveOptions (or any engine cfg bundle)
+    prior_in_mis: jnp.ndarray,   # (n_nodes,) bool — pre-delta solution
+    dirty: jnp.ndarray,          # (n_nodes,) bool — delta endpoints
+    *,
+    priorities: Optional[Priorities] = None,
+) -> MISResult:
+    """Warm-started solve of the mutated graph on the configured engine.
+
+    `prior_in_mis` must be a valid MIS of the PRE-delta graph (the Solver
+    passes its own last result); the repaired result is then a valid MIS of
+    the patched graph for every registered engine and either storage.
+    Priorities default to the same construction a cold solve of the patched
+    graph would use (same heuristic, same key, the NEW degree vector), so
+    an empty delta repairs to exactly the cold answer.  Jit-compatible with
+    `config` static — the Solver wraps this whole call in one `jax.jit`.
+    """
+    alive0, in_mis0 = warm_state(g, tiled, config, prior_in_mis, dirty)
+    return _tc_mis_impl(
+        g, tiled, key, config,
+        priorities=priorities, alive0=alive0, in_mis0=in_mis0,
+    )

@@ -1,0 +1,132 @@
+"""Streaming graph ingestion: chunked edge readers + the delta file format.
+
+`serve_mis.io.load_graph` reads whole files with `readlines()` — fine for
+benchmark fixtures, hostile at serving scale, where a SNAP edge list runs
+to gigabytes and a python list of its lines costs ~10× the file in host
+RAM.  This module is the bounded-memory ingestion layer over the SAME
+line-level parsers: `serve_mis.io` owns one chunked generator per format
+(`iter_*_chunks` — single-sited format contract, identical
+`GraphParseError`s), and `iter_edges` here adds the file layer — open,
+content-sniff the format (`detect_format`, so sniffing beats extensions in
+streams too), dispatch, and yield bounded numpy chunks.
+`load_graph_stream` folds the chunks straight into `from_edges`, producing
+a `Graph` bit-identical to the `load_graph` of the same file — same
+canonicalisation, same `graph_content_key`, so streamed graphs hit the
+same plan-cache entries.
+
+The delta side of ingestion is `load_delta`: a line-oriented mutation file
+
+    + u v      add undirected edge (u, v)      (bare "u v" lines mean add)
+    - u v      remove undirected edge (u, v)
+    # ...      comment (as is %)
+
+parsed into a canonical `EdgeDelta` — the wire format of the serve CLI's
+`update` verb (`python -m repro.serve_mis`, DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterable, Iterator, List, Optional
+
+from repro.dyngraph.delta import EdgeDelta
+from repro.graphs.graph import Graph, from_edges
+from repro.serve_mis.io import (
+    CHUNKERS,
+    DEFAULT_CHUNK_EDGES,
+    Chunk,
+    GraphParseError,
+    _split_ints,
+    collect_chunks,
+    detect_format,
+    resolve_n_nodes,
+)
+
+
+def iter_edges(
+    path: str,
+    *,
+    fmt: Optional[str] = None,
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+    info: Optional[dict] = None,
+) -> Iterator[Chunk]:
+    """Stream a graph file as 0-indexed `(src, dst)` int64 chunk pairs.
+
+    Peak memory is one chunk (`chunk_edges` pairs), not the file.  `info`
+    (optional dict) receives `fmt` — the detected format — and
+    `n_declared`, the vertex count the file itself declares (MatrixMarket
+    dims, the DIMACS `p` line; absent for edge lists) once the stream
+    reaches the declaring line.  Empty chunks are dropped; whole-file
+    invariants (entry-count promises, a missing `p` line) raise at EOF,
+    per the shared parser contract.
+    """
+    if info is None:
+        info = {}
+    with open(path, "r", encoding="utf-8", errors="replace") as f:
+        first = f.readline()
+        if fmt is None:
+            fmt = detect_format(path, first)
+        if fmt not in CHUNKERS:
+            raise ValueError(
+                f"unknown graph format {fmt!r}; options {sorted(CHUNKERS)}"
+            )
+        info["fmt"] = fmt
+        lines = itertools.chain([first], f) if first else iter(())
+        for src, dst in CHUNKERS[fmt](lines, chunk_edges, info):
+            if src.size:
+                yield src, dst
+
+
+def load_graph_stream(
+    path: str,
+    *,
+    fmt: Optional[str] = None,
+    n_nodes: Optional[int] = None,
+    pad_to: Optional[int] = None,
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+) -> Graph:
+    """Chunked twin of `serve_mis.io.load_graph` — same Graph, same content
+    hash, without ever holding the file's line list.
+
+    The accumulated edge arrays still materialise (that is the graph), but
+    as packed int64 — the ~10× python-string overhead of `readlines()` is
+    gone, which is the term that breaks multi-GB SNAP ingestion.
+    """
+    info: dict = {}
+    s, d, max_id = collect_chunks(
+        iter_edges(path, fmt=fmt, chunk_edges=chunk_edges, info=info)
+    )
+    n = resolve_n_nodes(info["fmt"], max_id, info.get("n_declared"), n_nodes)
+    return from_edges(s, d, n, pad_to=pad_to)
+
+
+# --------------------------------------------------------------------------
+# delta files (the serve CLI's `update` verb payload)
+# --------------------------------------------------------------------------
+
+
+def parse_delta(lines: Iterable[str]) -> EdgeDelta:
+    """`+ u v` / `- u v` lines → canonical `EdgeDelta` (bare pairs = add)."""
+    add_s: List[int] = []
+    add_d: List[int] = []
+    rem_s: List[int] = []
+    rem_d: List[int] = []
+    for lineno, raw in enumerate(lines, start=1):
+        line = raw.strip()
+        if not line or line.startswith(("#", "%")):
+            continue
+        if line[0] in "+-":
+            op, body = line[0], line[1:]
+        else:
+            op, body = "+", line
+        u, v = _split_ints(body, lineno, 2)
+        if u < 0 or v < 0:
+            raise GraphParseError(f"line {lineno}: negative vertex id in {line!r}")
+        (add_s if op == "+" else rem_s).append(u)
+        (add_d if op == "+" else rem_d).append(v)
+    return EdgeDelta.make(add_s, add_d, rem_s, rem_d)
+
+
+def load_delta(path: str) -> EdgeDelta:
+    """Parse a delta file (see `parse_delta` for the line format)."""
+    with open(path, "r", encoding="utf-8", errors="replace") as f:
+        return parse_delta(f)

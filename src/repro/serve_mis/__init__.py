@@ -8,9 +8,13 @@ Turns the single-graph reproduction into a request-driven system
             re-exported here for compatibility)
   batcher   block-diagonal multi-graph packing into shape buckets
   service   request queue → one `repro.api.Solver.solve_many` dispatch per
-            batch → validated per-graph responses with serving stats
+            batch → validated per-graph responses with serving stats;
+            `submit_update` patches a served graph with an `EdgeDelta` and
+            repairs its solution in place (repro.dyngraph, DESIGN.md §12)
 
 CLI: ``python -m repro.serve_mis --once graph1.mtx graph2.edges``
+     (``update <id> <delta_file>`` lines / ``--update ID:FILE`` mutate
+     served graphs; ``--stream-ingest`` uses the chunked readers)
 """
 from repro.serve_mis.io import GraphParseError, detect_format, load_graph
 from repro.serve_mis.planner import PlanCache, TilePlan, build_plan, plan_cache_key
@@ -21,11 +25,17 @@ from repro.serve_mis.batcher import (
     pack_batch,
     request_key,
 )
-from repro.serve_mis.service import MISService, Request, Response, ServeConfig
+from repro.serve_mis.service import (
+    MISService,
+    Request,
+    Response,
+    ServeConfig,
+    UpdateRequest,
+)
 
 __all__ = [
     "GraphParseError", "detect_format", "load_graph",
     "PlanCache", "TilePlan", "build_plan", "plan_cache_key",
     "Bucket", "PackedBatch", "bucket_for", "pack_batch", "request_key",
-    "MISService", "Request", "Response", "ServeConfig",
+    "MISService", "Request", "Response", "ServeConfig", "UpdateRequest",
 ]

@@ -12,6 +12,18 @@ queue) — `cat work.list | python -m repro.serve_mis`.
 
 ``--repeat N`` submits every input N times — the way to watch the tile-plan
 cache and compiled-program reuse do their job in the stats output.
+
+Dynamic graphs (DESIGN.md §12): the ``update`` verb patches a served
+request's graph with a delta file (``+ u v`` / ``- u v`` lines, see
+`repro.dyngraph.stream.load_delta`) and repairs its solution instead of
+re-ingesting:
+
+    stream mode    a line ``update <request_id> <delta_file>``
+    --once mode    ``--update ID:DELTA_FILE`` (repeatable), applied after
+                   the initial solves drain
+
+``--stream-ingest`` loads graph files through the chunked readers
+(`repro.dyngraph.stream.load_graph_stream`) instead of `readlines()`.
 """
 from __future__ import annotations
 
@@ -42,6 +54,16 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--cache-dir", default=None,
                    help="persist tile plans here (content-addressed .npz)")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--repair", default="auto",
+                   choices=["auto", "cold", "incremental"],
+                   help="how `update` requests re-solve (DESIGN.md §12)")
+    p.add_argument("--update", action="append", default=[],
+                   metavar="ID:DELTA_FILE",
+                   help="--once mode: after the initial solves, patch "
+                        "request ID with the delta file and repair")
+    p.add_argument("--stream-ingest", action="store_true",
+                   help="ingest via the chunked readers (dyngraph.stream) "
+                        "instead of readlines()")
     return p
 
 
@@ -56,6 +78,7 @@ def main(argv=None) -> int:
         reorder=args.reorder,
         cache_dir=args.cache_dir,
         seed=args.seed,
+        repair=args.repair,
     ))
 
     def emit(responses) -> int:
@@ -69,12 +92,25 @@ def main(argv=None) -> int:
         """One bad request must not kill the stream: report it, keep serving."""
         try:
             for _ in range(args.repeat):
-                service.submit(path, fmt=args.fmt)
+                service.submit(path, fmt=args.fmt, stream=args.stream_ingest)
             return 0
         except (OSError, ValueError) as e:  # missing file, GraphParseError, ...
             print(json.dumps(dict(source=str(path), valid=False,
                                   error=f"{type(e).__name__}: {e}")), flush=True)
             return args.repeat
+
+    def submit_update(base_id, delta_path) -> int:
+        """The `update` verb: patch a served request's graph, repair."""
+        from repro.dyngraph.stream import load_delta
+
+        try:
+            service.submit_update(int(base_id), load_delta(delta_path))
+            return 0
+        except (OSError, ValueError, KeyError) as e:
+            print(json.dumps(dict(source=f"update:{base_id}:{delta_path}",
+                                  valid=False,
+                                  error=f"{type(e).__name__}: {e}")), flush=True)
+            return 1
 
     failures = 0
     if args.once:
@@ -84,10 +120,28 @@ def main(argv=None) -> int:
         for path in args.paths:
             failures += submit(path)
         failures += emit(service.drain())
+        for spec in args.update:
+            base_id, _, delta_path = spec.partition(":")
+            failures += submit_update(base_id, delta_path)
+            # drain per update, so a later spec can chain off this one's id
+            failures += emit(service.drain())
     else:
         sources = args.paths or (line.strip() for line in sys.stdin)
         for src in sources:
             if not src:
+                continue
+            if src.startswith("update "):
+                # `update <request_id> <delta_file>` — the target must have
+                # been served already, so flush the queue first
+                failures += emit(service.drain())
+                parts = src.split(maxsplit=2)
+                if len(parts) != 3:
+                    print(json.dumps(dict(source=src, valid=False,
+                                          error="usage: update <id> <delta_file>")),
+                          flush=True)
+                    failures += 1
+                    continue
+                failures += submit_update(parts[1], parts[2])
                 continue
             failures += submit(src)
             while service.pending >= service.config.max_batch:

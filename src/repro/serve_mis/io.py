@@ -22,15 +22,29 @@ Formats:
 Parsers are host-side numpy (ingestion is preprocessing; devices never see
 file bytes), deterministic, and total: every malformed line raises
 `GraphParseError` with the offending line number.
+
+Each format has ONE line-level implementation — the `iter_*_chunks`
+generators, which stream `(src, dst)` int64 chunk pairs with bounded
+memory.  The classic whole-file `parse_*` functions collect those chunks
+and add the per-format vertex-count resolution; the streaming ingestion
+layer (`repro.dyngraph.stream`, DESIGN.md §12) consumes the same
+generators directly, so the format contract is single-sited.  Whole-file
+invariants a stream can only know at EOF (MatrixMarket entry-count
+promises, the missing DIMACS `p` line) raise when the generator is
+exhausted.
 """
 from __future__ import annotations
 
 import os
-from typing import Iterable, List, Optional, Tuple
+from typing import Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.graphs.graph import Graph, from_edges
+
+DEFAULT_CHUNK_EDGES = 1 << 16
+
+Chunk = Tuple[np.ndarray, np.ndarray]   # (src, dst) int64, equal length
 
 
 class GraphParseError(ValueError):
@@ -79,12 +93,38 @@ def _split_ints(line: str, lineno: int, want: int) -> List[int]:
         raise GraphParseError(f"line {lineno}: non-integer field in {line!r}") from e
 
 
-def parse_edge_list(
-    lines: Iterable[str], n_nodes: Optional[int] = None
-) -> Tuple[np.ndarray, np.ndarray, int]:
-    """SNAP-style `u v` pairs → (src, dst, n_nodes)."""
-    src: List[int] = []
-    dst: List[int] = []
+# --------------------------------------------------------------------------
+# the line-level implementations: one chunked generator per format
+# --------------------------------------------------------------------------
+
+
+class _ChunkBuf:
+    """Accumulate (u, v) pairs, flush as int64 array pairs every `cap`."""
+
+    def __init__(self, cap: int):
+        self.cap = max(int(cap), 1)
+        self.src: List[int] = []
+        self.dst: List[int] = []
+
+    def push(self, u: int, v: int) -> bool:
+        self.src.append(u)
+        self.dst.append(v)
+        return len(self.src) >= self.cap
+
+    def flush(self) -> Chunk:
+        out = (np.asarray(self.src, np.int64), np.asarray(self.dst, np.int64))
+        self.src, self.dst = [], []
+        return out
+
+
+def iter_edgelist_chunks(
+    lines: Iterable[str],
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+    info: Optional[dict] = None,
+) -> Iterator[Chunk]:
+    """SNAP-style `u v` lines → 0-indexed (src, dst) chunk pairs."""
+    del info   # edge lists declare no vertex count
+    buf = _ChunkBuf(chunk_edges)
     for lineno, raw in enumerate(lines, start=1):
         line = raw.strip()
         if not line or line.startswith(("#", "%")):
@@ -92,25 +132,20 @@ def parse_edge_list(
         u, v = _split_ints(line, lineno, 2)
         if u < 0 or v < 0:
             raise GraphParseError(f"line {lineno}: negative vertex id in {line!r}")
-        src.append(u)
-        dst.append(v)
-    s = np.asarray(src, dtype=np.int64)
-    d = np.asarray(dst, dtype=np.int64)
-    max_id = int(max(s.max(initial=-1), d.max(initial=-1)))
-    n = max_id + 1 if n_nodes is None else int(n_nodes)
-    if n <= max_id:
-        raise GraphParseError(f"n_nodes={n} but file references vertex {max_id}")
-    if n < 1:
-        # an empty/comment-only file describes NO graph; a truncated upload
-        # must not come back as a bogus 1-vertex success
-        raise GraphParseError("edge list contains no edges (and no n_nodes override)")
-    return s, d, n
+        if buf.push(u, v):
+            yield buf.flush()
+    yield buf.flush()
 
 
-def parse_mtx(
-    lines: Iterable[str], n_nodes: Optional[int] = None
-) -> Tuple[np.ndarray, np.ndarray, int]:
-    """MatrixMarket coordinate file → (src, dst, n_nodes); values dropped."""
+def iter_mtx_chunks(
+    lines: Iterable[str],
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+    info: Optional[dict] = None,
+) -> Iterator[Chunk]:
+    """MatrixMarket coordinate lines → 0-indexed chunk pairs (values
+    dropped).  `info['n_declared']` receives max(rows, cols) once the size
+    line is reached."""
+    info = {} if info is None else info
     it = iter(enumerate(lines, start=1))
     try:
         lineno, header = next(it)
@@ -121,10 +156,9 @@ def parse_mtx(
         raise GraphParseError(f"line {lineno}: missing %%MatrixMarket banner")
     if "coordinate" not in fields:
         raise GraphParseError("only sparse `coordinate` MatrixMarket is supported")
-
     dims: Optional[Tuple[int, int, int]] = None
-    src: List[int] = []
-    dst: List[int] = []
+    seen = 0
+    buf = _ChunkBuf(chunk_edges)
     for lineno, raw in it:
         line = raw.strip()
         if not line or line.startswith("%"):
@@ -132,34 +166,33 @@ def parse_mtx(
         if dims is None:
             rows, cols, nnz = _split_ints(line, lineno, 3)
             dims = (rows, cols, nnz)
+            info["n_declared"] = max(rows, cols)
             continue
         i, j = _split_ints(line, lineno, 2)
         if not (1 <= i <= dims[0] and 1 <= j <= dims[1]):
             raise GraphParseError(
                 f"line {lineno}: entry ({i},{j}) outside {dims[0]}x{dims[1]}"
             )
-        src.append(i - 1)
-        dst.append(j - 1)
+        seen += 1
+        if buf.push(i - 1, j - 1):
+            yield buf.flush()
     if dims is None:
         raise GraphParseError("MatrixMarket file has no size line")
-    if len(src) != dims[2]:
-        raise GraphParseError(f"size line promised {dims[2]} entries, found {len(src)}")
-    n = max(dims[0], dims[1]) if n_nodes is None else int(n_nodes)
-    max_id = int(max(max(src, default=-1), max(dst, default=-1)))
-    if n <= max_id:
-        raise GraphParseError(f"n_nodes={n} but file references vertex {max_id + 1}")
-    if n < 1:
-        raise GraphParseError("MatrixMarket size line declares a 0-vertex matrix")
-    return np.asarray(src, dtype=np.int64), np.asarray(dst, dtype=np.int64), n
+    if seen != dims[2]:
+        raise GraphParseError(f"size line promised {dims[2]} entries, found {seen}")
+    yield buf.flush()
 
 
-def parse_dimacs(
-    lines: Iterable[str], n_nodes: Optional[int] = None
-) -> Tuple[np.ndarray, np.ndarray, int]:
-    """DIMACS `p edge` file → (src, dst, n_nodes); 1-indexed `e u v` lines."""
+def iter_dimacs_chunks(
+    lines: Iterable[str],
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+    info: Optional[dict] = None,
+) -> Iterator[Chunk]:
+    """DIMACS `e u v` records → 0-indexed chunk pairs.  `info['n_declared']`
+    receives the `p` line's vertex count."""
+    info = {} if info is None else info
     n_declared: Optional[int] = None
-    src: List[int] = []
-    dst: List[int] = []
+    buf = _ChunkBuf(chunk_edges)
     for lineno, raw in enumerate(lines, start=1):
         line = raw.strip()
         if not line or line[0] in ("c", "%", "#"):
@@ -174,24 +207,104 @@ def parse_dimacs(
                 raise GraphParseError(
                     f"line {lineno}: non-numeric vertex count in {line!r}"
                 ) from e
+            info["n_declared"] = n_declared
             continue
         if line[0] == "e":
             u, v = _split_ints(line[1:], lineno, 2)
             if u < 1 or v < 1:
                 raise GraphParseError(f"line {lineno}: DIMACS ids are 1-indexed")
-            src.append(u - 1)
-            dst.append(v - 1)
+            if buf.push(u - 1, v - 1):
+                yield buf.flush()
             continue
         raise GraphParseError(f"line {lineno}: unknown DIMACS record {line!r}")
     if n_declared is None:
         raise GraphParseError("DIMACS file has no `p` problem line")
-    n = n_declared if n_nodes is None else int(n_nodes)
-    max_id = int(max(max(src, default=-1), max(dst, default=-1)))
+    yield buf.flush()
+
+
+CHUNKERS = {
+    "edgelist": iter_edgelist_chunks,
+    "mtx": iter_mtx_chunks,
+    "dimacs": iter_dimacs_chunks,
+}
+
+
+def collect_chunks(
+    chunks: Iterable[Chunk],
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Drain a chunk iterator into whole arrays; returns (src, dst, max_id)
+    with max_id = -1 for an edgeless stream.  Shared by the whole-file
+    parsers below and `dyngraph.stream.load_graph_stream`."""
+    srcs: List[np.ndarray] = []
+    dsts: List[np.ndarray] = []
+    for s, d in chunks:
+        if s.size:
+            srcs.append(s)
+            dsts.append(d)
+    s = np.concatenate(srcs) if srcs else np.zeros(0, np.int64)
+    d = np.concatenate(dsts) if dsts else np.zeros(0, np.int64)
+    return s, d, int(max(s.max(initial=-1), d.max(initial=-1)))
+
+
+def resolve_n_nodes(
+    fmt: str,
+    max_id: int,
+    declared: Optional[int] = None,
+    n_nodes: Optional[int] = None,
+) -> int:
+    """The per-format vertex-count resolution and its guards, single-sited:
+    explicit override > the file's declared count > max_id + 1 — rejecting
+    counts the edges overflow and the describes-no-graph case with each
+    format's established error message (tests pin the wording)."""
+    n = int(n_nodes) if n_nodes is not None else (
+        declared if declared is not None else max_id + 1
+    )
     if n <= max_id:
-        raise GraphParseError(f"problem line says {n} vertices, file uses {max_id + 1}")
+        raise GraphParseError({
+            "edgelist": f"n_nodes={n} but file references vertex {max_id}",
+            "mtx": f"n_nodes={n} but file references vertex {max_id + 1}",
+            "dimacs": f"problem line says {n} vertices, file uses {max_id + 1}",
+        }[fmt])
     if n < 1:
-        raise GraphParseError("DIMACS problem line declares 0 vertices")
-    return np.asarray(src, dtype=np.int64), np.asarray(dst, dtype=np.int64), n
+        raise GraphParseError({
+            "edgelist": "edge list contains no edges (and no n_nodes override)",
+            "mtx": "MatrixMarket size line declares a 0-vertex matrix",
+            "dimacs": "DIMACS problem line declares 0 vertices",
+        }[fmt])
+    return n
+
+
+# --------------------------------------------------------------------------
+# whole-file parsers: collect chunks + per-format vertex-count resolution
+# --------------------------------------------------------------------------
+
+
+def parse_edge_list(
+    lines: Iterable[str], n_nodes: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """SNAP-style `u v` pairs → (src, dst, n_nodes)."""
+    s, d, max_id = collect_chunks(iter_edgelist_chunks(lines))
+    return s, d, resolve_n_nodes("edgelist", max_id, None, n_nodes)
+
+
+def parse_mtx(
+    lines: Iterable[str], n_nodes: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """MatrixMarket coordinate file → (src, dst, n_nodes); values dropped."""
+    info: dict = {}
+    s, d, max_id = collect_chunks(iter_mtx_chunks(lines, info=info))
+    return s, d, resolve_n_nodes("mtx", max_id, info.get("n_declared"), n_nodes)
+
+
+def parse_dimacs(
+    lines: Iterable[str], n_nodes: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """DIMACS `p edge` file → (src, dst, n_nodes); 1-indexed `e u v` lines."""
+    info: dict = {}
+    s, d, max_id = collect_chunks(iter_dimacs_chunks(lines, info=info))
+    return s, d, resolve_n_nodes(
+        "dimacs", max_id, info.get("n_declared"), n_nodes
+    )
 
 
 _PARSERS = {
@@ -214,6 +327,9 @@ def load_graph(
     overrides the file's vertex count (e.g. to include isolated tail
     vertices an edge list cannot express); ``pad_to`` pre-pads the edge
     arrays (see `graphs.graph.from_edges`).
+
+    Reads the whole file; `repro.dyngraph.stream.load_graph_stream` is the
+    bounded-memory twin over the same chunk generators (DESIGN.md §12).
     """
     with open(path, "r", encoding="utf-8", errors="replace") as f:
         lines = f.readlines()

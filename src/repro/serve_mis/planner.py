@@ -10,12 +10,14 @@ from repro.api.plan import (  # noqa: F401 — compatibility re-exports
     PlanCache,
     TilePlan,
     build_plan,
+    delta_cache_key,
     graph_content_key,
+    patch_plan,
     plan_cache_key,
     resolve_storage,
 )
 
 __all__ = [
-    "Plan", "PlanCache", "TilePlan", "build_plan", "graph_content_key",
-    "plan_cache_key", "resolve_storage",
+    "Plan", "PlanCache", "TilePlan", "build_plan", "delta_cache_key",
+    "graph_content_key", "patch_plan", "plan_cache_key", "resolve_storage",
 ]

@@ -4,10 +4,12 @@ Request lifecycle (DESIGN.md §9):
 
     submit ─ ingest (io) ─ plan (planner cache) ─┐
     submit ─ ingest ─ plan ───────────────────────┤ queue
+    submit_update ─ (targets a served result) ────┤
     ...                                           │
                  step(): pop ≤ max_batch ─ Solver.solve_many (block-diagonal
-                 pack, ONE dispatch per batch) ─ fused validity
-                 post-condition per member ─ Response
+                 pack, ONE dispatch per batch; updates patch their cached
+                 plan tile-locally + warm-repair, DESIGN.md §12) ─ fused
+                 validity post-condition per member ─ Response
 
 Every response carries per-request stats — queue time, plan-cache layer
 (mem/disk/built), bucket signature, whether this batch reused a compiled
@@ -26,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Deque, Dict, List, Optional, Union
 
 import jax.numpy as jnp
@@ -34,6 +36,7 @@ import numpy as np
 
 from repro.api import Solver, SolveOptions
 from repro.core.validate import is_valid_mis_jit
+from repro.dyngraph.delta import EdgeDelta
 from repro.graphs.graph import Graph
 from repro.serve_mis.io import load_graph
 from repro.serve_mis.planner import TilePlan
@@ -56,6 +59,12 @@ class ServeConfig:
     plan_cache_entries: int = 256  # memory-layer LRU bound (disk is unbounded)
     validate: bool = True
     seed: int = 0
+    repair: str = "auto"           # delta-update policy (SolveOptions.repair)
+    # completed-result retention (the targets `submit_update` may name).
+    # Each retained result pins its Plan — tiles included — so this bound
+    # matches plan_cache_entries by default: retention must not out-pin
+    # the plan cache's own memory bound.
+    result_entries: int = 256
 
     def solve_options(self) -> SolveOptions:
         """The Solver half of this config (the front door, DESIGN.md §10)."""
@@ -73,6 +82,7 @@ class ServeConfig:
             seed=self.seed,
             cache_dir=self.cache_dir,
             plan_cache_entries=self.plan_cache_entries,
+            repair=self.repair,
         )
 
 
@@ -82,6 +92,19 @@ class Request:
     source: str
     plan: TilePlan
     plan_status: str      # mem | disk | built
+    t_enqueue: float
+
+
+@dataclasses.dataclass
+class UpdateRequest:
+    """A graph-mutation request: patch request `base_id`'s graph with
+    `delta` and repair its solution (DESIGN.md §12).  `base_id` must name a
+    COMPLETED request — chain mutations by targeting each update's own id
+    once it has been served."""
+    id: int
+    base_id: int
+    source: str
+    delta: EdgeDelta
     t_enqueue: float
 
 
@@ -130,9 +153,12 @@ class MISService:
         self.config = config
         self.solver = Solver(config.solve_options())  # raises on bad engine
         self.planner = self.solver.plans
-        self._queue: Deque[Request] = deque()
+        self._queue: Deque[Union[Request, UpdateRequest]] = deque()
         self._next_id = 0
         self._requests = 0
+        # completed results by request id — the targets `submit_update`
+        # may name (bounded FIFO; a long stream retires old targets)
+        self._results: "OrderedDict[int, object]" = OrderedDict()
         # compat aliases for introspection (tests, tooling): the Solver owns
         # the base key and the jitted packed dispatch now
         self._base_key = self.solver._base_key
@@ -154,10 +180,20 @@ class MISService:
         *,
         fmt: Optional[str] = None,
         n_nodes: Optional[int] = None,
+        stream: bool = False,
     ) -> int:
-        """Ingest + plan (cache-aware) and enqueue; returns the request id."""
+        """Ingest + plan (cache-aware) and enqueue; returns the request id.
+
+        `stream=True` ingests file sources through the chunked readers
+        (`repro.dyngraph.stream.load_graph_stream`) — same Graph, same
+        plan-cache hits, without the whole-file line list."""
         if isinstance(source, Graph):
             graph, name = source, f"<graph:{source.n_nodes}v>"
+        elif stream:
+            from repro.dyngraph.stream import load_graph_stream
+
+            name = str(source)
+            graph = load_graph_stream(name, fmt=fmt, n_nodes=n_nodes)
         else:
             name = str(source)
             graph = load_graph(name, fmt=fmt, n_nodes=n_nodes)
@@ -174,6 +210,33 @@ class MISService:
         self._queue.append(req)
         return req.id
 
+    def submit_update(self, base_id: int, delta: EdgeDelta) -> int:
+        """Enqueue a graph mutation against a COMPLETED request (DESIGN.md
+        §12): the base request's cached plan is patched tile-locally and
+        its solution repaired per `config.repair` — never a re-ingest, and
+        for small deltas never a cold re-solve.  Chain mutations by
+        targeting the previous update's own id once it has been served;
+        an unknown or not-yet-completed `base_id` raises KeyError."""
+        if base_id not in self._results:
+            raise KeyError(
+                f"update targets request {base_id}, which has not completed "
+                f"(updates chain off served results; drain first)"
+            )
+        # fail fast on the cheap structural check; set-strictness (absent
+        # removes / present adds) surfaces at step time as an error response
+        delta.check_bounds(self._results[base_id].plan.n_nodes)
+        req = UpdateRequest(
+            id=self._next_id,
+            base_id=base_id,
+            source=f"<update:{base_id}+{delta.n_add}-{delta.n_remove}>",
+            delta=delta,
+            t_enqueue=time.perf_counter(),
+        )
+        self._next_id += 1
+        self._requests += 1
+        self._queue.append(req)
+        return req.id
+
     @property
     def pending(self) -> int:
         return len(self._queue)
@@ -181,7 +244,16 @@ class MISService:
     # -- the worker step ----------------------------------------------------
 
     def step(self) -> List[Response]:
-        """Pop ≤ max_batch requests, solve them through the Solver, respond."""
+        """Pop ≤ max_batch requests, solve them through the Solver, respond.
+
+        Solve requests in the window share one batched dispatch; update
+        requests repair individually (each is one warm-started dispatch
+        against its own patched plan).  A failing update — a delta that
+        violates set strictness against the graph it targets, or a base
+        result that aged out of retention — yields an INVALID error
+        response; it never kills the stream or its window-mates.  Response
+        order is pop order.
+        """
         if not self._queue:
             return []
         reqs = [
@@ -189,16 +261,54 @@ class MISService:
             for _ in range(min(self.config.max_batch, len(self._queue)))
         ]
         t_pop = time.perf_counter()
-        results = self.solver.solve_many([r.plan for r in reqs])
+        solves = [r for r in reqs if isinstance(r, Request)]
+        results = dict(zip(
+            (r.id for r in solves),
+            self.solver.solve_many([r.plan for r in solves]),
+        ))
+        for r in reqs:
+            if isinstance(r, UpdateRequest):
+                try:
+                    results[r.id] = self._run_update(r)
+                except (ValueError, KeyError) as e:
+                    results[r.id] = e
 
         responses = []
-        for req, res in zip(reqs, results):
+        for req, res in ((r, results[r.id]) for r in reqs):
+            if isinstance(res, Exception):
+                responses.append(Response(
+                    id=req.id, source=req.source,
+                    in_mis=np.zeros(0, dtype=bool), mis_size=0,
+                    independent=False, maximal=False, converged=False,
+                    rounds=0,
+                    stats=dict(
+                        queue_ms=round((t_pop - req.t_enqueue) * 1e3, 3),
+                        error=f"{type(res).__name__}: {res}",
+                        batch_size=len(reqs),
+                    ),
+                ))
+                continue
             independent = maximal = True
             if self.config.validate:
                 independent, maximal = is_valid_mis_jit(
-                    req.plan.g, jnp.asarray(res.in_mis_plan)
+                    res.plan.g, jnp.asarray(res.in_mis_plan)
                 )
             in_mis = np.asarray(res.in_mis).astype(bool)
+            is_update = isinstance(req, UpdateRequest)
+            stats = dict(
+                queue_ms=round((t_pop - req.t_enqueue) * 1e3, 3),
+                solve_ms=res.stats.get("solve_ms", 0.0),
+                plan_cache=res.stats["patch"] if is_update else req.plan_status,
+                bucket=res.stats.get("bucket", res.placement),
+                compile=res.stats.get("compile", "n/a"),
+                batch_size=len(reqs),
+            )
+            if is_update:
+                stats.update(
+                    repair=res.stats["repair"],
+                    plan_epoch=res.stats["plan_epoch"],
+                    base_id=req.base_id,
+                )
             responses.append(Response(
                 id=req.id,
                 source=req.source,
@@ -208,16 +318,37 @@ class MISService:
                 maximal=maximal,
                 converged=res.converged,
                 rounds=res.rounds,
-                stats=dict(
-                    queue_ms=round((t_pop - req.t_enqueue) * 1e3, 3),
-                    solve_ms=res.stats.get("solve_ms", 0.0),
-                    plan_cache=req.plan_status,
-                    bucket=res.stats.get("bucket", res.placement),
-                    compile=res.stats.get("compile", "n/a"),
-                    batch_size=len(reqs),
-                ),
+                stats=stats,
             ))
+            self._results[req.id] = res
+            while len(self._results) > max(self.config.result_entries, 1):
+                self._results.popitem(last=False)
         return responses
+
+    def _run_update(self, r: UpdateRequest):
+        """One update's repair dispatch, under the CONTENT-DERIVED key of
+        the patched graph — the key a fresh submission of that mutated
+        graph would be solved under (`Solver.request_key`), and, for an
+        empty delta, exactly the key the base response was solved under.
+        That keeps update responses bit-consistent with the service's own
+        solve path in every repair mode (a plain `Solver.update` defaults
+        to the classic seed key instead, matching `Solver.solve`)."""
+        if r.base_id not in self._results:
+            raise KeyError(
+                f"update {r.id} targets request {r.base_id}, whose result "
+                f"aged out of retention (result_entries="
+                f"{self.config.result_entries})"
+            )
+        prior = self._results[r.base_id]
+        # this first patch is the authoritative cache probe; Solver.update's
+        # own apply_delta then mem-hits by construction, so ITS patch stat
+        # would always read 'mem' — overwrite with the real layer
+        plan2, patch_status = self.solver.plans.apply_delta(prior.plan, r.delta)
+        res = self.solver.update(
+            prior, r.delta, key=self.solver.request_key(plan2)
+        )
+        res.stats["patch"] = patch_status
+        return res
 
     def drain(self) -> List[Response]:
         """Run worker steps until the queue is empty."""

@@ -1,0 +1,551 @@
+"""The dyngraph subsystem (DESIGN.md §12): deltas, retiling, repair, stream.
+
+Covers the delta-lifecycle contract end to end: canonical `EdgeDelta`s with
+a true inverse, tile-local retiling that is BIT-EXACT with a from-scratch
+rebuild of the mutated graph (the correctness oracle), warm-started MIS
+repair that stays valid for every registered engine and both storages,
+epoch-keyed plan-cache patching with stale pre-delta eviction, the serving
+update op, the chunked ingestion readers, and the CI guard that keeps the
+delta path from ever densifying packed tiles.
+"""
+import importlib.util
+import os
+import pathlib
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.api import (
+    Plan,
+    PlanCache,
+    SolveOptions,
+    Solver,
+    delta_cache_key,
+    patch_plan,
+)
+from repro.api.plan import _PLAN_VERSION
+from repro.core.engine import engine_names
+from repro.core.tiling import build_block_tiles
+from repro.core.validate import is_valid_mis_jit
+from repro.dyngraph import (
+    EdgeDelta,
+    apply_delta,
+    apply_graph_delta,
+    load_delta,
+    load_graph_stream,
+    parse_delta,
+    random_delta,
+)
+from repro.graphs.generators import erdos_renyi, grid2d
+from repro.serve_mis import MISService, ServeConfig
+from repro.serve_mis.io import GraphParseError, load_graph
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+# ---------------------------------------------------------------------------
+# EdgeDelta canonicalisation
+# ---------------------------------------------------------------------------
+
+
+def test_delta_canonicalises_like_from_edges():
+    # duplicates, both directions, self loops — one canonical (lo, hi) set
+    d = EdgeDelta.make([3, 1, 1, 2, 5], [1, 3, 1, 4, 5], [7], [6])
+    np.testing.assert_array_equal(d.add, [[1, 3], [2, 4]])
+    np.testing.assert_array_equal(d.remove, [[6, 7]])
+    assert (d.n_add, d.n_remove, d.is_empty) == (2, 1, False)
+    np.testing.assert_array_equal(d.touched(), [1, 2, 3, 4, 6, 7])
+
+
+def test_delta_content_key_is_input_order_invariant():
+    a = EdgeDelta.make([1, 5], [2, 6], [8], [9])
+    b = EdgeDelta.make([6, 2], [5, 1], [9], [8])
+    assert a.content_key == b.content_key
+    assert a.content_key != a.inverse().content_key
+    assert EdgeDelta.make().is_empty
+
+
+def test_delta_overlap_and_bounds_rejected():
+    with pytest.raises(ValueError, match="both add and remove"):
+        EdgeDelta.make([1], [2], [2], [1])
+    with pytest.raises(ValueError, match="grow the vertex set"):
+        EdgeDelta.make([1], [99]).check_bounds(50)
+
+
+def test_delta_inverse_and_mapped():
+    d = EdgeDelta.make([0], [1], [2], [3])
+    inv = d.inverse()
+    np.testing.assert_array_equal(inv.add, d.remove)
+    np.testing.assert_array_equal(inv.remove, d.add)
+    # a permutation that flips (lo, hi) order still canonicalises
+    mapping = np.array([3, 2, 1, 0])
+    m = d.mapped(mapping)
+    np.testing.assert_array_equal(m.add, [[2, 3]])
+    np.testing.assert_array_equal(m.remove, [[0, 1]])
+
+
+# ---------------------------------------------------------------------------
+# graph-level application (strict set semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_apply_graph_delta_matches_fresh_build():
+    g = erdos_renyi(60, avg_deg=4.0, seed=0)
+    d = random_delta(g, n_add=5, n_remove=5, seed=1)
+    g2 = apply_graph_delta(g, d)
+    assert g2.n_edges == g.n_edges  # 5 in, 5 out (half-edges balance)
+    # strictness both ways
+    with pytest.raises(ValueError, match="already in the graph"):
+        apply_graph_delta(g2, EdgeDelta(add=d.add, remove=np.zeros((0, 2), np.int64)))
+    with pytest.raises(ValueError, match="not in the graph"):
+        apply_graph_delta(g2, EdgeDelta(add=np.zeros((0, 2), np.int64), remove=d.remove))
+    # inverse restores the edge list bit-exactly
+    g3 = apply_graph_delta(g2, d.inverse())
+    np.testing.assert_array_equal(np.asarray(g3.senders), np.asarray(g.senders))
+    np.testing.assert_array_equal(np.asarray(g3.receivers), np.asarray(g.receivers))
+
+
+# ---------------------------------------------------------------------------
+# tile-local retiling: the rebuild oracle
+# ---------------------------------------------------------------------------
+
+
+def _assert_tiled_equal(a, b):
+    assert a.n_tiles == b.n_tiles and a.storage == b.storage
+    np.testing.assert_array_equal(np.asarray(a.tiles), np.asarray(b.tiles))
+    np.testing.assert_array_equal(np.asarray(a.tile_rows), np.asarray(b.tile_rows))
+    np.testing.assert_array_equal(np.asarray(a.tile_cols), np.asarray(b.tile_cols))
+    np.testing.assert_array_equal(np.asarray(a.row_starts), np.asarray(b.row_starts))
+
+
+@pytest.mark.parametrize("storage", ["int8", "bitpack"])
+@pytest.mark.parametrize("T", [8, 32])
+def test_apply_delta_bit_exact_with_rebuild(T, storage):
+    g = erdos_renyi(150, avg_deg=5.0, seed=2)
+    tiled = build_block_tiles(g, tile_size=T, storage=storage)
+    d = random_delta(g, n_add=12, n_remove=9, seed=3)
+    patched = apply_delta(tiled, d)
+    rebuilt = build_block_tiles(
+        apply_graph_delta(g, d), tile_size=T, storage=storage
+    )
+    _assert_tiled_equal(patched, rebuilt)
+
+
+def test_apply_delta_fast_path_reuses_index_arrays():
+    """Edits confined to existing tiles must not re-upload the tile index
+    (same device arrays), and an empty delta is a pure pass-through."""
+    g = grid2d(8, 8)
+    tiled = build_block_tiles(g, tile_size=8)
+    # removing one existing edge never changes the tile list on a grid tile
+    s = np.asarray(g.senders)[0]
+    r = np.asarray(g.receivers)[0]
+    d = EdgeDelta.make(rem_src=[int(s)], rem_dst=[int(r)])
+    patched = apply_delta(tiled, d)
+    assert patched.tile_rows is tiled.tile_rows
+    assert patched.tile_cols is tiled.tile_cols
+    assert patched.row_starts is tiled.row_starts
+    assert apply_delta(tiled, EdgeDelta.make()) is tiled
+
+
+def test_apply_delta_drains_and_inserts_tiles():
+    """Removing a tile's last edge drops it; adding into an untouched block
+    inserts one — both matching the rebuild (includes the drained case the
+    fast path alone never exercises)."""
+    g = erdos_renyi(64, avg_deg=2.0, seed=4)
+    T = 8
+    for storage in ("int8", "bitpack"):
+        tiled = build_block_tiles(g, tile_size=T, storage=storage)
+        # remove EVERY edge of the first block-row pair, add a far-corner edge
+        s = np.asarray(g.senders)[: g.n_edges]
+        r = np.asarray(g.receivers)[: g.n_edges]
+        in_first = (s // T == 0) & (r // T == 0)
+        d = EdgeDelta.make(
+            add_src=[0], add_dst=[g.n_nodes - 1],
+            rem_src=s[in_first], rem_dst=r[in_first],
+        )
+        patched = apply_delta(tiled, d)
+        rebuilt = build_block_tiles(
+            apply_graph_delta(g, d), tile_size=T, storage=storage
+        )
+        _assert_tiled_equal(patched, rebuilt)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    T=st.sampled_from([8, 16, 32, 64, 128, 256]),
+    storage=st.sampled_from(["int8", "bitpack"]),
+    n_add=st.integers(0, 12),
+    n_remove=st.integers(0, 12),
+    seed=st.integers(0, 1000),
+)
+def test_delta_roundtrip_property(T, storage, n_add, n_remove, seed):
+    """apply_delta(·, d) then apply_delta(·, d.inverse()) restores the
+    tiling bit-exactly — any T, either storage (the satellite property)."""
+    g = erdos_renyi(90, avg_deg=4.0, seed=seed % 17)
+    tiled = build_block_tiles(g, tile_size=T, storage=storage)
+    d = random_delta(g, n_add=n_add, n_remove=n_remove, seed=seed)
+    restored = apply_delta(apply_delta(tiled, d), d.inverse())
+    _assert_tiled_equal(restored, tiled)
+
+
+# ---------------------------------------------------------------------------
+# Plan patching + the epoch-keyed cache
+# ---------------------------------------------------------------------------
+
+
+def test_patch_plan_epoch_and_key_lineage():
+    g = erdos_renyi(70, avg_deg=4.0, seed=5)
+    plan = Plan.build(g, tile_size=8)
+    d = random_delta(g, n_add=3, n_remove=3, seed=6)
+    p1 = plan.apply_delta(d)
+    assert p1.epoch == 1 and plan.epoch == 0
+    assert p1.key == delta_cache_key(plan.key, d.content_key)
+    assert p1.tile_size == plan.tile_size and p1.storage == plan.storage
+    # empty delta: pure pass-through, no epoch bump
+    assert plan.apply_delta(EdgeDelta.make()) is plan
+    # lineage keys differ from content keys: same state, different history
+    p2 = p1.apply_delta(d.inverse())
+    assert p2.epoch == 2 and p2.key != plan.key
+    np.testing.assert_array_equal(
+        np.asarray(p2.tiled.tiles), np.asarray(plan.tiled.tiles)
+    )
+
+
+def test_patch_plan_maps_delta_through_rcm_perm():
+    g = erdos_renyi(80, avg_deg=4.0, seed=7)
+    plan = Plan.build(g, tile_size=8, reorder="rcm")
+    d = random_delta(g, n_add=4, n_remove=4, seed=8)   # ORIGINAL ids
+    p1 = patch_plan(plan, d)
+    assert p1.perm is not None and p1.reorder == "rcm"
+    # patched plan's graph == fresh RCM-mapped build of the mutated graph
+    g2 = apply_graph_delta(g, d)
+    s = np.asarray(g2.senders)[: g2.n_edges]
+    r = np.asarray(g2.receivers)[: g2.n_edges]
+    from repro.graphs.graph import from_edges
+
+    expect = from_edges(p1.inv[s], p1.inv[r], g2.n_nodes)
+    np.testing.assert_array_equal(
+        np.asarray(p1.g.senders), np.asarray(expect.senders)
+    )
+
+
+def test_plan_cache_apply_delta_statuses_and_epoch_eviction(tmp_path):
+    """THE epoch-eviction satellite: a patched plan's stale pre-delta npz
+    entry is detected, warned about once, unlinked, and counted in
+    `stats.evicted_stale` — mirroring the v1-migration smoke."""
+    g = erdos_renyi(60, avg_deg=4.0, seed=9)
+    cache = PlanCache(tile_size=8, cache_dir=str(tmp_path))
+    plan, status = cache.plan(g)
+    assert status == "built"
+    parent_path = cache._path(plan.key)
+    assert os.path.exists(parent_path)
+
+    d = random_delta(g, n_add=3, n_remove=2, seed=10)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        p1, status = cache.apply_delta(plan, d)
+    assert status == "built" and p1.epoch == 1
+    # pre-delta entry: detected, warned once, unlinked, counted
+    assert not os.path.exists(parent_path)
+    assert cache.stats["evicted_stale"] == 1
+    msgs = [str(w.message) for w in caught]
+    assert sum("pre-delta entry" in m for m in msgs) == 1, msgs
+
+    # the patched entry persists under the CURRENT (v2) format
+    with np.load(cache._path(p1.key)) as z:
+        assert int(z["meta"][6]) == _PLAN_VERSION
+        assert int(z["epoch"][0]) == 1
+
+    # memoisation layers: mem hit same cache, disk hit from a fresh cache
+    assert cache.apply_delta(plan, d)[1] == "mem"
+    fresh = PlanCache(tile_size=8, cache_dir=str(tmp_path))
+    p1d, status = fresh.apply_delta(plan, d)
+    assert status == "disk" and p1d.epoch == 1
+    np.testing.assert_array_equal(
+        np.asarray(p1d.tiled.tiles), np.asarray(p1.tiled.tiles)
+    )
+
+    # chaining: the epoch-1 entry is itself retired by the epoch-2 patch
+    d2 = random_delta(p1.g, n_add=2, n_remove=2, seed=11)
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        p2, _ = cache.apply_delta(p1, d2)
+    assert p2.epoch == 2
+    assert not os.path.exists(cache._path(p1.key))
+    assert cache.stats["evicted_stale"] == 2
+
+
+# ---------------------------------------------------------------------------
+# incremental repair: every engine, both storages
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", engine_names())
+@pytest.mark.parametrize("storage", ["int8", "bitpack"])
+def test_repair_valid_and_empty_delta_bit_identical(engine, storage):
+    g = erdos_renyi(90, avg_deg=5.0, seed=12)
+    solver = Solver(SolveOptions(
+        engine=engine, tile_size=8, storage=storage, placement="local",
+        repair="incremental",
+    ))
+    prior = solver.solve(g)
+    d = random_delta(g, n_add=6, n_remove=6, seed=13)
+    res = solver.update(prior, d)
+    assert res.stats["repair"] == "incremental"
+    assert res.plan.epoch == 1
+    assert all(is_valid_mis_jit(res.plan.g, jnp.asarray(res.in_mis_plan)))
+    # empty delta: bit-identical to the prior (== cold, by determinism)
+    res0 = solver.update(prior, EdgeDelta.make())
+    assert res0.rounds == 0
+    np.testing.assert_array_equal(res0.in_mis, prior.in_mis)
+
+
+def test_repair_empty_delta_matches_cold_mode_exactly():
+    g = erdos_renyi(90, avg_deg=5.0, seed=14)
+    inc = Solver(SolveOptions(engine="tiled_ref", tile_size=8,
+                              repair="incremental"))
+    cold = Solver(SolveOptions(engine="tiled_ref", tile_size=8,
+                               repair="cold"))
+    prior_i, prior_c = inc.solve(g), cold.solve(g)
+    np.testing.assert_array_equal(prior_i.in_mis, prior_c.in_mis)
+    ri = inc.update(prior_i, EdgeDelta.make())
+    rc = cold.update(prior_c, EdgeDelta.make())
+    assert (ri.stats["repair"], rc.stats["repair"]) == ("incremental", "cold")
+    np.testing.assert_array_equal(ri.in_mis, rc.in_mis)
+
+
+def test_repair_fewer_rounds_than_cold_on_small_delta():
+    g = erdos_renyi(400, avg_deg=8.0, seed=15)
+    solver = Solver(SolveOptions(engine="tiled_ref", tile_size=16,
+                                 repair="incremental"))
+    prior = solver.solve(g)
+    d = random_delta(g, n_add=4, n_remove=4, seed=16)   # ≪ 1% of edges
+    res = solver.update(prior, d)
+    cold = solver.solve(res.plan)
+    assert res.rounds < cold.rounds, (res.rounds, cold.rounds)
+
+
+def test_repair_auto_policy_falls_back_to_cold():
+    g = erdos_renyi(60, avg_deg=4.0, seed=17)
+    solver = Solver(SolveOptions(engine="tiled_ref", tile_size=8,
+                                 repair="auto", repair_threshold=0.05))
+    prior = solver.solve(g)
+    # touches far more than 5% of vertices → auto goes cold
+    d = random_delta(g, n_add=30, n_remove=30, seed=18)
+    res = solver.update(prior, d)
+    assert res.stats["repair"] == "cold"
+    assert all(is_valid_mis_jit(res.plan.g, jnp.asarray(res.in_mis_plan)))
+    # a single-edge delta stays incremental
+    d2 = random_delta(res.plan.g, n_add=1, n_remove=0, seed=19)
+    res2 = solver.update(res, d2)
+    assert res2.stats["repair"] == "incremental"
+
+
+def test_repair_chain_stays_valid_with_rcm():
+    """Updates compose across epochs, including through an RCM permutation
+    (deltas arrive in original ids; results stay original-id)."""
+    g = erdos_renyi(120, avg_deg=5.0, seed=20)
+    solver = Solver(SolveOptions(engine="tiled_ref", tile_size=8,
+                                 reorder="rcm", repair="incremental"))
+    res = solver.solve(g)
+    rng = np.random.default_rng(21)
+    for step in range(3):
+        # deltas in ORIGINAL ids: regenerate against the original-id view
+        orig_mis = res.in_mis
+        d = random_delta(_original_graph(res.plan), 3, 3, rng=rng)
+        res = solver.update(res, d)
+        assert res.plan.epoch == step + 1
+        assert all(is_valid_mis_jit(res.plan.g, jnp.asarray(res.in_mis_plan)))
+        assert res.in_mis.shape == orig_mis.shape
+
+
+def _original_graph(plan):
+    """The plan's graph mapped back to original vertex ids."""
+    from repro.graphs.graph import from_edges
+
+    g = plan.g
+    if plan.perm is None:
+        return g
+    s = np.asarray(g.senders)[: g.n_edges]
+    r = np.asarray(g.receivers)[: g.n_edges]
+    return from_edges(plan.perm[s], plan.perm[r], g.n_nodes)
+
+
+def test_unknown_repair_spelling_rejected():
+    with pytest.raises(ValueError, match="valid"):
+        SolveOptions(repair="warm")
+
+
+# ---------------------------------------------------------------------------
+# serving: the update op
+# ---------------------------------------------------------------------------
+
+
+def test_service_update_flow():
+    svc = MISService(ServeConfig(tile_size=8, engine="tiled_ref"))
+    g = erdos_renyi(80, avg_deg=4.0, seed=22)
+    rid = svc.submit(g)
+    (base,) = svc.drain()
+    assert base.valid
+
+    d = random_delta(g, n_add=4, n_remove=4, seed=23)
+    uid = svc.submit_update(rid, d)
+    (resp,) = svc.drain()
+    assert resp.id == uid and resp.valid
+    assert resp.stats["repair"] == "incremental"
+    assert resp.stats["plan_epoch"] == 1 and resp.stats["base_id"] == rid
+    assert resp.summary()["plan_epoch"] == 1
+
+    # chaining targets the update's own id; unknown/unserved ids raise
+    d2 = random_delta(svc._results[uid].plan.g, n_add=2, n_remove=1, seed=24)
+    svc.submit_update(uid, d2)
+    (resp2,) = svc.drain()
+    assert resp2.valid and resp2.stats["plan_epoch"] == 2
+    with pytest.raises(KeyError, match="has not completed"):
+        svc.submit_update(999, d)
+
+
+def test_service_bad_delta_yields_error_response_not_crash():
+    """A strictness-violating delta passes submit (bounds are the only
+    cheap check) but must surface as an INVALID error response at step —
+    never an exception that kills the stream or its window-mates."""
+    svc = MISService(ServeConfig(tile_size=8, engine="tiled_ref"))
+    g = erdos_renyi(60, avg_deg=4.0, seed=27)
+    rid = svc.submit(g)
+    svc.drain()
+    # a guaranteed NON-edge (random_delta samples adds from non-edges),
+    # submitted as a removal — strict set semantics reject it at patch time
+    non_edge = random_delta(g, n_add=1, n_remove=0, seed=28).add
+    bad = EdgeDelta(add=np.zeros((0, 2), np.int64), remove=non_edge)
+    svc.submit_update(rid, bad)
+    svc.submit(grid2d(5, 5))                    # the window-mate survives
+    out = svc.step()
+    assert len(out) == 2
+    err, ok = out
+    assert not err.valid and "not in the graph" in err.stats["error"]
+    assert ok.valid
+    # out-of-range endpoints fail fast at submit instead
+    with pytest.raises(ValueError, match="grow the vertex set"):
+        svc.submit_update(rid, EdgeDelta.make([0], [10_000]))
+
+
+def test_service_cold_empty_delta_bit_identical_to_base():
+    """The service keys updates off the patched graph's content
+    (`request_key`), so even repair='cold' reproduces the base response
+    bit-for-bit on an empty delta — the §12 empty-delta contract holds in
+    serving, not just at the Solver level."""
+    g = erdos_renyi(70, avg_deg=4.0, seed=29)
+    for repair in ("cold", "incremental"):
+        svc = MISService(ServeConfig(tile_size=8, engine="tiled_ref",
+                                     repair=repair))
+        rid = svc.submit(g)
+        (base,) = svc.drain()
+        svc.submit_update(rid, EdgeDelta.make())
+        (resp,) = svc.drain()
+        assert resp.stats["repair"] == repair
+        np.testing.assert_array_equal(resp.in_mis, base.in_mis)
+
+
+def test_service_update_mixes_with_solves_in_one_step():
+    svc = MISService(ServeConfig(tile_size=8, engine="tiled_ref", max_batch=4))
+    g = erdos_renyi(70, avg_deg=4.0, seed=25)
+    rid = svc.submit(g)
+    svc.drain()
+    svc.submit(grid2d(6, 6))
+    svc.submit_update(rid, random_delta(g, 2, 2, seed=26))
+    svc.submit(grid2d(5, 7))
+    out = svc.step()                      # one window: solve, update, solve
+    assert [type(r).__name__ for r in out] == ["Response"] * 3
+    assert all(r.valid for r in out)
+    kinds = ["repair" in r.stats for r in out]
+    assert kinds == [False, True, False]  # response order is pop order
+
+
+# ---------------------------------------------------------------------------
+# streaming ingestion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["tiny.mtx", "tiny.edges", "tiny.dimacs"])
+def test_stream_ingestion_matches_readlines(name):
+    path = os.path.join(FIXTURES, name)
+    a = load_graph(path)
+    b = load_graph_stream(path, chunk_edges=2)   # force many tiny chunks
+    assert (a.n_nodes, a.n_edges) == (b.n_nodes, b.n_edges)
+    np.testing.assert_array_equal(np.asarray(a.senders), np.asarray(b.senders))
+    np.testing.assert_array_equal(
+        np.asarray(a.receivers), np.asarray(b.receivers)
+    )
+
+
+def test_stream_parse_errors(tmp_path):
+    bad = tmp_path / "bad.edges"
+    bad.write_text("0 1\n2 x\n")
+    with pytest.raises(GraphParseError, match="line 2"):
+        load_graph_stream(str(bad))
+    trunc = tmp_path / "trunc.mtx"
+    trunc.write_text("%%MatrixMarket matrix coordinate pattern general\n"
+                     "4 4 3\n1 2\n2 3\n")
+    with pytest.raises(GraphParseError, match="promised 3"):
+        load_graph_stream(str(trunc))
+    nop = tmp_path / "nop.dimacs"
+    nop.write_text("c no problem line\ne 1 2\n")
+    with pytest.raises(GraphParseError, match="no `p` problem line"):
+        load_graph_stream(str(nop))
+
+
+def test_stream_service_submit_parity():
+    svc = MISService(ServeConfig(tile_size=8, engine="tiled_ref"))
+    path = os.path.join(FIXTURES, "tiny.edges")
+    svc.submit(path)
+    svc.submit(path, stream=True)
+    a, b = svc.drain()
+    np.testing.assert_array_equal(a.in_mis, b.in_mis)
+    assert b.stats["plan_cache"] == "mem"   # same content hash → cache hit
+
+
+def test_load_delta_format(tmp_path):
+    p = tmp_path / "d.delta"
+    p.write_text("# comment\n+ 1 2\n3 4\n- 5 6\n")
+    d = load_delta(str(p))
+    np.testing.assert_array_equal(d.add, [[1, 2], [3, 4]])
+    np.testing.assert_array_equal(d.remove, [[5, 6]])
+    with pytest.raises(GraphParseError, match="line 1"):
+        parse_delta(["+ 1 x"])
+
+
+# ---------------------------------------------------------------------------
+# the CI guard: dyngraph never densifies
+# ---------------------------------------------------------------------------
+
+
+def _load_ci_guards():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "ci_guards", root / "tools" / "ci_guards.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_ci_guard_dyngraph_clean_and_detects_violations(tmp_path):
+    guards = _load_ci_guards()
+    # the shipped dyngraph modules are clean
+    for path in sorted(guards.DYNGRAPH_DIR.glob("*.py")):
+        assert guards.dyngraph_violations(path) == [], str(path)
+    assert guards.main() == 0
+    # a densify outside an *_oracle body is flagged; inside one is allowed
+    bad = tmp_path / "sneaky.py"
+    bad.write_text(
+        "def patch(t):\n"
+        "    return unpack_tile_bits(t.tiles, t.tile_size)\n"
+        "def check_oracle(t):\n"
+        "    return dense_tiles(t.tiles, t.tile_size)\n"
+    )
+    problems = guards.dyngraph_violations(bad)
+    assert len(problems) == 1 and "unpack_tile_bits" in problems[0]

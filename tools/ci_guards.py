@@ -1,4 +1,4 @@
-"""CI source guards that a grep can't express precisely (DESIGN.md §11).
+"""CI source guards that a grep can't express precisely (DESIGN.md §11/§12).
 
 Guard 1 — packed tiles must stay packed until VMEM: in the kernel modules
 (`src/repro/kernels/`, excluding the oracle `ref.py`), `unpack_tile_bits`
@@ -12,6 +12,15 @@ Guard 2 — kernel modules must not densify via the whole-array helpers
 either: `dense_tiles` (the oracle dispatch) and `to_storage` (the format
 converter) never appear under `src/repro/kernels/` outside `ref.py`.
 
+Guard 3 — the dyngraph delta path edits packed tiles AS packed words
+(word-level bit edits, DESIGN.md §12): under `src/repro/dyngraph/`, none
+of `unpack_tile_bits` / `dense_tiles` / `to_storage` may be called outside
+a function whose name ends in `_oracle` (the sanctioned densify path for
+reference checks — none exist today; the suffix names the ONLY place one
+would be allowed).  A densify in `retile.py` would silently turn the
+O(delta) patch into an O(tiles) unpack-repack; in `repair.py` it would
+materialise dense tiles the engines never need.
+
 Run: python tools/ci_guards.py   (exit 0 = clean)
 """
 from __future__ import annotations
@@ -20,12 +29,26 @@ import ast
 import pathlib
 import sys
 
-KERNEL_DIR = pathlib.Path(__file__).resolve().parent.parent / "src/repro/kernels"
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+KERNEL_DIR = ROOT / "src/repro/kernels"
+DYNGRAPH_DIR = ROOT / "src/repro/dyngraph"
 ORACLE_FILES = {"ref.py"}          # the sanctioned full-unpack path
 KERNEL_FN_SUFFIX = "_kernel"
+ORACLE_FN_SUFFIX = "_oracle"
+
+DENSIFY_CALLS = ("unpack_tile_bits", "dense_tiles")
 
 
-def _violations(path: pathlib.Path) -> list:
+def _call_name(node: ast.Call):
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    return None
+
+
+def _walk_calls(path: pathlib.Path):
+    """Yield (call_name, lineno, enclosing_fn_stack) for every call."""
     tree = ast.parse(path.read_text(), filename=str(path))
     out = []
 
@@ -42,30 +65,49 @@ def _violations(path: pathlib.Path) -> list:
         visit_AsyncFunctionDef = _visit_fn
 
         def visit_Call(self, node):
-            name = None
-            if isinstance(node.func, ast.Name):
-                name = node.func.id
-            elif isinstance(node.func, ast.Attribute):
-                name = node.func.attr
-            if name in ("unpack_tile_bits", "dense_tiles"):
-                in_kernel_body = any(
-                    fn.endswith(KERNEL_FN_SUFFIX) for fn in self.stack
-                )
-                if name == "dense_tiles" or not in_kernel_body:
-                    out.append(
-                        f"{path}:{node.lineno}: {name} called "
-                        f"outside a *{KERNEL_FN_SUFFIX} body (scope: "
-                        f"{'.'.join(self.stack) or '<module>'}) — this "
-                        f"materialises (nt, T, T) in HBM"
-                    )
-            if name == "to_storage":
-                out.append(
-                    f"{path}:{node.lineno}: to_storage() in a kernel module "
-                    f"— kernels must consume tiles as stored"
-                )
+            name = _call_name(node)
+            if name:
+                out.append((name, node.lineno, tuple(self.stack)))
             self.generic_visit(node)
 
     Visitor().visit(tree)
+    return out
+
+
+def kernel_violations(path: pathlib.Path) -> list:
+    """Guards 1+2: unpack only inside *_kernel bodies; never densify."""
+    out = []
+    for name, lineno, stack in _walk_calls(path):
+        if name in DENSIFY_CALLS:
+            in_kernel_body = any(fn.endswith(KERNEL_FN_SUFFIX) for fn in stack)
+            if name == "dense_tiles" or not in_kernel_body:
+                out.append(
+                    f"{path}:{lineno}: {name} called "
+                    f"outside a *{KERNEL_FN_SUFFIX} body (scope: "
+                    f"{'.'.join(stack) or '<module>'}) — this "
+                    f"materialises (nt, T, T) in HBM"
+                )
+        if name == "to_storage":
+            out.append(
+                f"{path}:{lineno}: to_storage() in a kernel module "
+                f"— kernels must consume tiles as stored"
+            )
+    return out
+
+
+def dyngraph_violations(path: pathlib.Path) -> list:
+    """Guard 3: the delta path never densifies outside a *_oracle body."""
+    out = []
+    for name, lineno, stack in _walk_calls(path):
+        if name in DENSIFY_CALLS + ("to_storage",):
+            if any(fn.endswith(ORACLE_FN_SUFFIX) for fn in stack):
+                continue
+            out.append(
+                f"{path}:{lineno}: {name} called outside a "
+                f"*{ORACLE_FN_SUFFIX} body (scope: "
+                f"{'.'.join(stack) or '<module>'}) — the delta path must "
+                f"edit packed tiles as packed words, never densify"
+            )
     return out
 
 
@@ -74,17 +116,21 @@ def main() -> int:
     for path in sorted(KERNEL_DIR.glob("*.py")):
         if path.name in ORACLE_FILES:
             continue
-        problems += _violations(path)
+        problems += kernel_violations(path)
+    n_kernel = len(problems)
+    for path in sorted(DYNGRAPH_DIR.glob("*.py")):
+        problems += dyngraph_violations(path)
     for p in problems:
         print(p, file=sys.stderr)
     if problems:
         print(
-            f"\n{len(problems)} packed-storage guard violation(s): HBM must "
-            f"only ever see packed words outside the oracle/int8 path",
+            f"\n{len(problems)} packed-storage guard violation(s) "
+            f"({n_kernel} kernel, {len(problems) - n_kernel} dyngraph): HBM "
+            f"must only ever see packed words outside the oracle/int8 path",
             file=sys.stderr,
         )
         return 1
-    print("ci_guards: kernel packed-storage guard clean")
+    print("ci_guards: kernel + dyngraph packed-storage guards clean")
     return 0
 
 
