@@ -20,6 +20,7 @@ from typing import Optional
 PLACEMENTS = ("auto", "local", "sharded")
 STORAGES = ("auto", "int8", "bitpack")   # tile storage axis (DESIGN.md §11)
 REPAIRS = ("auto", "cold", "incremental")   # delta-repair policy (§12)
+FRONTIERS = ("auto", "dense", "bitwise")    # frontier-vector mode (§13)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +35,15 @@ class SolveOptions:
       lanes:      RHS lane count (128 on TPU; 8 keeps CPU cheap)
       skip_dma:   empty-C slabs also skip their HBM read
       max_rounds: convergence-loop bound
+      frontier:   frontier-vector mode (DESIGN.md §13) — 'dense' carries
+                  (n_padded,) bool cand/alive/in_mis vectors through the
+                  round loop; 'bitwise' carries (n_block_cols, W) uint32
+                  words end-to-end (popcount SpMV for phase ②, the
+                  priority-sorted clz / plane scan for phase ①, word logic
+                  for phase ③).  'auto' picks bitwise exactly when it is
+                  the fastest sound choice: a tiled engine, phase1='tiled',
+                  storage='bitpack', and not a batched (`solve_many`) run.
+                  Solutions are bit-identical in either mode.
 
     Preprocessing (the `Plan` build policy):
       tile_size:  BSR tile edge T, power of two ≥ 8; None = auto-T (the
@@ -54,7 +64,9 @@ class SolveOptions:
                         visible, in which case it takes the
                         `core.distributed` shard_map path.
       shard_threshold:  padded-vertex count at which `auto` shards
-      bitpack:          sharded path: gather uint8-packed frontiers
+      bitpack:          sharded path: all-gather frontiers as packed uint32
+                        words (`core.tiling.pack_frontier_words`) instead
+                        of raw bools
 
     Dynamic graphs (`Solver.update`, DESIGN.md §12):
       repair:  how an `EdgeDelta` update re-solves the patched graph —
@@ -85,6 +97,7 @@ class SolveOptions:
     lanes: int = 8
     skip_dma: bool = False
     max_rounds: int = 1024
+    frontier: str = "auto"
 
     tile_size: Optional[int] = None
     reorder: Optional[str] = None
@@ -113,6 +126,10 @@ class SolveOptions:
         if self.repair not in REPAIRS:
             raise ValueError(
                 f"unknown repair {self.repair!r}; valid: {REPAIRS}"
+            )
+        if self.frontier not in FRONTIERS:
+            raise ValueError(
+                f"unknown frontier {self.frontier!r}; valid: {FRONTIERS}"
             )
 
     @property

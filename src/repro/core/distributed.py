@@ -3,9 +3,10 @@
 Layout (DESIGN.md §5): each chip owns a contiguous slab of block-rows of the
 tiled adjacency matrix plus the matching slice of the state vectors.  Per
 round the only communication is the `all_gather` of the candidate / alive
-bit-vectors (optionally bit-packed 8×, DESIGN.md §6.4) — the distributed-Luby
-lower bound.  Everything else (phase ① tiled max, phase ② tiled SpMV, phase ③
-state update) is shard-local.
+bit-vectors (optionally packed 8× as uint32 frontier words via the one
+packing contract in `core.tiling`, DESIGN.md §6.4/§13) — the
+distributed-Luby lower bound.  Everything else (phase ① tiled max, phase ②
+tiled SpMV, phase ③ state update) is shard-local.
 
 The mesh axes are flattened into one logical partition axis, so the same code
 runs on (16,16) single-pod and (2,16,16) multi-pod meshes — the "pod" axis
@@ -25,7 +26,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.engine import block_col_flags, tile_neighbor_max, tile_spmv
 from repro.core.heuristics import Priorities
 from repro.core.spmv import _NEG
-from repro.core.tiling import BlockTiledGraph
+from repro.core.tiling import (
+    BlockTiledGraph,
+    pack_frontier_words,
+    unpack_frontier_words,
+)
 
 
 # --------------------------------------------------------------------------
@@ -104,22 +109,13 @@ def shard_tiled(tiled: BlockTiledGraph, n_shards: int) -> ShardedTiledGraph:
 
 
 # --------------------------------------------------------------------------
-# bit-packed frontier collectives (beyond-paper, DESIGN.md §6.4)
-# --------------------------------------------------------------------------
-
-def pack_bits(x: jnp.ndarray) -> jnp.ndarray:
-    """(8m,) bool -> (m,) uint8."""
-    b = x.reshape(-1, 8).astype(jnp.uint8)
-    weights = (1 << jnp.arange(8, dtype=jnp.uint8))
-    return (b * weights).sum(axis=1).astype(jnp.uint8)
-
-
-def unpack_bits(x: jnp.ndarray) -> jnp.ndarray:
-    """(m,) uint8 -> (8m,) bool."""
-    bits = (x[:, None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
-    return bits.reshape(-1).astype(bool)
-
-
+# bit-packed frontier collectives (beyond-paper, DESIGN.md §6.4): the gather
+# payload rides as the SAME (…, W) uint32 frontier words the bitwise round
+# engine uses — `core.tiling.pack_frontier_words` is the single packing
+# contract; this module no longer carries its own uint8 variant.  A shard's
+# local slice is rps·T vertices — an exact multiple of T, so the word layout
+# tiles cleanly across shards and `all_gather(tiled=True)` concatenates to
+# the global word vector.
 # --------------------------------------------------------------------------
 # shard-local tile operators: the engine layer's raw-array forms applied to
 # this shard's slab — local rows, GLOBAL columns.  SpMV needs no wrapper
@@ -174,10 +170,13 @@ def make_mis_step_fn(
     n_local = rps * T
 
     def gather_bool(x_local):
+        # the one sanctioned densify outside kernels/oracles on this path:
+        # the shard-local phases below are dense ops (tools/ci_guards.py
+        # allowlists gather_bool); only the WIRE payload is packed words.
         if cfg.bitpack:
-            packed = pack_bits(x_local)
+            packed = pack_frontier_words(x_local, T)
             g = jax.lax.all_gather(packed, axis, tiled=True)
-            return unpack_bits(g)
+            return unpack_frontier_words(g, T)
         return jax.lax.all_gather(x_local, axis, tiled=True)
 
     def body_fn(tiles, tile_rows, tile_cols, select, resolve):

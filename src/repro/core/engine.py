@@ -46,8 +46,15 @@ import numpy as np
 
 from repro.core.tiling import (
     BlockTiledGraph,
-    dense_tiles,
+    dense_tile_mask,
+    pack_frontier_bits,
+    pack_frontier_words,
+    pack_priority_planes,
     pack_vertex_vector,
+    sort_block_priorities,
+    sorted_frontier_words,
+    sorted_tile_bits,
+    tiles_as_words,
 )
 from repro.graphs.graph import Graph
 
@@ -75,7 +82,7 @@ def tile_spmv(
     contributes nothing on any lane).  Returns (n_block_rows*T, L) float32.
     """
     T = tile_size
-    tiles = dense_tiles(tiles, T)
+    tiles = dense_tile_mask(tiles, T)        # bool mask, no int8 intermediate
     blocks = rhs.reshape(-1, T, rhs.shape[-1])
     gathered = blocks[tile_cols]                             # (nt, T, L)
     if col_flags is not None:
@@ -97,12 +104,17 @@ def tile_neighbor_max(
     n_block_rows: int,
     tile_size: int,
 ) -> jnp.ndarray:
-    """Max_Np over the same BSR schedule (VPU work — max has no MXU form)."""
+    """Max_Np over the same BSR schedule (VPU work — max has no MXU form).
+
+    Storage dispatch goes through `dense_tile_mask`, not `dense_tiles`: the
+    packed form bit-extracts straight to the bool mask the `where` needs,
+    skipping the int8 materialisation that made bitpack LOSE to int8 here
+    (733 vs 673 µs at T=64 in the pre-fix BENCH_core.json)."""
     T = tile_size
-    tiles = dense_tiles(tiles, T)
+    mask = dense_tile_mask(tiles, T)
     gathered = pm.reshape(-1, T)[tile_cols]                  # (nt, T)
     # tile (T,T) row v, col u: edge v->u.  masked max over columns.
-    vals = jnp.where(tiles != 0, gathered[:, None, :], _NEG)  # (nt, T, T)
+    vals = jnp.where(mask, gathered[:, None, :], _NEG)       # (nt, T, T)
     tile_max = vals.max(axis=2)                              # (nt, T)
     out = jax.ops.segment_max(tile_max, tile_rows, num_segments=n_block_rows)
     return out.reshape(n_block_rows * T)
@@ -114,6 +126,167 @@ def block_col_flags(x: jnp.ndarray, tile_size: int) -> jnp.ndarray:
     The per-round metadata of the engine layer: a block-column is active iff
     any vertex in it carries a nonzero entry (the paper's empty-C test)."""
     return x.reshape(-1, tile_size).astype(bool).any(axis=1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# bitwise raw tile operators (DESIGN.md §13) — the packed-frontier round
+# body's substrate.  Frontiers are (n_block_cols, W) uint32 words; nothing
+# here densifies a frontier (tools/ci_guards.py).
+# --------------------------------------------------------------------------
+
+def tile_spmv_bits(
+    tiles_bits: jnp.ndarray,     # (nt, T, W) uint32, standard bit layout
+    tile_rows: jnp.ndarray,      # (nt,) int32, non-decreasing
+    tile_cols: jnp.ndarray,      # (nt,) int32
+    rhs_words: jnp.ndarray,      # (nbc, W) uint32 — packed candidate vector
+    n_block_rows: int,
+    tile_size: int,
+    *,
+    col_flags: jnp.ndarray | None = None,   # (nbc,) int32; None = all active
+) -> jnp.ndarray:
+    """② as pure word arithmetic: row v is hit iff popcount(tile_row_word &
+    cand_word) ≠ 0 for any word — `(a & c) != 0` per word, OR over words.
+    No f32 accumulator, no densify; returns (n_block_rows, W) packed hit
+    words.  Exactly `tile_spmv(...)[:, 0] > 0` (the paper's N_c > 0 test —
+    counts beyond 0/1 are only needed by lanes the pure-MIS round drops).
+
+    `col_flags` zeroes gated candidate words before the AND — the same
+    empty-C skip semantics as the dense path (a skipped column contributes
+    no hits)."""
+    gathered = rhs_words[tile_cols]                          # (nt, W)
+    if col_flags is not None:
+        gathered = gathered * col_flags[tile_cols][:, None].astype(jnp.uint32)
+    hit = jnp.any((tiles_bits & gathered[:, None, :]) != 0, axis=2)  # (nt, T)
+    acc = jax.ops.segment_max(
+        hit.astype(jnp.uint32), tile_rows, num_segments=n_block_rows
+    )
+    return pack_frontier_bits(acc, tile_size)                # (nbr, W)
+
+
+def tile_neighbor_max_bits(
+    tiles_sorted: jnp.ndarray,       # (nt, T, W) uint32, MSB-first slot order
+    tile_rows: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    p_sorted: jnp.ndarray,           # (nbc, T) int32, descending per block
+    mask_sorted_words: jnp.ndarray,  # (nbc, W) uint32, sorted-slot layout
+    n_block_rows: int,
+    tile_size: int,
+) -> jnp.ndarray:
+    """① Max_Np over packed words: the priority-plane scan collapsed to one
+    pass.  With each block-column's slots pre-sorted by descending priority
+    (`sort_block_priorities` / `sorted_tile_bits`, once per solve), "iterate
+    planes high→low, AND against the mask, fold" degenerates to "first set
+    slot of (tile_row & mask)" — one AND + count-leading-zeros per word,
+    then a gather from `p_sorted`.  Exact for any int32 priorities (the
+    sort carries signed values; no bit-plane sign bias needed).  Returns
+    (n_block_rows·T,) int32 values, `_NEG`-floored like the dense op."""
+    T = int(tile_size)
+    W = tiles_sorted.shape[-1]
+    m = tiles_sorted & mask_sorted_words[tile_cols][:, None, :]   # (nt, T, W)
+    first = jnp.full(m.shape[:2], jnp.int32(T), jnp.int32)        # T = none
+    for w in range(W):
+        word = m[..., w]
+        pw = jnp.where(
+            word != 0,
+            jnp.int32(w * 32) + jax.lax.clz(word).astype(jnp.int32),
+            jnp.int32(T),
+        )
+        first = jnp.minimum(first, pw)
+    ps_g = p_sorted[tile_cols]                                    # (nt, T)
+    idx = jnp.minimum(first, jnp.int32(T - 1))
+    val = jnp.take_along_axis(ps_g, idx, axis=1)
+    tile_max = jnp.where(first < T, val, jnp.int32(_NEG))
+    out = jax.ops.segment_max(tile_max, tile_rows, num_segments=n_block_rows)
+    return out.reshape(n_block_rows * T)
+
+
+class SortedPriorityTiles(NamedTuple):
+    """Per-priority-key setup artefact for the bitwise phase ①: the static
+    block-column sort of one priority vector plus the adjacency re-packed in
+    that slot order (built once per solve by `make_bitwise_context`)."""
+    order: jnp.ndarray      # (nbc, T) int32 — descending-priority column order
+    p_sorted: jnp.ndarray   # (nbc, T) int32 — priorities in slot order
+    tiles: jnp.ndarray      # (nt, T, W) uint32 — MSB-first sorted-slot layout
+
+
+class BitwiseContext(NamedTuple):
+    """Everything the packed-frontier round body precomputes per solve.
+
+    `tiles_bits` is the adjacency in standard word layout (phase ②);
+    `select`/`resolve` carry the sorted-priority structures for the clz
+    formulation of phase ①; `*_planes` are the explicit bit-plane stacks
+    ((n_bits, nbc, W)) the Pallas plane-scan kernel consumes — built only
+    when an engine asks for them (TPU runs), None otherwise."""
+    tiles_bits: jnp.ndarray
+    select: SortedPriorityTiles
+    resolve: Optional[SortedPriorityTiles]
+    select_planes: Optional[jnp.ndarray]
+    resolve_planes: Optional[jnp.ndarray]
+
+
+# H3 select keys are (q << 23) ≥ 0 with q ≤ 255 → 31 bits suffice; resolve
+# keys are negative (-deg·n - id) → full 32 signed planes.
+_SELECT_PLANE_BITS = 31
+_RESOLVE_PLANE_BITS = 32
+
+
+def make_bitwise_context(
+    tiled: BlockTiledGraph, pri, *, planes: bool = False
+) -> BitwiseContext:
+    """Build the per-solve bitwise structures from static priorities.
+
+    Priorities are fixed for the whole solve (only the alive/pending masks
+    change per round), so the argsort, the column-permuted adjacency repack
+    and the optional plane stacks are all one-time setup cost."""
+    T = tiled.tile_size
+    tiles_bits = tiles_as_words(tiled.tiles, T)
+
+    def _sorted_for(p):
+        order, p_sorted = sort_block_priorities(p, T)
+        tiles_sorted = sorted_tile_bits(tiled.tiles, tiled.tile_cols, order, T)
+        return SortedPriorityTiles(order, p_sorted, tiles_sorted)
+
+    select = _sorted_for(pri.select)
+    resolve = _sorted_for(pri.resolve) if pri.resolve is not None else None
+    select_planes = resolve_planes = None
+    if planes:
+        select_planes = pack_priority_planes(
+            pri.select, T, _SELECT_PLANE_BITS, signed=False
+        )
+        if pri.resolve is not None:
+            resolve_planes = pack_priority_planes(
+                pri.resolve, T, _RESOLVE_PLANE_BITS, signed=True
+            )
+    return BitwiseContext(tiles_bits, select, resolve, select_planes, resolve_planes)
+
+
+FRONTIERS = ("auto", "dense", "bitwise")
+
+
+def resolve_frontier(config, engine, *, storage: str, member_rounds: bool = False) -> str:
+    """Resolve `SolveOptions.frontier` to the concrete mode a run uses.
+
+    "auto" picks bitwise exactly when it is the fastest sound choice: a
+    tile-schedule engine (`supports_bitwise`), the tiled phase ① (the
+    segment phase ① would densify every round to reach the edge list),
+    bitpack storage (word-AND needs word tiles), and a scalar round counter
+    (per-member round vectors — the batched serving mode — need per-vertex
+    alive increments the packed state does not expose).  An explicit
+    "bitwise" on an engine that cannot honour it falls back to dense rather
+    than erroring — mode is a performance knob, never a semantics knob."""
+    mode = getattr(config, "frontier", "auto") or "auto"
+    if mode == "auto":
+        if (
+            engine.supports_bitwise
+            and not member_rounds
+            and getattr(config, "phase1", "tiled") == "tiled"
+            and storage == "bitpack"
+        ):
+            return "bitwise"
+        return "dense"
+    if mode == "bitwise" and (not engine.supports_bitwise or member_rounds):
+        return "dense"
+    return mode
 
 
 # --------------------------------------------------------------------------
@@ -147,6 +320,11 @@ class EngineContext:
     trailing slots are pinned inactive from round 0 — the empty-C skip never
     depends on the candidate vector reaching those slots first.  `None`
     (single-graph runs) means "all columns may carry candidates".
+
+    `frontier` is the RESOLVED mode ("dense" | "bitwise", never "auto" —
+    see `resolve_frontier`); when bitwise, `bits` holds the per-solve packed
+    structures and `MISRoundState.alive`/`in_mis` ride as (nbc, W) uint32
+    words through the whole round loop (DESIGN.md §13).
     """
     g: Graph
     tiled: BlockTiledGraph
@@ -154,6 +332,8 @@ class EngineContext:
                # phase1/skip_dma/max_rounds (repro.api.SolveOptions, or the
                # legacy TCMISConfig shim)
     col_gate: Optional[jnp.ndarray] = None
+    frontier: str = "dense"
+    bits: Optional[BitwiseContext] = None
 
 
 def round_increment(state: MISRoundState) -> jnp.ndarray:
@@ -181,6 +361,23 @@ def phase3_update(
     )
 
 
+def phase3_update_bits(
+    state: MISRoundState,
+    cand_words: jnp.ndarray,
+    hit_words: jnp.ndarray,
+    rnd_inc: Optional[jnp.ndarray] = None,
+) -> MISRoundState:
+    """③ on packed words — the same three rules, 32 vertices per op.  The
+    `N_c > 0` test is already folded into `hit_words` by the popcount SpMV,
+    so the update is pure word logic: `alive & ~cand & ~hit`, `in_mis |
+    cand`."""
+    return MISRoundState(
+        alive=state.alive & ~cand_words & ~hit_words,
+        in_mis=state.in_mis | cand_words,
+        rnd=state.rnd + (round_increment(state) if rnd_inc is None else rnd_inc),
+    )
+
+
 # --------------------------------------------------------------------------
 # the engine interface
 # --------------------------------------------------------------------------
@@ -192,10 +389,20 @@ class RoundEngine:
     `phase2_counts` (split engines) or `fused_step` (fused engines,
     `fused = True`).  `step` — the single round body every driver uses —
     is shared; `col_flags` is the per-round metadata hook.
+
+    Tile-schedule engines additionally advertise `supports_bitwise` and
+    implement the packed-frontier round body (`step_bits` et al., DESIGN.md
+    §13): state rides as (nbc, W) uint32 words, phase ② is the popcount
+    SpMV, phase ① the sorted-priority clz scan.  `step` dispatches on the
+    resolved `ctx.frontier`.
     """
 
     name: str = "abstract"
     fused: bool = False
+    supports_bitwise: bool = False
+    # wants the (n_bits, nbc, W) plane stacks built at setup — only the
+    # Pallas engines, whose bitwise phase ① can run the plane-scan kernel
+    plane_kernel_nbr_max: bool = False
 
     # -- phase ① ----------------------------------------------------------
     def _nbr_max(
@@ -261,10 +468,21 @@ class RoundEngine:
         """②+③ in one pass.  Returns (new_alive, mis_add) bool vectors."""
         raise NotImplementedError(f"{self.name} is a split engine")
 
+    # -- bitwise round body (packed-frontier engines only) -----------------
+    def step_bits(
+        self, ctx: EngineContext, pri, state: MISRoundState
+    ) -> MISRoundState:
+        raise NotImplementedError(
+            f"{self.name} has no packed-frontier round body "
+            f"(supports_bitwise={self.supports_bitwise})"
+        )
+
     # -- the round body (shared by tc_mis AND run_phases) ------------------
     def step(
         self, ctx: EngineContext, pri, state: MISRoundState
     ) -> MISRoundState:
+        if ctx.frontier == "bitwise":
+            return self.step_bits(ctx, pri, state)
         cand = self.phase1_candidates(ctx, pri, state.alive)
         flags = self.col_flags(ctx, cand, state.alive)
         inc = round_increment(state)
@@ -348,9 +566,22 @@ class SegmentEngine(RoundEngine):
         return pack_vertex_vector(n_c, ctx.tiled)
 
 
+def _segment_nbr_max_bits_oracle(ctx: EngineContext, p, mask_words) -> jnp.ndarray:
+    """Phase ① for bitwise runs that pin `phase1="segment"`: the edge-list
+    substrate has no word form, so the pending mask densifies here — the
+    sanctioned boundary (`_oracle` suffix, tools/ci_guards.py) between the
+    packed round body and the paper-faithful CC baseline."""
+    from repro.core.tiling import unpack_frontier_words
+
+    mask = unpack_frontier_words(mask_words, ctx.tiled.tile_size)
+    return _segment_nbr_max(ctx, p, mask)
+
+
 class _TiledEngine(RoundEngine):
     """Shared phase-① policy for tile-schedule engines: `cfg.phase1` picks
     the paper-faithful segment max or the beyond-paper tiled max."""
+
+    supports_bitwise = True
 
     def _tiled_nbr_max(self, ctx, p, mask) -> jnp.ndarray:
         t = ctx.tiled
@@ -363,6 +594,75 @@ class _TiledEngine(RoundEngine):
         if ctx.cfg.phase1 != "tiled":
             return _segment_nbr_max(ctx, p, mask)
         return self._tiled_nbr_max(ctx, p, mask)
+
+    # -- packed-frontier round body (DESIGN.md §13) ------------------------
+    def _nbr_max_bits(
+        self, ctx, st: SortedPriorityTiles, planes, mask_words
+    ) -> jnp.ndarray:
+        """Bitwise Max_Np: remap the mask words into `st`'s sorted-slot
+        layout (an O(n)-word repack inside the packing substrate), then the
+        clz scan.  `planes` is ignored here; the Pallas engine overrides to
+        run the plane-scan kernel when a plane stack was built."""
+        t = ctx.tiled
+        mask_sorted = sorted_frontier_words(mask_words, st.order, t.tile_size)
+        return tile_neighbor_max_bits(
+            st.tiles, t.tile_rows, t.tile_cols, st.p_sorted, mask_sorted,
+            t.n_block_rows, t.tile_size,
+        )
+
+    def phase1_candidates_bits(self, ctx, pri, alive_words) -> jnp.ndarray:
+        """① on packed frontiers.  Priorities stay dense (they are values,
+        not frontiers); the select/pending/candidate SETS stay packed.  The
+        padded-slot divergence between substrates (segment pads Max_Np with
+        0, tiled floors at _NEG) is erased by the `& alive_words` /
+        `& pending` guards — padded alive bits are always 0."""
+        T = ctx.tiled.tile_size
+        b = ctx.bits
+        if ctx.cfg.phase1 != "tiled":
+            max_np = _segment_nbr_max_bits_oracle(ctx, pri.select, alive_words)
+        else:
+            max_np = self._nbr_max_bits(ctx, b.select, b.select_planes, alive_words)
+        if pri.resolve is None:
+            return pack_frontier_words(pri.select > max_np, T) & alive_words
+        # H3: conflicts resolved on the pending set before C is finalised.
+        pending = pack_frontier_words(pri.select >= max_np, T) & alive_words
+        if ctx.cfg.phase1 != "tiled":
+            max_res = _segment_nbr_max_bits_oracle(ctx, pri.resolve, pending)
+        else:
+            max_res = self._nbr_max_bits(ctx, b.resolve, b.resolve_planes, pending)
+        return pack_frontier_words(pri.resolve > max_res, T) & pending
+
+    def col_flags_bits(self, ctx, cand_words) -> jnp.ndarray:
+        """Active block-column flags straight from the words — a column is
+        live iff any of its W candidate words is nonzero (no densify)."""
+        flags = (cand_words != 0).any(axis=1).astype(jnp.int32)
+        if ctx.col_gate is not None:
+            flags = flags * ctx.col_gate.astype(flags.dtype)
+        return flags
+
+    def phase2_hits(self, ctx, cand_words, alive_words, col_flags):
+        """② popcount SpMV → packed hit words.  Returns (nbc, W) uint32."""
+        raise NotImplementedError(f"{self.name} is a fused engine")
+
+    def fused_step_bits(self, ctx, cand_words, alive_words, col_flags):
+        """②+③ fused on words.  Returns (new_alive_words, mis_add_words)."""
+        raise NotImplementedError(f"{self.name} is a split engine")
+
+    def step_bits(self, ctx, pri, state: MISRoundState) -> MISRoundState:
+        cand_w = self.phase1_candidates_bits(ctx, pri, state.alive)
+        flags = self.col_flags_bits(ctx, cand_w)
+        inc = round_increment(state)   # scalar: bitwise excludes member_rounds
+        if self.fused:
+            new_alive, mis_add = self.fused_step_bits(
+                ctx, cand_w, state.alive, flags
+            )
+            return MISRoundState(
+                alive=new_alive,
+                in_mis=state.in_mis | mis_add,
+                rnd=state.rnd + inc,
+            )
+        hit_w = self.phase2_hits(ctx, cand_w, state.alive, flags)
+        return phase3_update_bits(state, cand_w, hit_w, inc)
 
 
 class TiledRefEngine(_TiledEngine):
@@ -379,11 +679,19 @@ class TiledRefEngine(_TiledEngine):
         )
         return out[:, 0]
 
+    def phase2_hits(self, ctx, cand_words, alive_words, col_flags):
+        t = ctx.tiled
+        return tile_spmv_bits(
+            ctx.bits.tiles_bits, t.tile_rows, t.tile_cols, cand_words,
+            t.n_block_rows, t.tile_size, col_flags=col_flags,
+        )
+
 
 class TiledPallasEngine(_TiledEngine):
     """Phase ② on the Pallas SpMV kernel; live empty-C skip via col_flags."""
 
     name = "tiled_pallas"
+    plane_kernel_nbr_max = True
 
     def _tiled_nbr_max(self, ctx, p, mask):
         from repro.kernels.ops import tc_neighbor_max
@@ -398,6 +706,25 @@ class TiledPallasEngine(_TiledEngine):
             col_flags=col_flags, skip_dma=ctx.cfg.skip_dma,
         )
         return out[:, 0]
+
+    def _nbr_max_bits(self, ctx, st, planes, mask_words):
+        # The plane-scan kernel runs only when a plane stack was built (real
+        # TPU — `make_bitwise_context(planes=True)`); otherwise the clz jnp
+        # form, which is the same scan collapsed (bit-identical either way).
+        if planes is None:
+            return super()._nbr_max_bits(ctx, st, planes, mask_words)
+        from repro.kernels.ops import tc_neighbor_max_bits
+
+        signed = planes.shape[0] == _RESOLVE_PLANE_BITS
+        return tc_neighbor_max_bits(ctx.tiled, planes, mask_words, signed=signed)
+
+    def phase2_hits(self, ctx, cand_words, alive_words, col_flags):
+        from repro.kernels.ops import tc_spmv_bits
+
+        return tc_spmv_bits(
+            ctx.tiled, cand_words, tiles_words=ctx.bits.tiles_bits,
+            col_flags=col_flags, skip_dma=ctx.cfg.skip_dma,
+        )
 
 
 class FusedPallasEngine(TiledPallasEngine):
@@ -415,6 +742,16 @@ class FusedPallasEngine(TiledPallasEngine):
 
         _, new_alive, mis_add = tc_spmv_fused(
             ctx.tiled, self._pack_rhs(ctx, cand, alive), cand, alive,
+            col_flags=col_flags, skip_dma=ctx.cfg.skip_dma,
+        )
+        return new_alive, mis_add
+
+    def fused_step_bits(self, ctx, cand_words, alive_words, col_flags):
+        from repro.kernels.ops import tc_spmv_fused_bits
+
+        _, new_alive, mis_add = tc_spmv_fused_bits(
+            ctx.tiled, cand_words, alive_words,
+            tiles_words=ctx.bits.tiles_bits,
             col_flags=col_flags, skip_dma=ctx.cfg.skip_dma,
         )
         return new_alive, mis_add

@@ -39,13 +39,21 @@ from repro.core.engine import (
     EngineContext,
     MISRoundState,
     get_engine,
+    make_bitwise_context,
     phase3_update,
+    phase3_update_bits,
+    resolve_frontier,
     round_increment,
 )
 from repro.core.heuristics import Priorities, make_priorities
 from repro.core.luby import MISResult
 from repro.core.spmv import _NEG
-from repro.core.tiling import BlockTiledGraph, pack_vertex_vector
+from repro.core.tiling import (
+    BlockTiledGraph,
+    pack_frontier_words,
+    pack_vertex_vector,
+    unpack_frontier_words,
+)
 from repro.graphs.graph import Graph
 
 # back-compat alias: the round state now lives with the engine layer
@@ -64,6 +72,7 @@ class TCMISConfig:
     phase1: str = "segment"      # segment (paper-faithful) | tiled (beyond-paper)
     skip_dma: bool = False       # empty-C slabs also skip their HBM read
     max_rounds: int = 1024
+    frontier: str = "auto"       # auto | dense | bitwise (DESIGN.md §13)
 
 
 def _pad_priorities(pri: Priorities, tiled: BlockTiledGraph) -> Priorities:
@@ -108,36 +117,67 @@ def _setup(
     MIS set with a prior solution so the convergence loop only works the
     dirty frontier the caller left alive.  Callers guarantee `in_mis0` is
     independent in `g` and disjoint from `alive0` — the engine preserves
-    both invariants but never re-checks them.
+    both invariants but never re-checks them.  In bitwise runs `alive0`/
+    `in_mis0` may arrive already packed as (nbc, W) uint32 words (the repair
+    path hands its warm state over without densifying) — detected by
+    shape/dtype.
     """
     engine = get_engine(config.backend)
-    ctx = EngineContext(g=g, tiled=tiled, cfg=config, col_gate=col_gate)
     if priorities is None:
         priorities = make_priorities(config.heuristic, key, g.n_nodes, g.degrees())
     pri = _pad_priorities(priorities, tiled)
+    frontier = resolve_frontier(
+        config, engine, storage=tiled.storage, member_rounds=member_rounds
+    )
+    bits = None
+    if frontier == "bitwise":
+        # plane stacks only where the plane-scan kernel actually runs (real
+        # TPU); everywhere else the clz formulation needs no planes.
+        planes = engine.plane_kernel_nbr_max and jax.default_backend() == "tpu"
+        bits = make_bitwise_context(tiled, pri, planes=planes)
+    ctx = EngineContext(
+        g=g, tiled=tiled, cfg=config, col_gate=col_gate,
+        frontier=frontier, bits=bits,
+    )
     if alive0 is None:
         alive0 = jnp.ones((g.n_nodes,), dtype=bool)
+
+    def as_state_vec(x):
+        """Vertex mask → the state representation of this run: (n_padded,)
+        bool dense, or (nbc, W) uint32 words when the frontier is bitwise.
+        Already-packed inputs pass through."""
+        if getattr(x, "ndim", 0) == 2 and x.dtype == jnp.uint32:
+            return x
+        padded = pack_vertex_vector(x.astype(bool), tiled)
+        if frontier == "bitwise":
+            return pack_frontier_words(padded, tiled.tile_size)
+        return padded
+
     rnd0 = (
         jnp.zeros((tiled.n_padded,), dtype=jnp.int32)
         if member_rounds
         else jnp.int32(0)
     )
+    zero_mis = jnp.zeros((tiled.n_padded,), dtype=bool)
     state0 = MISRoundState(
-        alive=pack_vertex_vector(alive0.astype(bool), tiled),
-        in_mis=(
-            jnp.zeros((tiled.n_padded,), dtype=bool)
-            if in_mis0 is None
-            else pack_vertex_vector(in_mis0.astype(bool), tiled)
-        ),
+        alive=as_state_vec(alive0),
+        in_mis=as_state_vec(zero_mis if in_mis0 is None else in_mis0),
         rnd=rnd0,
     )
     return engine, ctx, pri, state0
 
 
-def _result(final: MISRoundState, g: Graph) -> MISResult:
+def _result(final: MISRoundState, g: Graph, tiled: BlockTiledGraph) -> MISResult:
+    """Run epilogue — and, for bitwise runs, THE single sanctioned unpack
+    site on the solve path: packed `in_mis` words densify here, after the
+    convergence loop, never inside it (tools/ci_guards.py allowlists this
+    function by name)."""
+    in_mis = final.in_mis
+    if getattr(in_mis, "ndim", 0) == 2 and in_mis.dtype == jnp.uint32:
+        in_mis = unpack_frontier_words(in_mis, tiled.tile_size)
     rounds = final.rnd[: g.n_nodes] if getattr(final.rnd, "ndim", 0) else final.rnd
     return MISResult(
-        in_mis=final.in_mis[: g.n_nodes],
+        in_mis=in_mis[: g.n_nodes],
         rounds=rounds,
         converged=~jnp.any(final.alive),
     )
@@ -177,7 +217,7 @@ def _tc_mis_impl(
     final = jax.lax.while_loop(
         cond, lambda s: engine.step(ctx, pri, s), state0
     )
-    return _result(final, g)
+    return _result(final, g, tiled)
 
 
 # --------------------------------------------------------------------------
@@ -208,25 +248,47 @@ def _run_phases_impl(
         g, tiled, key, config, priorities, alive0, col_gate, member_rounds
     )
 
-    p1 = jax.jit(lambda alive: engine.phase1_candidates(ctx, pri, alive))
-    if engine.fused:
-        p2 = jax.jit(
-            lambda cand, alive: engine.fused_step(
-                ctx, cand, alive, engine.col_flags(ctx, cand, alive)
+    if ctx.frontier == "bitwise":
+        # the packed-frontier round body, split at the same phase seams
+        p1 = jax.jit(lambda alive: engine.phase1_candidates_bits(ctx, pri, alive))
+        if engine.fused:
+            p2 = jax.jit(
+                lambda cand, alive: engine.fused_step_bits(
+                    ctx, cand, alive, engine.col_flags_bits(ctx, cand)
+                )
             )
-        )
-        p3 = jax.jit(
-            lambda state, out, inc: MISRoundState(
-                alive=out[0], in_mis=state.in_mis | out[1], rnd=state.rnd + inc
+            p3 = jax.jit(
+                lambda state, out, inc: MISRoundState(
+                    alive=out[0], in_mis=state.in_mis | out[1], rnd=state.rnd + inc
+                )
             )
-        )
+        else:
+            p2 = jax.jit(
+                lambda cand, alive: engine.phase2_hits(
+                    ctx, cand, alive, engine.col_flags_bits(ctx, cand)
+                )
+            )
+            p3 = jax.jit(phase3_update_bits)
     else:
-        p2 = jax.jit(
-            lambda cand, alive: engine.phase2_counts(
-                ctx, cand, alive, engine.col_flags(ctx, cand, alive)
+        p1 = jax.jit(lambda alive: engine.phase1_candidates(ctx, pri, alive))
+        if engine.fused:
+            p2 = jax.jit(
+                lambda cand, alive: engine.fused_step(
+                    ctx, cand, alive, engine.col_flags(ctx, cand, alive)
+                )
             )
-        )
-        p3 = jax.jit(phase3_update)
+            p3 = jax.jit(
+                lambda state, out, inc: MISRoundState(
+                    alive=out[0], in_mis=state.in_mis | out[1], rnd=state.rnd + inc
+                )
+            )
+        else:
+            p2 = jax.jit(
+                lambda cand, alive: engine.phase2_counts(
+                    ctx, cand, alive, engine.col_flags(ctx, cand, alive)
+                )
+            )
+            p3 = jax.jit(phase3_update)
 
     def advance(state, cand, out):
         inc = round_increment(state)
@@ -257,11 +319,9 @@ def _run_phases_impl(
         times["phase3"] += t3 - t2
         rounds += 1
     times["rounds"] = rounds
-    result = MISResult(
-        in_mis=state.in_mis[: g.n_nodes],
-        rounds=state.rnd[: g.n_nodes] if member_rounds else jnp.int32(rounds),
-        converged=~jnp.any(state.alive),
-    )
+    result = _result(state, g, tiled)
+    if not member_rounds:
+        result = result._replace(rounds=jnp.int32(rounds))
     return result, times
 
 

@@ -79,6 +79,25 @@ def unpack_tile_bits(packed: jnp.ndarray, tile_size: int) -> jnp.ndarray:
     return full[..., : int(tile_size)].astype(jnp.int8)
 
 
+def unpack_tile_mask(packed: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """(..., T, W) uint32 -> (..., T, T) bool — `unpack_tile_bits` without the
+    int8 materialisation.  Consumers that only need an edge *mask* (the
+    neighbour-max `where`, the SpMV 0/1 upcast) should use this form: it
+    skips one full elementwise pass over the dense tile (the int8 cast) —
+    the pass that made the packed neighbour-max slower than int8 at T=64.
+    Same
+    `broadcasted_iota` construction, so it lowers inside Pallas kernel
+    bodies (restricted to them by tools/ci_guards.py, like the int8 form).
+    """
+    W = packed.shape[-1]
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint32, packed.shape + (_BITS,), len(packed.shape)
+    )
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    full = bits.reshape(packed.shape[:-1] + (W * _BITS,))
+    return full[..., : int(tile_size)] != 0
+
+
 def dense_tiles(tiles: jnp.ndarray, tile_size: int) -> jnp.ndarray:
     """Storage dispatch for ORACLE paths (jnp engine ops, `kernels/ref.py`):
     packed uint32 tiles densify under jit, int8 tiles pass through.  The
@@ -87,6 +106,26 @@ def dense_tiles(tiles: jnp.ndarray, tile_size: int) -> jnp.ndarray:
     if tiles.dtype == jnp.uint32:
         return unpack_tile_bits(tiles, tile_size)
     return tiles
+
+
+def dense_tile_mask(tiles: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """`dense_tiles` counterpart yielding a bool edge MASK: packed uint32
+    tiles bit-extract straight to bool (no int8 intermediate), int8 tiles
+    compare against zero.  The jnp tile operators use this form; kernels
+    never may (tools/ci_guards.py — it materialises (nt, T, T) in HBM)."""
+    if tiles.dtype == jnp.uint32:
+        return unpack_tile_mask(tiles, tile_size)
+    return tiles != 0
+
+
+def tiles_as_words(tiles: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """Tiles in the packed-word form, whatever the storage: bitpack tiles
+    pass through, int8 tiles pack (jit-safe — the bitwise frontier path
+    needs packed words even when the PLAN stores int8).  Packing is safe
+    anywhere; it is the *unpack* direction the CI guards restrict."""
+    if tiles.dtype == jnp.uint32:
+        return tiles
+    return pack_frontier_bits(tiles, tile_size)
 
 
 def padded_tile_count(n_real: int, pad_tiles_to: int | None = None) -> int:
@@ -313,6 +352,153 @@ def pack_vertex_vector(x: jnp.ndarray, tiled: BlockTiledGraph) -> jnp.ndarray:
 
 def unpack_vertex_vector(x: jnp.ndarray, tiled: BlockTiledGraph) -> jnp.ndarray:
     return x[: tiled.n_nodes]
+
+
+# --------------------------------------------------------------------------
+# bit-packed frontier vectors (DESIGN.md §13) — THE single site of the
+# frontier packing contract.  `cand`/`alive`/`in_mis` ride the bitwise round
+# body as (n_block_cols, W) uint32 words; `core.distributed` packs its
+# all-gather frontiers through the same helpers.  Unpacking a frontier is
+# restricted to kernel bodies / oracles / this module by tools/ci_guards.py.
+# --------------------------------------------------------------------------
+
+def pack_frontier_bits(bits: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """(..., T) truthy -> (..., W) uint32, bit j of word w = slot 32·w + j.
+
+    The SAME bit layout as `pack_tile_bits` (so a packed tile row ANDs
+    directly against a packed frontier word), but jit- and kernel-safe:
+    `broadcasted_iota` only, no host numpy — the kernels use it to emit
+    packed result bits and the engine uses it on candidate masks each round.
+    """
+    T = int(tile_size)
+    W = packed_words(T)
+    shape = bits.shape[:-1] + (W, T)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 1)
+    w = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 2)
+    weight = jnp.where(
+        (c >> 5) == w, jnp.uint32(1) << (c & jnp.uint32(31)), jnp.uint32(0)
+    )
+    vals = jnp.where(bits[..., None, :] != 0, weight, jnp.uint32(0))
+    # disjoint bit positions ⇒ the OR-reduce is an overflow-free sum
+    return jnp.sum(vals, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_frontier_bits(words: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """(..., W) uint32 -> (..., T) bool — inverse of `pack_frontier_bits`.
+
+    A frontier DENSIFY: allowed only inside `*_kernel` bodies, `kernels/
+    ref.py`, `*_oracle` functions, the extraction/collective sites named in
+    tools/ci_guards.py, and this module (the packing substrate itself)."""
+    T = int(tile_size)
+    W = words.shape[-1]
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint32, words.shape + (_BITS,), len(words.shape)
+    )
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (W * _BITS,))[..., :T] != 0
+
+
+def pack_frontier_words(x: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """(n_blocks·T,) truthy vertex vector -> (n_blocks, W) uint32 words."""
+    return pack_frontier_bits(x.reshape(-1, int(tile_size)), tile_size)
+
+
+def unpack_frontier_words(words: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """(n_blocks, W) uint32 -> (n_blocks·T,) bool (same guard as
+    `unpack_frontier_bits` — this is the extraction-time densify)."""
+    return unpack_frontier_bits(words, tile_size).reshape(-1)
+
+
+# -- priority-sorted bit order (the bitwise neighbour-max substrate) --------
+#
+# The bitwise Max_Np is a priority-plane scan collapsed to one pass: sort
+# each block-column's slots by descending priority ONCE per solve, pack the
+# tiles in that slot order with the MSB-first layout below, and per round the
+# scan "iterate planes high→low, AND, fold" degenerates to "index of the
+# first set bit" — one AND + count-leading-zeros per word (DESIGN.md §13).
+
+def sort_block_priorities(
+    p: jnp.ndarray, tile_size: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(n_blocks·T,) int32 -> (order, p_sorted), both (n_blocks, T).
+
+    `order[b, s]` is the in-block column index occupying descending-priority
+    slot `s` of block `b`; `p_sorted` the priorities in slot order.  Exact
+    for ANY int32 priorities (negative resolve keys included) — the sort
+    carries the values, no bit-plane sign handling needed."""
+    blocks = p.reshape(-1, int(tile_size))
+    order = jnp.argsort(-blocks, axis=1).astype(jnp.int32)
+    return order, jnp.take_along_axis(blocks, order, axis=1)
+
+
+def pack_sorted_frontier_bits(
+    bits_sorted: jnp.ndarray, tile_size: int
+) -> jnp.ndarray:
+    """(..., T) truthy in sorted-slot order -> (..., W) uint32 with slot s at
+    bit 31 − (s mod 32) of word s // 32 — MSB-first, so `clz(word)` IS the
+    first occupied slot within the word."""
+    T = int(tile_size)
+    W = packed_words(T)
+    shape = bits_sorted.shape[:-1] + (W, T)
+    s = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 1)
+    w = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 2)
+    weight = jnp.where(
+        (s >> 5) == w,
+        jnp.uint32(1) << (jnp.uint32(31) - (s & jnp.uint32(31))),
+        jnp.uint32(0),
+    )
+    vals = jnp.where(bits_sorted[..., None, :] != 0, weight, jnp.uint32(0))
+    return jnp.sum(vals, axis=-1, dtype=jnp.uint32)
+
+
+def sorted_tile_bits(
+    tiles: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    order: jnp.ndarray,
+    tile_size: int,
+) -> jnp.ndarray:
+    """Tiles (either storage) column-permuted into each block-column's
+    priority-slot order and packed MSB-first: (nt, T, W) uint32.
+
+    Setup-time, once per solve (the order is static for a run's priorities);
+    the transient dense mask lives only inside this jit scope."""
+    mask = dense_tile_mask(tiles, tile_size)                 # (nt, T, T)
+    g_order = order[tile_cols]                               # (nt, T)
+    permuted = jnp.take_along_axis(mask, g_order[:, None, :], axis=2)
+    return pack_sorted_frontier_bits(permuted, tile_size)
+
+
+def sorted_frontier_words(
+    words: jnp.ndarray, order: jnp.ndarray, tile_size: int
+) -> jnp.ndarray:
+    """Standard-layout frontier words -> sorted-slot words, per block column.
+
+    The per-round word remap feeding the clz scan: an O(n/32 → n) bit
+    permutation (lane shuffles on TPU, ~1/10 the cost of the scan itself).
+    The bit-level round-trip lives HERE, in the packing substrate — hot-path
+    modules never touch frontier bits (tools/ci_guards.py)."""
+    bits = unpack_frontier_bits(words, tile_size)            # (nbc, T)
+    bits_sorted = jnp.take_along_axis(bits, order, axis=1)
+    return pack_sorted_frontier_bits(bits_sorted, tile_size)
+
+
+def pack_priority_planes(
+    p: jnp.ndarray, tile_size: int, n_bits: int, *, signed: bool = False
+) -> jnp.ndarray:
+    """(n_blocks·T,) int32 -> (n_bits, n_blocks, W) uint32 bit-planes in the
+    STANDARD frontier layout — the Pallas plane-scan kernel's input
+    (`kernels.tc_neighbor_max`).  `signed` applies the order-preserving
+    bias (bitcast ^ 0x80000000) so two's-complement keys scan correctly;
+    the kernel un-biases on output."""
+    u = jax.lax.bitcast_convert_type(p.astype(jnp.int32), jnp.uint32)
+    if signed:
+        u = u ^ jnp.uint32(0x80000000)
+    blocks = u.reshape(-1, int(tile_size))
+    planes = [
+        pack_frontier_bits((blocks >> b) & jnp.uint32(1), tile_size)
+        for b in range(int(n_bits))
+    ]
+    return jnp.stack(planes)
 
 
 def tile_stats(tiled: BlockTiledGraph) -> dict:

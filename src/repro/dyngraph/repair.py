@@ -43,11 +43,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import SegmentEngine, TiledPallasEngine, get_engine, tile_spmv
+from repro.core.engine import (
+    SegmentEngine,
+    TiledPallasEngine,
+    get_engine,
+    resolve_frontier,
+    tile_spmv,
+    tile_spmv_bits,
+)
 from repro.core.heuristics import Priorities
 from repro.core.luby import MISResult
 from repro.core.tc_mis import _tc_mis_impl
-from repro.core.tiling import BlockTiledGraph, pack_vertex_vector
+from repro.core.tiling import (
+    BlockTiledGraph,
+    pack_frontier_words,
+    pack_vertex_vector,
+    tiles_as_words,
+)
 from repro.graphs.graph import Graph
 
 
@@ -89,6 +101,26 @@ def _covered(config, g: Graph, tiled: BlockTiledGraph, in_mis0) -> jnp.ndarray:
     )[:n, 0] > 0
 
 
+def _covered_bits(config, engine, tiled: BlockTiledGraph, in_mis_words) -> jnp.ndarray:
+    """(nbc, W) uint32 — the packed form of `_covered`: hit words of the
+    seed-set SpMV, on the engine's own bitwise phase-② substrate.  Only
+    tile-schedule engines reach here (`resolve_frontier` never says bitwise
+    for the segment engine)."""
+    if isinstance(engine, TiledPallasEngine):   # incl. the fused subclass
+        from repro.kernels.ops import tc_spmv_bits
+
+        return tc_spmv_bits(
+            tiled, in_mis_words,
+            tiles_words=tiles_as_words(tiled.tiles, tiled.tile_size),
+            skip_dma=config.skip_dma,
+        )
+    return tile_spmv_bits(
+        tiles_as_words(tiled.tiles, tiled.tile_size),
+        tiled.tile_rows, tiled.tile_cols, in_mis_words,
+        tiled.n_block_rows, tiled.tile_size,
+    )
+
+
 def warm_state(
     g: Graph,
     tiled: BlockTiledGraph,
@@ -96,15 +128,31 @@ def warm_state(
     prior_in_mis: jnp.ndarray,   # (n_nodes,) bool, plan ids, valid pre-delta MIS
     dirty: jnp.ndarray,          # (n_nodes,) bool — delta endpoints
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(alive₀, in_mis₀) for the warm re-entry, both (n_nodes,) bool.
+    """(alive₀, in_mis₀) for the warm re-entry.
+
+    Dense runs get (n_nodes,) bool vectors; bitwise runs (the resolved
+    frontier of this config × storage — same policy `_setup` applies) get
+    (nbc, W) uint32 word pairs that `_tc_mis_impl` accepts pre-packed, so
+    the warm state never round-trips through a dense frontier on its way
+    into the packed round loop.
 
     Pure jnp/Pallas over the PATCHED representation, so the Solver jits it
     together with the convergence loop — warm-start construction costs one
-    SpMV (`_covered`, on the configured engine's substrate) inside the same
-    compiled program.
+    SpMV (`_covered`/`_covered_bits`, on the configured engine's substrate)
+    inside the same compiled program.
     """
     n = tiled.n_nodes
     in_mis0 = prior_in_mis[:n].astype(bool) & ~dirty[:n].astype(bool)
+    engine = get_engine(config.backend)
+    if resolve_frontier(config, engine, storage=tiled.storage) == "bitwise":
+        T = tiled.tile_size
+        in_mis_w = pack_frontier_words(pack_vertex_vector(in_mis0, tiled), T)
+        hit_w = _covered_bits(config, engine, tiled, in_mis_w)
+        # ~in_mis_w/~hit_w set the PADDING bits too — mask with the real-
+        # vertex words or dead padding slots would wake up as alive.
+        real_w = pack_frontier_words(jnp.arange(tiled.n_padded) < n, T)
+        alive_w = real_w & ~in_mis_w & ~hit_w
+        return alive_w, in_mis_w
     alive0 = ~in_mis0 & ~_covered(config, g, tiled, in_mis0)
     return alive0, in_mis0
 

@@ -124,3 +124,106 @@ def tc_spmv_fused(
     mis_add_b = jnp.where(covered, mis_add != 0, cand)
     n_c = jnp.where(covered[:, None], n_c, 0.0)
     return n_c, new_alive_b, mis_add_b
+
+
+# ---------------------------------------------------------------------------
+# bitwise frontier wrappers (DESIGN.md §13): packed (nbc, W) uint32 words in,
+# packed words out.  Block-rows with no stored tiles never enter the kernel
+# grid, so each wrapper patches them from the trivial rule — same contract as
+# the dense `tc_spmv_fused` above, word-wise.
+# ---------------------------------------------------------------------------
+
+def _covered_block_rows(tiled: BlockTiledGraph) -> jnp.ndarray:
+    """(n_block_rows,) bool — block-rows owning at least one stored tile."""
+    return jnp.zeros((tiled.n_block_rows,), bool).at[
+        tiled.tile_rows[: max(tiled.n_tiles, 1)]
+    ].set(tiled.n_tiles > 0)
+
+
+def _tiles_words(tiled: BlockTiledGraph, tiles_words) -> jnp.ndarray:
+    if tiles_words is not None:
+        return tiles_words
+    from repro.core.tiling import tiles_as_words
+
+    return tiles_as_words(tiled.tiles, tiled.tile_size)
+
+
+def tc_spmv_bits(
+    tiled: BlockTiledGraph,
+    rhs_words: jnp.ndarray,      # (nbc, W) uint32 — packed candidate vector
+    *,
+    tiles_words: jnp.ndarray | None = None,   # precomputed word tiles
+    col_flags: jnp.ndarray | None = None,
+    interpret: Optional[bool] = None,
+    skip_dma: bool = False,
+) -> jnp.ndarray:
+    """Phase ② on packed words: hit = (A × C) > 0.  (nbr, W) uint32 out.
+
+    Pass `tiles_words` (from `tiling.tiles_as_words`, cached per solve in
+    the engine's BitwiseContext) to avoid re-deriving it per call."""
+    from repro.kernels.tc_spmv import tc_spmv_bits_pallas
+
+    hit = tc_spmv_bits_pallas(
+        _tiles_words(tiled, tiles_words),
+        tiled.tile_rows, tiled.tile_cols, rhs_words, tiled.n_block_rows,
+        col_flags=col_flags,
+        interpret=_auto_interpret(interpret),
+        skip_dma=skip_dma,
+    )
+    # uncovered block-rows have no neighbours ⇒ no hits (word 0)
+    return jnp.where(_covered_block_rows(tiled)[:, None], hit, jnp.uint32(0))
+
+
+def tc_neighbor_max_bits(
+    tiled: BlockTiledGraph,
+    planes: jnp.ndarray,         # (n_bits, nbc, W) uint32 priority planes
+    mask_words: jnp.ndarray,     # (nbc, W) uint32 packed mask
+    *,
+    tiles_words: jnp.ndarray | None = None,
+    signed: bool = False,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Phase ① on packed words: the priority-plane scan kernel.
+
+    Uncovered block-rows are patched to int32 min — the fill value
+    `jax.ops.segment_max` gives rows no tile ever visits, so the jnp clz
+    formulation and this kernel stay bit-identical everywhere."""
+    from repro.kernels.tc_neighbor_max import tc_neighbor_max_bits_pallas
+
+    out = tc_neighbor_max_bits_pallas(
+        _tiles_words(tiled, tiles_words),
+        tiled.tile_rows, tiled.tile_cols, planes, mask_words,
+        tiled.n_block_rows,
+        signed=signed,
+        interpret=_auto_interpret(interpret),
+    )
+    covered = jnp.repeat(_covered_block_rows(tiled), tiled.tile_size)
+    return jnp.where(covered, out, jnp.iinfo(jnp.int32).min)
+
+
+def tc_spmv_fused_bits(
+    tiled: BlockTiledGraph,
+    cand_words: jnp.ndarray,     # (nbc, W) uint32
+    alive_words: jnp.ndarray,    # (nbr, W) uint32
+    *,
+    tiles_words: jnp.ndarray | None = None,
+    col_flags: jnp.ndarray | None = None,
+    interpret: Optional[bool] = None,
+    skip_dma: bool = False,
+):
+    """Fused ②+③ on packed words: (hit, new_alive, mis_add) word arrays."""
+    from repro.kernels.tc_spmv import tc_spmv_fused_bits_pallas
+
+    hit, new_alive, mis_add = tc_spmv_fused_bits_pallas(
+        _tiles_words(tiled, tiles_words),
+        tiled.tile_rows, tiled.tile_cols, cand_words, alive_words,
+        tiled.n_block_rows,
+        col_flags=col_flags,
+        interpret=_auto_interpret(interpret),
+        skip_dma=skip_dma,
+    )
+    covered = _covered_block_rows(tiled)[:, None]
+    hit = jnp.where(covered, hit, jnp.uint32(0))
+    new_alive = jnp.where(covered, new_alive, alive_words & ~cand_words)
+    mis_add = jnp.where(covered, mis_add, cand_words)
+    return hit, new_alive, mis_add

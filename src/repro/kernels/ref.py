@@ -5,6 +5,10 @@ are obviously correct and serve as the numerical ground truth for the
 shape/dtype sweeps in tests/test_kernels_*.py.  Bit-packed uint32 tiles are
 densified up front (this IS the oracle/int8 path — the one place a full
 (nt, T, T) unpack is allowed; the Pallas kernels unpack per-tile in VMEM).
+The bitwise-frontier oracles likewise densify packed frontier words and
+route through the dense oracles — ref.py is the sanctioned densifying
+reference (tools/ci_guards.py excludes it), which is exactly what makes it
+a trustworthy equivalence target for the packed kernels.
 """
 from __future__ import annotations
 
@@ -12,7 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tiling import dense_tiles
+from repro.core.tiling import (
+    dense_tiles,
+    pack_frontier_words,
+    unpack_frontier_bits,
+    unpack_frontier_words,
+)
 
 _NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
 
@@ -54,6 +63,46 @@ def tc_neighbor_max_ref(
     tile_max = vals.max(axis=2)                              # (nt, T)
     out = jax.ops.segment_max(tile_max, tile_rows, num_segments=n_block_rows)
     return out.reshape(n_block_rows * T)
+
+
+def tc_spmv_bits_ref(
+    tiles: jnp.ndarray,
+    tile_rows: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    rhs_words: jnp.ndarray,      # (nbc, W) uint32
+    n_block_rows: int,
+    *,
+    col_flags: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Oracle for tc_spmv_bits_pallas: densify the candidate words, run the
+    dense SpMV oracle on lane 0, threshold, re-pack.  (n_block_rows, W)."""
+    nt, T, _ = tiles.shape
+    cand = unpack_frontier_words(rhs_words, T)
+    if col_flags is not None:
+        cand = cand & (jnp.repeat(col_flags, T) != 0)
+    out = tc_spmv_ref(
+        tiles, tile_rows, tile_cols,
+        cand.astype(jnp.float32)[:, None], n_block_rows,
+    )
+    return pack_frontier_words(out[:, 0] > 0, T)
+
+
+def tc_neighbor_max_bits_ref(
+    tiles: jnp.ndarray,
+    tile_rows: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    p: jnp.ndarray,              # (nbc*T,) int32 raw priorities
+    mask_words: jnp.ndarray,     # (nbc, W) uint32 packed mask
+    n_block_rows: int,
+) -> jnp.ndarray:
+    """Oracle for tc_neighbor_max_bits_pallas / tile_neighbor_max_bits:
+    densify the mask words, mask the priorities, run the dense max oracle.
+    Matches the bitwise ops' uncovered-row fill (int32 min from
+    segment_max), not the interpret-mode kernel's uninitialised blocks."""
+    T = tiles.shape[1]
+    mask = unpack_frontier_bits(mask_words, T).reshape(-1)
+    pm = jnp.where(mask, p, _NEG)
+    return tc_neighbor_max_ref(tiles, tile_rows, tile_cols, pm, n_block_rows)
 
 
 def embedding_bag_ref(

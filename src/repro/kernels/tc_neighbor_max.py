@@ -14,8 +14,17 @@ Priorities are int32; "dead" columns are encoded by the caller as _NEG
 (−2^30) *before* the call, which keeps the kernel a pure max-reduce.
 
 Storage axis (DESIGN.md §11): bit-packed uint32 tiles are supported exactly
-as in `tc_spmv` — the DMA carries packed words, the kernel body unpacks the
-VMEM-resident block before the masked max.
+as in `tc_spmv` — the DMA carries packed words, the kernel body bit-extracts
+the VMEM-resident block straight to the bool mask the masked max needs
+(`unpack_tile_mask` — no int8 intermediate, the cast that made the packed
+path lose to int8 pre-§13).
+
+Bitwise frontier mode (DESIGN.md §13): `tc_neighbor_max_bits_pallas` is the
+priority-plane scan — tiles stay packed words end-to-end, the mask arrives
+as (nbc, W) uint32 words, and the max is reconstructed bit-by-bit from a
+static stack of priority planes.  (The jnp engine path runs the same scan
+collapsed into one clz pass over priority-sorted bit order; the plane form
+is the TPU-native formulation — W-word vector ops per plane, no gathers.)
 """
 from __future__ import annotations
 
@@ -26,7 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.tiling import unpack_tile_bits
+from repro.core.tiling import unpack_tile_mask
 
 _NEG = -(1 << 30)  # plain int: jnp scalars would be captured as kernel consts
 
@@ -42,10 +51,12 @@ def _nbr_max_kernel(rows_ref, cols_ref, tiles_ref, pm_ref, out_ref,
         out_ref[...] = jnp.full_like(out_ref, _NEG)
 
     tile = tiles_ref[0]                       # (T, T): row v, col u
-    if packed:                                # in-VMEM unpack, post-DMA
-        tile = unpack_tile_bits(tile, tile_size)
+    if packed:                                # in-VMEM bit→bool, post-DMA
+        mask = unpack_tile_mask(tile, tile_size)
+    else:
+        mask = tile != 0
     pm = pm_ref[...]                          # (1, T) masked priorities
-    vals = jnp.where(tile != 0, pm, _NEG)     # broadcast over rows
+    vals = jnp.where(mask, pm, _NEG)          # broadcast over rows
     out_ref[...] = jnp.maximum(out_ref[...], vals.max(axis=1, keepdims=True).T)
 
 
@@ -79,4 +90,88 @@ def tc_neighbor_max_pallas(
         out_shape=jax.ShapeDtypeStruct((n_block_rows, T), jnp.int32),
         interpret=interpret,
     )(tile_rows, tile_cols, tiles, pm2)
+    return out.reshape(n_block_rows * T)
+
+
+def _nbr_max_bits_kernel(rows_ref, cols_ref, tiles_ref, planes_ref, mask_ref,
+                         out_ref, *, n_bits: int, signed: bool, tile_size: int):
+    """Priority-plane scan over one packed tile (DESIGN.md §13).
+
+    `cur` tracks the surviving neighbour set per tile row; plane b (static
+    unroll, high→low) intersects it with "columns whose priority has bit b".
+    A nonempty intersection fixes bit b of the max and narrows `cur`; empty
+    leaves both.  After all planes `maxv` IS the masked max — never any
+    priority value materialised per column, only word AND/OR."""
+    i = pl.program_id(0)
+    row = rows_ref[i]
+    prev = rows_ref[jnp.maximum(i - 1, 0)]
+
+    @pl.when((i == 0) | (prev != row))
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _NEG)
+
+    a = tiles_ref[0]                          # (T, W) uint32: row v's words
+    cur = a & mask_ref[...]                   # (T, W), mask (1, W) broadcast
+    nonempty = jnp.any(cur != 0, axis=1)      # (T,)
+    maxv = jnp.zeros((tile_size,), jnp.uint32)
+    for b in range(n_bits - 1, -1, -1):
+        inter = cur & planes_ref[b]           # (T, W) ∩ plane b's (1, W)
+        has = jnp.any(inter != 0, axis=1)
+        maxv = maxv | (has.astype(jnp.uint32) << b)
+        cur = jnp.where(has[:, None], inter, cur)
+    if signed:
+        # planes were sign-biased (int32 ^ 0x80000000) so bit-serial max is
+        # order-correct for negative priorities; un-bias on the way out.
+        vals = jax.lax.bitcast_convert_type(maxv ^ jnp.uint32(0x80000000), jnp.int32)
+    else:
+        vals = maxv.astype(jnp.int32)
+    vals = jnp.where(nonempty, vals, _NEG)
+    out_ref[...] = jnp.maximum(out_ref[...], vals[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "signed", "interpret"))
+def tc_neighbor_max_bits_pallas(
+    tiles_words: jnp.ndarray,  # (nt, T, W) uint32 — standard bit layout
+    tile_rows: jnp.ndarray,    # (nt,) int32, non-decreasing
+    tile_cols: jnp.ndarray,    # (nt,) int32
+    planes: jnp.ndarray,       # (n_bits, nbc, W) uint32 — static per solve
+    mask_words: jnp.ndarray,   # (nbc, W) uint32 — per-round packed mask
+    n_block_rows: int,
+    *,
+    signed: bool = False,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Bitwise Max_Np: plane-scan form.  Returns (n_block_rows*T,) int32.
+
+    The priority stack is (n_bits, nbc, W) packed planes from
+    `core.tiling.pack_priority_planes` (`signed=True` iff the planes were
+    sign-biased there).  Per grid step the DMA moves one packed tile, the
+    block-column's plane column and its mask word — all uint32 words; no
+    dense frontier or priority vector ever crosses HBM."""
+    if tiles_words.dtype != jnp.uint32:
+        raise ValueError(
+            f"tc_neighbor_max_bits_pallas needs packed uint32 tiles, got "
+            f"{tiles_words.dtype} (convert via tiling.tiles_as_words)"
+        )
+    nt, T, W = tiles_words.shape
+    n_bits = int(planes.shape[0])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, T, W), lambda i, rows, cols: (i, 0, 0)),
+            pl.BlockSpec((n_bits, 1, W), lambda i, rows, cols: (0, cols[i], 0)),
+            pl.BlockSpec((1, W), lambda i, rows, cols: (cols[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T), lambda i, rows, cols: (rows[i], 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _nbr_max_bits_kernel, n_bits=n_bits, signed=signed, tile_size=T
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_block_rows, T), jnp.int32),
+        interpret=interpret,
+    )(tile_rows, tile_cols, tiles_words, planes, mask_words)
     return out.reshape(n_block_rows * T)

@@ -31,6 +31,13 @@ IN VMEM inside the kernel body, right after the DMA — HBM only ever carries
 the 8×-smaller packed words, and with `skip_dma` the skipped-or-not transfer
 shrinks by the same factor.  The format is detected from the tile dtype, so
 call sites are storage-polymorphic.
+
+Bitwise frontier mode (DESIGN.md §13): `tc_spmv_bits_pallas` and the fused
+`tc_spmv_fused_bits_pallas` keep BOTH operands packed — tile words AND the
+candidate vector as (nbc, W) uint32 words.  The MXU contraction is replaced
+by `popcount(tile_word & cand_word) != 0` per row (the paper's N_c > 0 test
+without the f32 accumulator), and phase ③ becomes pure word logic in the
+fused epilogue.  No dense vector crosses HBM in either direction.
 """
 from __future__ import annotations
 
@@ -41,7 +48,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.tiling import unpack_tile_bits
+from repro.core.tiling import pack_frontier_bits, unpack_tile_mask
 
 
 def _spmv_kernel(rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, out_ref,
@@ -57,9 +64,10 @@ def _spmv_kernel(rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, out_ref,
     @pl.when(flags_ref[cols_ref[i]] != 0)
     def _mma():
         a = tiles_ref[0]                           # (T, T) i8 | (T, W) u32
-        if packed:                                 # in-VMEM unpack, post-DMA
-            a = unpack_tile_bits(a, tile_size)
-        a = a.astype(jnp.float32)                  # (T, T) 0/1 adjacency tile
+        if packed:                                 # in-VMEM bit→f32, post-DMA
+            a = unpack_tile_mask(a, tile_size).astype(jnp.float32)
+        else:
+            a = a.astype(jnp.float32)              # (T, T) 0/1 adjacency tile
         b = rhs_ref[...].astype(jnp.float32)       # (T, L) packed RHS lanes
         out_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
@@ -143,9 +151,10 @@ def _spmv_fused_kernel(
     @pl.when(flags_ref[cols_ref[i]] != 0)
     def _mma():
         a = tiles_ref[0]
-        if packed:                                 # in-VMEM unpack, post-DMA
-            a = unpack_tile_bits(a, tile_size)
-        a = a.astype(jnp.float32)
+        if packed:                                 # in-VMEM bit→f32, post-DMA
+            a = unpack_tile_mask(a, tile_size).astype(jnp.float32)
+        else:
+            a = a.astype(jnp.float32)
         b = rhs_ref[...].astype(jnp.float32)
         nc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
@@ -225,3 +234,187 @@ def tc_spmv_fused_pallas(
         cand.reshape(-1, 1), alive.reshape(-1, 1),
     )
     return n_c, new_alive[:, 0], mis_add[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# bitwise frontier kernels (DESIGN.md §13): packed words on BOTH sides of the
+# contraction.  Per grid step the DMA moves one (T, W) tile and one (1, W)
+# candidate word row — 32× less RHS traffic than the lane-packed f32 slab —
+# and the "matmul" is popcount(AND) != 0 folded straight to a result bit.
+# ---------------------------------------------------------------------------
+
+def _spmv_bits_kernel(rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref,
+                      out_ref, *, tile_size: int):
+    i = pl.program_id(0)
+    row = rows_ref[i]
+    prev = rows_ref[jnp.maximum(i - 1, 0)]
+
+    @pl.when((i == 0) | (prev != row))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(flags_ref[cols_ref[i]] != 0)
+    def _and():
+        a = tiles_ref[0]                          # (T, W) u32: row v's words
+        c = rhs_ref[...]                          # (1, W) candidate words
+        hit = jnp.any(jax.lax.population_count(a & c) != 0, axis=1)  # (T,)
+        out_ref[...] |= pack_frontier_bits(
+            hit[None, :].astype(jnp.uint32), tile_size
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_block_rows", "interpret", "skip_dma")
+)
+def tc_spmv_bits_pallas(
+    tiles_words: jnp.ndarray,  # (nt, T, W) uint32, block-row-major
+    tile_rows: jnp.ndarray,    # (nt,) int32, non-decreasing
+    tile_cols: jnp.ndarray,    # (nt,) int32
+    rhs_words: jnp.ndarray,    # (nbc, W) uint32 — packed candidate vector
+    n_block_rows: int,
+    *,
+    col_flags: jnp.ndarray | None = None,
+    interpret: bool = True,
+    skip_dma: bool = False,
+) -> jnp.ndarray:
+    """hit = (A @ C) > 0 on packed words.  Returns (n_block_rows, W) uint32.
+
+    Requires packed uint32 tiles (the bitwise mode exists to avoid ever
+    touching the dense form; use `tiling.tiles_as_words` to convert)."""
+    if tiles_words.dtype != jnp.uint32:
+        raise ValueError(
+            f"tc_spmv_bits_pallas needs packed uint32 tiles, got "
+            f"{tiles_words.dtype} (convert via tiling.tiles_as_words)"
+        )
+    nt, T, W = tiles_words.shape
+    nbc = rhs_words.shape[0]
+    if col_flags is None:
+        col_flags = jnp.ones((nbc,), dtype=jnp.int32)
+
+    if skip_dma:
+        # empty-C word row: retarget the DMA at block 0 — the AND is
+        # predicated off, the (tiny) HBM read is saved on TPU.
+        def rhs_index(i, rows, cols, flags):
+            c = cols[i]
+            return (jnp.where(flags[c] != 0, c, 0), 0)
+    else:
+        def rhs_index(i, rows, cols, flags):
+            return (cols[i], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, T, W), lambda i, rows, cols, flags: (i, 0, 0)),
+            pl.BlockSpec((1, W), rhs_index),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda i, rows, cols, flags: (rows[i], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_spmv_bits_kernel, tile_size=T),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_block_rows, W), jnp.uint32),
+        interpret=interpret,
+    )(tile_rows, tile_cols, col_flags, tiles_words, rhs_words)
+
+
+def _spmv_fused_bits_kernel(
+    rows_ref, cols_ref, flags_ref, tiles_ref, rhs_ref, cand_ref, alive_ref,
+    hit_ref, alive_out_ref, mis_out_ref, *, tile_size: int,
+):
+    i = pl.program_id(0)
+    nt = pl.num_programs(0)
+    row = rows_ref[i]
+    prev = rows_ref[jnp.maximum(i - 1, 0)]
+    nxt = rows_ref[jnp.minimum(i + 1, nt - 1)]
+
+    @pl.when((i == 0) | (prev != row))
+    def _init():
+        hit_ref[...] = jnp.zeros_like(hit_ref)
+
+    @pl.when(flags_ref[cols_ref[i]] != 0)
+    def _and():
+        a = tiles_ref[0]
+        c = rhs_ref[...]
+        hit = jnp.any(jax.lax.population_count(a & c) != 0, axis=1)
+        hit_ref[...] |= pack_frontier_bits(
+            hit[None, :].astype(jnp.uint32), tile_size
+        )
+
+    @pl.when((i == nt - 1) | (nxt != row))
+    def _epilogue():
+        # phase ③ as word logic — 32 vertices per op, own row block only
+        cand = cand_ref[...]                      # (1, W)
+        alive = alive_ref[...]
+        mis_out_ref[...] = cand
+        alive_out_ref[...] = alive & ~cand & ~hit_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_block_rows", "interpret", "skip_dma")
+)
+def tc_spmv_fused_bits_pallas(
+    tiles_words: jnp.ndarray,  # (nt, T, W) uint32
+    tile_rows: jnp.ndarray,
+    tile_cols: jnp.ndarray,
+    cand_words: jnp.ndarray,   # (nbc, W) uint32 — C, the SpMV RHS
+    alive_words: jnp.ndarray,  # (nbr, W) uint32
+    n_block_rows: int,
+    *,
+    col_flags: jnp.ndarray | None = None,
+    interpret: bool = True,
+    skip_dma: bool = False,
+):
+    """Fused ②+③ on packed words.
+
+    Returns (hit_words, new_alive_words, mis_add_words), each
+    (n_block_rows, W) uint32.  `cand_words` plays both roles: SpMV RHS
+    (indexed by block column) and phase-③ own-state input (indexed by block
+    row) — same array, two BlockSpecs."""
+    if tiles_words.dtype != jnp.uint32:
+        raise ValueError(
+            f"tc_spmv_fused_bits_pallas needs packed uint32 tiles, got "
+            f"{tiles_words.dtype} (convert via tiling.tiles_as_words)"
+        )
+    nt, T, W = tiles_words.shape
+    nbc = cand_words.shape[0]
+    if col_flags is None:
+        col_flags = jnp.ones((nbc,), dtype=jnp.int32)
+
+    if skip_dma:
+        def rhs_index(i, rows, cols, flags):
+            c = cols[i]
+            return (jnp.where(flags[c] != 0, c, 0), 0)
+    else:
+        def rhs_index(i, rows, cols, flags):
+            return (cols[i], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1, T, W), lambda i, rows, cols, flags: (i, 0, 0)),
+            pl.BlockSpec((1, W), rhs_index),
+            pl.BlockSpec((1, W), lambda i, rows, cols, flags: (rows[i], 0)),
+            pl.BlockSpec((1, W), lambda i, rows, cols, flags: (rows[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, W), lambda i, rows, cols, flags: (rows[i], 0)),
+            pl.BlockSpec((1, W), lambda i, rows, cols, flags: (rows[i], 0)),
+            pl.BlockSpec((1, W), lambda i, rows, cols, flags: (rows[i], 0)),
+        ],
+    )
+    hit, new_alive, mis_add = pl.pallas_call(
+        functools.partial(_spmv_fused_bits_kernel, tile_size=T),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_block_rows, W), jnp.uint32),
+            jax.ShapeDtypeStruct((n_block_rows, W), jnp.uint32),
+            jax.ShapeDtypeStruct((n_block_rows, W), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(
+        tile_rows, tile_cols, col_flags, tiles_words,
+        cand_words, cand_words, alive_words,   # C twice: RHS role + own-row role
+    )
+    return hit, new_alive, mis_add

@@ -39,13 +39,16 @@ def test_distributed_mis_matches_single_device():
 
 
 def test_bitpack_roundtrip():
+    """The gather payload uses the one frontier-word packing contract from
+    core.tiling (the uint8 pair this module once carried is gone)."""
     import jax
     import jax.numpy as jnp
 
-    from repro.core.distributed import pack_bits, unpack_bits
+    from repro.core.tiling import pack_frontier_words, unpack_frontier_words
 
-    x = jax.random.uniform(jax.random.key(0), (1024,)) > 0.5
-    assert bool(jnp.all(unpack_bits(pack_bits(x)) == x))
+    for T in (16, 64, 128):
+        x = jax.random.uniform(jax.random.key(0), (1024,)) > 0.5
+        assert bool(jnp.all(unpack_frontier_words(pack_frontier_words(x, T), T) == x))
 
 
 def test_small_mesh_dryrun_lm():

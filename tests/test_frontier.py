@@ -1,0 +1,307 @@
+"""Bitwise frontier mode (DESIGN.md §13): packed word round-trips, the
+popcount SpMV and clz neighbour-max against their densifying oracles, the
+Pallas bits kernels, the `resolve_frontier` policy, and end-to-end
+bit-identity of every engine × storage × frontier combination."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.api import SolveOptions, Solver
+from repro.core.engine import (
+    engine_names,
+    get_engine,
+    resolve_frontier,
+    tile_neighbor_max,
+    tile_neighbor_max_bits,
+    tile_spmv,
+    tile_spmv_bits,
+)
+from repro.core.spmv import _NEG
+from repro.core.tiling import (
+    build_block_tiles,
+    pack_frontier_words,
+    pack_priority_planes,
+    sort_block_priorities,
+    sorted_tile_bits,
+    sorted_frontier_words,
+    tiles_as_words,
+    unpack_frontier_words,
+)
+from repro.core.validate import is_valid_mis_jit
+from repro.dyngraph import random_delta
+from repro.graphs.generators import erdos_renyi, powerlaw
+from repro.kernels import ops, ref
+
+TILE_ENGINES = tuple(
+    e for e in engine_names() if get_engine(e).supports_bitwise
+)
+
+
+# --------------------------------------------------------------------------
+# the packing contract
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    T=st.sampled_from([8, 16, 32, 64, 128, 256]),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+def test_frontier_words_roundtrip(T, k, seed):
+    """pack∘unpack is the identity for every tile size, and the word count
+    follows the (n_tiles, W) shape contract with W = max(T//32, 1)."""
+    n = k * T
+    x = jax.random.uniform(jax.random.key(seed), (n,)) > 0.5
+    w = pack_frontier_words(x, T)
+    assert w.dtype == jnp.uint32
+    assert w.shape == (k, max(T // 32, 1))
+    assert bool(jnp.all(unpack_frontier_words(w, T) == x))
+
+
+def test_frontier_words_bit_layout():
+    """Bit j of word w is vertex slot 32·w + j — the layout the popcount
+    SpMV's word-AND against packed tile columns depends on."""
+    T = 64
+    x = np.zeros(T, dtype=bool)
+    x[0], x[31], x[32], x[63] = True, True, True, True
+    w = np.asarray(pack_frontier_words(jnp.asarray(x), T))
+    assert w.shape == (1, 2)
+    assert w[0, 0] == (1 | (1 << 31)) and w[0, 1] == (1 | (1 << 31))
+
+
+# --------------------------------------------------------------------------
+# raw ops vs the densifying oracles (kernels/ref.py)
+# --------------------------------------------------------------------------
+
+def _graph_and_words(n=230, T=16, seed=0, p_cand=0.5):
+    g = erdos_renyi(n, avg_deg=6.0, seed=seed)
+    t = build_block_tiles(g, tile_size=T).to_storage("bitpack")
+    cand = jax.random.uniform(jax.random.key(seed + 1), (t.n_padded,)) > p_cand
+    return g, t, pack_frontier_words(cand, T)
+
+
+@pytest.mark.parametrize("with_flags", [False, True])
+def test_spmv_bits_matches_ref_oracle(with_flags):
+    _, t, cand_w = _graph_and_words()
+    T = t.tile_size
+    tw = tiles_as_words(t.tiles, T)
+    flags = None
+    if with_flags:
+        flags = (jnp.arange(t.n_block_rows) % 2).astype(jnp.int32)
+    got = tile_spmv_bits(
+        tw, t.tile_rows, t.tile_cols, cand_w, t.n_block_rows, T,
+        col_flags=flags,
+    )
+    want = ref.tc_spmv_bits_ref(
+        t.tiles, t.tile_rows, t.tile_cols, cand_w, t.n_block_rows,
+        col_flags=flags,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("signed", [False, True])
+def test_neighbor_max_bits_matches_dense(signed):
+    """The clz/sorted-priority formulation equals the dense masked max for
+    both priority regimes: non-negative select values and the negative
+    resolve keys (-deg·n - id)."""
+    _, t, mask_w = _graph_and_words(seed=3, p_cand=0.35)
+    T = t.tile_size
+    if signed:
+        p = -jax.random.randint(
+            jax.random.key(9), (t.n_padded,), 1, 1 << 24, dtype=jnp.int32
+        )
+    else:
+        p = jax.random.randint(
+            jax.random.key(9), (t.n_padded,), 0, 1 << 20, dtype=jnp.int32
+        )
+    order, p_sorted = sort_block_priorities(p, T)
+    tiles_sorted = sorted_tile_bits(t.tiles, t.tile_cols, order, T)
+    got = tile_neighbor_max_bits(
+        tiles_sorted, t.tile_rows, t.tile_cols, p_sorted,
+        sorted_frontier_words(mask_w, order, T), t.n_block_rows, T,
+    )
+    mask = unpack_frontier_words(mask_w, T)
+    want = tile_neighbor_max(
+        t.to_storage("int8").tiles, t.tile_rows, t.tile_cols,
+        jnp.where(mask, p, _NEG), t.n_block_rows, T,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    want_ref = ref.tc_neighbor_max_bits_ref(
+        t.tiles, t.tile_rows, t.tile_cols, p, mask_w, t.n_block_rows
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_ref))
+
+
+# --------------------------------------------------------------------------
+# the Pallas bits kernels (interpret mode off-TPU) vs the jnp substrate
+# --------------------------------------------------------------------------
+
+def test_kernel_spmv_bits_matches_op():
+    _, t, cand_w = _graph_and_words(n=140, T=8, seed=5)
+    T = t.tile_size
+    got = ops.tc_spmv_bits(t, cand_w)
+    want = tile_spmv_bits(
+        tiles_as_words(t.tiles, T), t.tile_rows, t.tile_cols, cand_w,
+        t.n_block_rows, T,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("signed", [False, True])
+def test_kernel_neighbor_max_bits_matches_op(signed):
+    """The plane-scan kernel (the TPU form) equals the clz jnp op —
+    including the sign-bias trick for the negative resolve keys."""
+    _, t, mask_w = _graph_and_words(n=140, T=8, seed=6, p_cand=0.3)
+    T = t.tile_size
+    if signed:
+        p = -jax.random.randint(
+            jax.random.key(11), (t.n_padded,), 1, 1 << 24, dtype=jnp.int32
+        )
+        planes = pack_priority_planes(p, T, 32, signed=True)
+    else:
+        p = jax.random.randint(
+            jax.random.key(11), (t.n_padded,), 0, 1 << 20, dtype=jnp.int32
+        )
+        planes = pack_priority_planes(p, T, 31)
+    got = ops.tc_neighbor_max_bits(t, planes, mask_w, signed=signed)
+    order, p_sorted = sort_block_priorities(p, T)
+    want = tile_neighbor_max_bits(
+        sorted_tile_bits(t.tiles, t.tile_cols, order, T),
+        t.tile_rows, t.tile_cols, p_sorted,
+        sorted_frontier_words(mask_w, order, T), t.n_block_rows, T,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_fused_bits_matches_split():
+    _, t, cand_w = _graph_and_words(n=140, T=8, seed=7)
+    T = t.tile_size
+    alive = jax.random.uniform(jax.random.key(8), (t.n_padded,)) > 0.2
+    alive_w = pack_frontier_words(alive, T) | cand_w
+    hit, new_alive, mis_add = ops.tc_spmv_fused_bits(t, cand_w, alive_w)
+    hit_want = ops.tc_spmv_bits(t, cand_w)
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(hit_want))
+    np.testing.assert_array_equal(
+        np.asarray(new_alive), np.asarray(alive_w & ~cand_w & ~hit_want)
+    )
+    np.testing.assert_array_equal(np.asarray(mis_add), np.asarray(cand_w))
+
+
+# --------------------------------------------------------------------------
+# resolve_frontier policy
+# --------------------------------------------------------------------------
+
+def test_resolve_frontier_policy():
+    tiled_eng = get_engine("tiled_ref")
+    seg_eng = get_engine("segment")
+
+    def cfg(frontier="auto", phase1="tiled"):
+        return SolveOptions(frontier=frontier, phase1=phase1)
+
+    # auto: bitwise exactly on (tile engine, tiled ①, bitpack, scalar rnd)
+    assert resolve_frontier(cfg(), tiled_eng, storage="bitpack") == "bitwise"
+    assert resolve_frontier(cfg(), tiled_eng, storage="int8") == "dense"
+    assert resolve_frontier(cfg(), seg_eng, storage="bitpack") == "dense"
+    assert resolve_frontier(
+        cfg(phase1="segment"), tiled_eng, storage="bitpack"
+    ) == "dense"
+    assert resolve_frontier(
+        cfg(), tiled_eng, storage="bitpack", member_rounds=True
+    ) == "dense"
+    # explicit bitwise falls back (never errors) where it can't be honoured
+    assert resolve_frontier(
+        cfg("bitwise"), seg_eng, storage="bitpack"
+    ) == "dense"
+    assert resolve_frontier(
+        cfg("bitwise"), tiled_eng, storage="bitpack", member_rounds=True
+    ) == "dense"
+    assert resolve_frontier(
+        cfg("bitwise"), tiled_eng, storage="int8"
+    ) == "bitwise"
+    # explicit dense always wins
+    assert resolve_frontier(cfg("dense"), tiled_eng, storage="bitpack") == "dense"
+
+
+def test_solve_options_rejects_unknown_frontier():
+    with pytest.raises(ValueError):
+        SolveOptions(frontier="packed")
+
+
+# --------------------------------------------------------------------------
+# end-to-end bit-identity: engines × storages × frontier modes
+# --------------------------------------------------------------------------
+
+def _baseline(g, T=16):
+    return Solver(SolveOptions(
+        engine="tiled_ref", tile_size=T, storage="int8", frontier="dense",
+        seed=0,
+    )).solve(g)
+
+
+@pytest.mark.parametrize("engine", engine_names())
+@pytest.mark.parametrize("storage", ["int8", "bitpack"])
+@pytest.mark.parametrize("frontier", ["auto", "dense", "bitwise"])
+def test_solve_bit_identical_across_frontier_modes(engine, storage, frontier):
+    g = powerlaw(150, avg_deg=5.0, seed=21)
+    base = _baseline(g)
+    res = Solver(SolveOptions(
+        engine=engine, tile_size=16, storage=storage, frontier=frontier,
+        seed=0, placement="local",
+    )).solve(g)
+    np.testing.assert_array_equal(res.in_mis, base.in_mis)
+    assert res.rounds == base.rounds
+    assert is_valid_mis_jit(g, jnp.asarray(res.in_mis))
+
+
+@pytest.mark.parametrize("heuristic", ["h1", "h3"])
+def test_bitwise_matches_dense_per_heuristic(heuristic):
+    """One- and two-pass phase ① both survive the packed round body."""
+    g = erdos_renyi(260, avg_deg=7.0, seed=22)
+    runs = [
+        Solver(SolveOptions(
+            engine="fused_pallas", tile_size=32, storage="bitpack",
+            heuristic=heuristic, frontier=f, seed=1, placement="local",
+        )).solve(g)
+        for f in ("dense", "bitwise")
+    ]
+    np.testing.assert_array_equal(runs[0].in_mis, runs[1].in_mis)
+    assert runs[0].rounds == runs[1].rounds
+
+
+def test_solve_many_bitwise_request_falls_back_bit_identical():
+    """Batched members carry per-member round vectors, so the packed state
+    cannot honour bitwise — the run must silently use dense and match."""
+    graphs = [erdos_renyi(60 + 17 * i, avg_deg=5.0, seed=i) for i in range(3)]
+    dense = Solver(SolveOptions(
+        engine="tiled_ref", tile_size=8, storage="bitpack", frontier="dense",
+    )).solve_many(graphs)
+    bitw = Solver(SolveOptions(
+        engine="tiled_ref", tile_size=8, storage="bitpack", frontier="bitwise",
+    )).solve_many(graphs)
+    for rd, rb in zip(dense, bitw):
+        np.testing.assert_array_equal(rd.in_mis, rb.in_mis)
+        assert rd.rounds == rb.rounds
+
+
+@pytest.mark.parametrize("engine", TILE_ENGINES)
+def test_update_repair_bit_identical_dense_vs_bitwise(engine):
+    """The warm re-entry (packed seed state, `_covered_bits` SpMV) repairs
+    to the same MIS the dense warm state does, on every tile engine."""
+    g = erdos_renyi(120, avg_deg=6.0, seed=23)
+    results = []
+    for frontier in ("dense", "bitwise"):
+        solver = Solver(SolveOptions(
+            engine=engine, tile_size=16, storage="bitpack",
+            frontier=frontier, repair="incremental", seed=2,
+            placement="local",
+        ))
+        prior = solver.solve(g)
+        d = random_delta(g, n_add=5, n_remove=5, seed=24)
+        res = solver.update(prior, d)
+        assert res.stats["repair"] == "incremental"
+        assert all(is_valid_mis_jit(res.plan.g, jnp.asarray(res.in_mis_plan)))
+        results.append(res)
+    np.testing.assert_array_equal(results[0].in_mis, results[1].in_mis)

@@ -1,25 +1,39 @@
-"""CI source guards that a grep can't express precisely (DESIGN.md §11/§12).
+"""CI source guards that a grep can't express precisely (DESIGN.md §11–§13).
 
 Guard 1 — packed tiles must stay packed until VMEM: in the kernel modules
-(`src/repro/kernels/`, excluding the oracle `ref.py`), `unpack_tile_bits`
-may only be CALLED inside Pallas kernel-body functions (names ending in
-`_kernel`).  An unpack anywhere else — e.g. in `ops.py` before the
-`pallas_call` — would materialise the dense (nt, T, T) array in HBM and
-forfeit the 8× DMA reduction the storage axis exists for.  The jnp oracle
-paths (`kernels/ref.py`, `core/engine.py`) are the sanctioned exceptions.
+(`src/repro/kernels/`, excluding the oracle `ref.py`), `unpack_tile_bits` /
+`unpack_tile_mask` may only be CALLED inside Pallas kernel-body functions
+(names ending in `_kernel`).  An unpack anywhere else — e.g. in `ops.py`
+before the `pallas_call` — would materialise the dense (nt, T, T) array in
+HBM and forfeit the 8× DMA reduction the storage axis exists for.  The jnp
+oracle paths (`kernels/ref.py`, `core/engine.py`) are the sanctioned
+exceptions.
 
 Guard 2 — kernel modules must not densify via the whole-array helpers
-either: `dense_tiles` (the oracle dispatch) and `to_storage` (the format
-converter) never appear under `src/repro/kernels/` outside `ref.py`.
+either: `dense_tiles` / `dense_tile_mask` (the oracle dispatches) and
+`to_storage` (the format converter) never appear under `src/repro/kernels/`
+outside `ref.py`.
 
 Guard 3 — the dyngraph delta path edits packed tiles AS packed words
-(word-level bit edits, DESIGN.md §12): under `src/repro/dyngraph/`, none
-of `unpack_tile_bits` / `dense_tiles` / `to_storage` may be called outside
-a function whose name ends in `_oracle` (the sanctioned densify path for
-reference checks — none exist today; the suffix names the ONLY place one
-would be allowed).  A densify in `retile.py` would silently turn the
-O(delta) patch into an O(tiles) unpack-repack; in `repair.py` it would
-materialise dense tiles the engines never need.
+(word-level bit edits, DESIGN.md §12): under `src/repro/dyngraph/`, none of
+`unpack_tile_bits` / `unpack_tile_mask` / `dense_tiles` / `dense_tile_mask`
+/ `to_storage` may be called outside a function whose name ends in
+`_oracle` (the sanctioned densify path for reference checks).  A densify in
+`retile.py` would silently turn the O(delta) patch into an O(tiles)
+unpack-repack; in `repair.py` it would materialise dense tiles the engines
+never need.
+
+Guard 4 — frontier words stay packed on the hot path (DESIGN.md §13): in
+all of `src/repro/` EXCEPT the packing substrate (`core/tiling.py`, which
+defines the contract and owns the word-level repacks) and the sanctioned
+densifying reference (`kernels/ref.py`), `unpack_frontier_bits` /
+`unpack_frontier_words` may only be called inside a `*_kernel` or
+`*_oracle` body, or in one of the explicitly allowlisted seam functions:
+`core/tc_mis.py::_result` (the run epilogue — the ONE unpack on the solve
+path, after the convergence loop) and `core/distributed.py::gather_bool`
+(the all-gather payload boundary — shard-local phases are dense ops).  Any
+other densify would smuggle a (n_padded,) bool round-trip back into the
+packed round body the bitwise mode exists to eliminate.
 
 Run: python tools/ci_guards.py   (exit 0 = clean)
 """
@@ -30,13 +44,27 @@ import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC_DIR = ROOT / "src/repro"
 KERNEL_DIR = ROOT / "src/repro/kernels"
 DYNGRAPH_DIR = ROOT / "src/repro/dyngraph"
 ORACLE_FILES = {"ref.py"}          # the sanctioned full-unpack path
 KERNEL_FN_SUFFIX = "_kernel"
 ORACLE_FN_SUFFIX = "_oracle"
 
-DENSIFY_CALLS = ("unpack_tile_bits", "dense_tiles")
+# tile densifies: bit-extraction to int8 (kernel-body only) vs whole-array
+# oracle dispatches (never in kernel modules)
+TILE_UNPACKS = ("unpack_tile_bits", "unpack_tile_mask")
+TILE_DENSE_DISPATCH = ("dense_tiles", "dense_tile_mask")
+DENSIFY_CALLS = TILE_UNPACKS + TILE_DENSE_DISPATCH
+
+# frontier densifies (Guard 4)
+FRONTIER_UNPACKS = ("unpack_frontier_bits", "unpack_frontier_words")
+# rel-path → allowed enclosing function names (sanctioned seams, see above)
+FRONTIER_ALLOWLIST = {
+    "core/tc_mis.py": {"_result"},
+    "core/distributed.py": {"gather_bool"},
+}
+FRONTIER_EXCLUDED_FILES = {"core/tiling.py", "kernels/ref.py"}
 
 
 def _call_name(node: ast.Call):
@@ -80,7 +108,7 @@ def kernel_violations(path: pathlib.Path) -> list:
     for name, lineno, stack in _walk_calls(path):
         if name in DENSIFY_CALLS:
             in_kernel_body = any(fn.endswith(KERNEL_FN_SUFFIX) for fn in stack)
-            if name == "dense_tiles" or not in_kernel_body:
+            if name in TILE_DENSE_DISPATCH or not in_kernel_body:
                 out.append(
                     f"{path}:{lineno}: {name} called "
                     f"outside a *{KERNEL_FN_SUFFIX} body (scope: "
@@ -111,6 +139,31 @@ def dyngraph_violations(path: pathlib.Path) -> list:
     return out
 
 
+def frontier_violations(path: pathlib.Path) -> list:
+    """Guard 4: frontier words densify only in kernels, oracles, or the
+    allowlisted seams (run epilogue, gather payload boundary)."""
+    rel = path.relative_to(SRC_DIR).as_posix()
+    if rel in FRONTIER_EXCLUDED_FILES:
+        return []
+    allowed_fns = FRONTIER_ALLOWLIST.get(rel, set())
+    out = []
+    for name, lineno, stack in _walk_calls(path):
+        if name not in FRONTIER_UNPACKS:
+            continue
+        if any(
+            fn.endswith((KERNEL_FN_SUFFIX, ORACLE_FN_SUFFIX)) or fn in allowed_fns
+            for fn in stack
+        ):
+            continue
+        out.append(
+            f"{path}:{lineno}: {name} called outside a *{KERNEL_FN_SUFFIX}/"
+            f"*{ORACLE_FN_SUFFIX} body or an allowlisted seam (scope: "
+            f"{'.'.join(stack) or '<module>'}) — frontier vectors stay "
+            f"packed words on the hot path (DESIGN.md §13)"
+        )
+    return out
+
+
 def main() -> int:
     problems = []
     for path in sorted(KERNEL_DIR.glob("*.py")):
@@ -120,17 +173,25 @@ def main() -> int:
     n_kernel = len(problems)
     for path in sorted(DYNGRAPH_DIR.glob("*.py")):
         problems += dyngraph_violations(path)
+    n_dyngraph = len(problems) - n_kernel
+    for path in sorted(SRC_DIR.rglob("*.py")):
+        problems += frontier_violations(path)
+    n_frontier = len(problems) - n_kernel - n_dyngraph
     for p in problems:
         print(p, file=sys.stderr)
     if problems:
         print(
-            f"\n{len(problems)} packed-storage guard violation(s) "
-            f"({n_kernel} kernel, {len(problems) - n_kernel} dyngraph): HBM "
-            f"must only ever see packed words outside the oracle/int8 path",
+            f"\n{len(problems)} packed-representation guard violation(s) "
+            f"({n_kernel} kernel, {n_dyngraph} dyngraph, {n_frontier} "
+            f"frontier): HBM and the round loop must only ever see packed "
+            f"words outside the oracle/int8/epilogue paths",
             file=sys.stderr,
         )
         return 1
-    print("ci_guards: kernel + dyngraph packed-storage guards clean")
+    print(
+        "ci_guards: kernel + dyngraph + frontier packed-representation "
+        "guards clean"
+    )
     return 0
 
 
