@@ -171,6 +171,19 @@ def _bench_pallas_kernel(n: int, T: int) -> list:
     return rows
 
 
+def _best_of(solver, g, iters: int = 3):
+    """(best solve_ms, that run's result) — best-of-N because the per-round
+    wall clock feeds the telemetry-overhead bar, which needs a stable
+    denominator, not a scheduler-noise sample."""
+    best_ms, best_res = None, None
+    for _ in range(iters):
+        res = solver.solve(g)
+        ms = float(res.stats["solve_ms"])
+        if best_ms is None or ms < best_ms:
+            best_ms, best_res = ms, res
+    return best_ms, best_res
+
+
 def _bench_solve(n: int, T: int) -> list:
     g = erdos_renyi(n, avg_deg=6.0, seed=6)
     rows = []
@@ -179,9 +192,8 @@ def _bench_solve(n: int, T: int) -> list:
             engine="tiled_ref", tile_size=T, storage=storage, placement="local",
         ))
         solver.solve(g)          # warm: plan + compile outside the timer
-        res = solver.solve(g)
+        ms, res = _best_of(solver, g)
         rounds = max(res.rounds, 1)
-        ms = float(res.stats["solve_ms"])
         rows.append(dict(
             op="solve", storage=storage, engine="tiled_ref", n=n, tile_size=T,
             rounds=res.rounds, solve_ms=ms,
@@ -190,7 +202,66 @@ def _bench_solve(n: int, T: int) -> list:
         ))
         emit(f"core.solve.{storage}.T{T}", ms * 1e3 / rounds,
              f"rounds={res.rounds};mis={res.mis_size}")
+
+        # the telemetry-on twin (repro.obs, DESIGN.md §14): same graph, same
+        # plan shape, round buffer recorded — its row embeds the per-round
+        # summary so the BENCH trajectory carries convergence shape, and its
+        # solution must be bit-identical to the untelemetered run
+        tsolver = Solver(SolveOptions(
+            engine="tiled_ref", tile_size=T, storage=storage,
+            placement="local", telemetry=True,
+        ))
+        tsolver.solve(g)
+        tms, tres = _best_of(tsolver, g)
+        assert (tres.in_mis == res.in_mis).all(), (
+            "telemetry must not change the solution", storage,
+        )
+        rt = tres.telemetry
+        trounds = max(tres.rounds, 1)
+        rows.append(dict(
+            op="solve_telemetry", storage=storage, engine="tiled_ref",
+            n=n, tile_size=T, rounds=tres.rounds, solve_ms=tms,
+            us_per_round=round(tms * 1e3 / trounds, 1),
+            mis_size=tres.mis_size,
+            rounds_summary=rt.summary(),
+        ))
+        emit(f"core.solve_telemetry.{storage}.T{T}", tms * 1e3 / trounds,
+             f"rounds={tres.rounds};alive0={rt.summary()['alive0']}")
     return rows
+
+
+def _telemetry_overhead_guard(prev, cur) -> None:
+    """The disabled-telemetry zero-cost bar (DESIGN.md §14): against a prior
+    run of the SAME configuration (backend/quick match, same n/T per row),
+    the telemetry-off per-round wall clock may not regress more than 5%
+    plus a 300 µs absolute slack (sub-ms rows are all timer noise).  CI
+    arms this by running the bench twice against one BENCH_CORE_OUT path —
+    the second run compares itself to the first."""
+    if prev is None:
+        return
+    if any(prev.get(k) != cur[k] for k in ("bench", "backend", "quick")):
+        print("# overhead bar skipped: prior run has a different config")
+        return
+    prior = {
+        r["storage"]: r for r in prev.get("results", ())
+        if r.get("op") == "solve"
+    }
+    for r in cur["results"]:
+        if r["op"] != "solve":
+            continue
+        old = prior.get(r["storage"])
+        if (old is None or old.get("n") != r["n"]
+                or old.get("tile_size") != r["tile_size"]):
+            continue
+        bar = old["us_per_round"] * 1.05 + 300.0
+        assert r["us_per_round"] <= bar, (
+            "disabled-telemetry solve regressed >5% vs prior run",
+            r["storage"], r["us_per_round"], old["us_per_round"],
+        )
+        print(
+            f"# overhead bar ok ({r['storage']}): "
+            f"{r['us_per_round']} us/round vs bar {round(bar, 1)}"
+        )
 
 
 def main() -> None:
@@ -199,6 +270,13 @@ def main() -> None:
     quick = QUICK or "--quick" in sys.argv
     n = 2048 if quick else 8192
     T = 64
+    prev = None
+    if os.path.exists(OUT_PATH):     # prior run = the overhead-bar baseline
+        try:
+            with open(OUT_PATH) as f:
+                prev = json.load(f)
+        except (OSError, ValueError):
+            prev = None
     results = []
     results += _bench_tile_ops(n, T, lanes=8)
     results += _bench_pallas_kernel(256, 32)
@@ -214,14 +292,15 @@ def main() -> None:
     reduction = s_int8["bsr_bytes"] / max(s_pack["bsr_bytes"], 1)
     emit("core.mem.T128_reduction", 0.0, f"{reduction:.2f}x")
 
+    doc = dict(
+        bench="core",
+        backend=jax.default_backend(),
+        quick=quick,
+        results=results,
+        t128_tile_hbm_reduction=round(reduction, 2),
+    )
     with open(OUT_PATH, "w") as f:
-        json.dump(dict(
-            bench="core",
-            backend=jax.default_backend(),
-            quick=quick,
-            results=results,
-            t128_tile_hbm_reduction=round(reduction, 2),
-        ), f, indent=2)
+        json.dump(doc, f, indent=2)
     print(f"# wrote {OUT_PATH}")
 
     # bit-parity of the storage formats is asserted by tier-1 tests; here we
@@ -229,7 +308,7 @@ def main() -> None:
     by_op = {r["op"] for r in results}
     assert by_op == {
         "spmv", "nbr_max", "spmv_bitwise", "nbr_max_bitwise",
-        "kernel_spmv", "solve",
+        "kernel_spmv", "solve", "solve_telemetry",
     }, by_op
     assert all(
         any(r["storage"] == s for r in results) for s in STORAGES
@@ -258,6 +337,9 @@ def main() -> None:
         "bitpack neighbour max regressed vs int8 again",
         _us("nbr_max", "bitpack"), _us("nbr_max", "int8"),
     )
+
+    # the §14 zero-cost bar: telemetry off must not have slowed down
+    _telemetry_overhead_guard(prev, doc)
 
 
 if __name__ == "__main__":

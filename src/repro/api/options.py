@@ -81,6 +81,15 @@ class SolveOptions:
       repair_threshold: the 'auto' cutover — dirty-vertex fraction above
                which updates fall back to a cold solve.
 
+    Observability (repro.obs, DESIGN.md §14):
+      telemetry:  carry the (max_rounds, K) on-device round-telemetry
+                  buffer through the convergence loop and attach a
+                  `RoundTrace` (per-round alive / frontier / selected /
+                  tiles-skipped series) to `SolveResult.telemetry`.  Off
+                  (the default) compiles to the exact pre-telemetry
+                  program — zero cost.  Solutions are bit-identical either
+                  way.
+
     Reproducibility / caching:
       seed:               base PRNG seed; `Solver.solve` uses
                           `jax.random.key(seed)` (the classic single-graph
@@ -109,6 +118,8 @@ class SolveOptions:
 
     repair: str = "auto"
     repair_threshold: float = 0.25
+
+    telemetry: bool = False
 
     seed: int = 0
     cache_dir: Optional[str] = None

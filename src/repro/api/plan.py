@@ -51,6 +51,11 @@ from repro.core.tiling import (
     rcm_ordering,
 )
 from repro.graphs.graph import Graph, from_edges
+from repro.obs.metrics import MetricsRegistry
+
+# the PlanCache's legacy stats spelling, now a view over its metrics
+# registry (repro.obs; DESIGN.md §14)
+_PLAN_STAT_KEYS = ("mem_hits", "disk_hits", "misses", "evicted_stale")
 
 # v2: the storage axis (DESIGN.md §11) — packed uint32 tiles on disk, storage
 # in the cache key, and a version+storage tail on the npz `meta` record.
@@ -412,9 +417,25 @@ class PlanCache:
         self.cache_dir = cache_dir
         self.max_mem_entries = max(int(max_mem_entries), 1)
         self._mem: "OrderedDict[str, Plan]" = OrderedDict()
-        self.stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "evicted_stale": 0}
+        # per-instance metrics registry (repro.obs); the legacy `stats` dict
+        # survives as a read-only property view below
+        self.metrics = MetricsRegistry("plan_cache")
+        for k in _PLAN_STAT_KEYS:
+            self.metrics.counter(f"plan_cache.{k}")
         if cache_dir:
             os.makedirs(cache_dir, exist_ok=True)
+
+    @property
+    def stats(self) -> dict:
+        """Read-only `{mem_hits, disk_hits, misses, evicted_stale}` view in
+        the legacy spelling; mutation goes through `self.metrics`."""
+        return {
+            k: self.metrics.counter(f"plan_cache.{k}").value
+            for k in _PLAN_STAT_KEYS
+        }
+
+    def _count(self, key: str) -> None:
+        self.metrics.counter(f"plan_cache.{key}").inc()
 
     def _remember(self, key: str, plan: Plan) -> None:
         self._mem[key] = plan
@@ -440,13 +461,13 @@ class PlanCache:
         key = plan_cache_key(g, T, ro, st)
         hit = self._mem.get(key)
         if hit is not None:
-            self.stats["mem_hits"] += 1
+            self._count("mem_hits")
             self._mem.move_to_end(key)
             return hit, "mem"
         if self.cache_dir:
             loaded = self._load(key, ro)
             if loaded is not None:
-                self.stats["disk_hits"] += 1
+                self._count("disk_hits")
                 self._remember(key, loaded)
                 return loaded, "disk"
             # disk miss: a v1 entry for this graph (pre-storage-axis key)
@@ -455,7 +476,7 @@ class PlanCache:
             legacy = self._path(_legacy_v1_cache_key(g, T, ro))
             if os.path.exists(legacy):
                 self._evict_stale(legacy, "pre-storage-axis entry (v1 key)")
-        self.stats["misses"] += 1
+        self._count("misses")
         plan = build_plan(g, T, ro, key, storage=st)
         self._remember(key, plan)
         if self.cache_dir:
@@ -482,17 +503,17 @@ class PlanCache:
         key = delta_cache_key(plan.key, delta.content_key)
         hit = self._mem.get(key)
         if hit is not None:
-            self.stats["mem_hits"] += 1
+            self._count("mem_hits")
             self._mem.move_to_end(key)
             return hit, "mem"
         if self.cache_dir:
             loaded = self._load(key, plan.reorder)
             if loaded is not None:
-                self.stats["disk_hits"] += 1
+                self._count("disk_hits")
                 self._remember(key, loaded)
                 self._retire_parent(plan)
                 return loaded, "disk"
-        self.stats["misses"] += 1
+        self._count("misses")
         patched = patch_plan(plan, delta)
         self._remember(patched.key, patched)
         if self.cache_dir:
@@ -555,7 +576,7 @@ class PlanCache:
     def _evict_stale(self, path: str, found: str) -> None:
         """Old-format disk entry: warn (one line), delete, let the caller
         rebuild — a stale layout must never be mis-read as current."""
-        self.stats["evicted_stale"] += 1
+        self._count("evicted_stale")
         warnings.warn(
             f"evicting stale plan-cache entry {os.path.basename(path)}: "
             f"{found}, current format v{_PLAN_VERSION} — rebuilding",

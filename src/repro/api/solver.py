@@ -46,16 +46,20 @@ import numpy as np
 
 from repro.api.options import SolveOptions
 from repro.api.plan import Plan, PlanCache, choose_tile_size, resolve_storage
-from repro.core.engine import get_engine
+from repro.core.engine import get_engine, resolve_frontier
 from repro.core.heuristics import make_priorities
 from repro.core.luby import MISResult
 from repro.core.tc_mis import _run_phases_impl, _tc_mis_impl
 from repro.graphs.graph import Graph
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.rounds import RoundTrace
+from repro.obs.trace import Trace, trace_span
 
 GraphLike = Union[Graph, Plan]
 
 _DIST_PROGRAM_CACHE = 16       # shard_map closures kept per Solver (LRU)
 _SEEN_SIGNATURE_CAP = 4096     # compile-stat signature set bound (FIFO)
+_AOT_PROGRAM_CACHE = 16        # AOT-compiled programs kept for traced runs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +79,10 @@ class SolveResult:
     placement: str              # local | batched | sharded
     plan: Plan
     stats: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # per-round alive/frontier/selected/tiles-skipped series — populated only
+    # when SolveOptions.telemetry is on (repro.obs.rounds; batched members
+    # share the bucket's batch-global series, meta marks the scope)
+    telemetry: Optional[RoundTrace] = None
 
     @property
     def mis_size(self) -> int:
@@ -117,7 +125,16 @@ class Solver:
         # prefer solve_many, whose pow2 buckets bound the compiled programs)
         self._seen_signatures: "OrderedDict" = OrderedDict()
         self._dist_runs: "OrderedDict[str, object]" = OrderedDict()
-        self.stats = {"solves": 0, "batches": 0, "compiles": 0}
+        # AOT-compiled programs (lower().compile()), built only on TRACED
+        # cold dispatches so the compile/execute span split is measured, not
+        # estimated.  Untraced dispatches never touch this — they keep the
+        # plain jit wrappers below, so jax's jit caches (which tests and the
+        # default service path observe) behave exactly as before.
+        self._aot: "OrderedDict[tuple, object]" = OrderedDict()
+        # the metrics registry behind the legacy `stats` view (repro.obs)
+        self.metrics = MetricsRegistry("solver")
+        for k in ("solver.solves", "solver.batches", "solver.compiles"):
+            self.metrics.counter(k)
         # the two compiled-program seams: jax's jit cache keys on the packed
         # containers' static shape buckets, so a steady request mix converges
         # onto a handful of compiled programs
@@ -135,6 +152,18 @@ class Solver:
         # `update` — repro.dyngraph imports the serving layer, so the seam
         # resolves lazily rather than at api-import time
         self._jit_repair = None
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Read-only view over the metrics registry in the legacy spelling
+        (`{"solves": .., "batches": .., "compiles": ..}`) — downstream code
+        reads these keys; writes go through `self.metrics`."""
+        m = self.metrics
+        return {
+            "solves": m.counter("solver.solves").value,
+            "batches": m.counter("solver.batches").value,
+            "compiles": m.counter("solver.compiles").value,
+        }
 
     # -- planning ----------------------------------------------------------
 
@@ -175,20 +204,34 @@ class Solver:
 
     # -- execution ---------------------------------------------------------
 
-    def solve(self, graph: GraphLike, *, key: Optional[jax.Array] = None) -> SolveResult:
-        """Solve one graph on whatever path the routing policy picks."""
-        plan = self.plan(graph)
-        if key is None:
-            key = jax.random.key(self.options.seed)
-        if self.route(plan) == "sharded":
-            return self._solve_sharded(plan, key)
-        return self._solve_local(plan, key)
+    def solve(
+        self,
+        graph: GraphLike,
+        *,
+        key: Optional[jax.Array] = None,
+        trace: Optional[Trace] = None,
+    ) -> SolveResult:
+        """Solve one graph on whatever path the routing policy picks.
+
+        `trace` (repro.obs.Trace, default None = zero-overhead) records
+        plan/compile/execute spans; on a cold traced dispatch the program is
+        compiled ahead-of-time so `compile_ms` and `execute_ms` are measured
+        separately instead of conflated into `solve_ms`."""
+        with trace_span(trace, "solver.solve"):
+            with trace_span(trace, "solver.plan"):
+                plan = self.plan(graph)
+            if key is None:
+                key = jax.random.key(self.options.seed)
+            if self.route(plan) == "sharded":
+                return self._solve_sharded(plan, key, trace)
+            return self._solve_local(plan, key, trace)
 
     def solve_many(
         self,
         graphs: Iterable[GraphLike],
         *,
         keys: Optional[Sequence[jax.Array]] = None,
+        trace: Optional[Trace] = None,
     ) -> List[SolveResult]:
         """Solve a workload, batching where it pays.
 
@@ -199,7 +242,8 @@ class Solver:
         members peel off to their own shard_map dispatch.  Results keep the
         input order.
         """
-        plans = [self.plan(g) for g in graphs]
+        with trace_span(trace, "solver.plan"):
+            plans = [self.plan(g) for g in graphs]
         if not plans:
             return []
         # the priority cache is keyed by plan content under the DEFAULT
@@ -211,24 +255,24 @@ class Solver:
         elif len(keys) != len(plans):
             raise ValueError(f"{len(plans)} graphs but {len(keys)} keys")
         if len(plans) == 1:
-            return [self.solve(plans[0], key=keys[0])]
+            return [self.solve(plans[0], key=keys[0], trace=trace)]
 
         out: List[Optional[SolveResult]] = [None] * len(plans)
         # a batch must share T AND tile storage (one block-diagonal dtype)
         groups: "OrderedDict[tuple, List[int]]" = OrderedDict()
         for i, p in enumerate(plans):
             if self.route(p) == "sharded":
-                out[i] = self._solve_sharded(p, keys[i])
+                out[i] = self._solve_sharded(p, keys[i], trace)
             else:
                 groups.setdefault((p.tile_size, p.tiled.storage), []).append(i)
         for idxs in groups.values():
             if len(idxs) == 1:
                 i = idxs[0]
-                out[i] = self._solve_local(plans[i], keys[i])
+                out[i] = self._solve_local(plans[i], keys[i], trace)
                 continue
             solved = self._solve_batched(
                 [plans[i] for i in idxs], [keys[i] for i in idxs],
-                use_priority_cache=default_keys,
+                use_priority_cache=default_keys, trace=trace,
             )
             for i, r in zip(idxs, solved):
                 out[i] = r
@@ -240,6 +284,7 @@ class Solver:
         delta,
         *,
         key: Optional[jax.Array] = None,
+        trace: Optional[Trace] = None,
     ) -> SolveResult:
         """Apply an `EdgeDelta` to a solved graph and re-solve (DESIGN.md §12).
 
@@ -264,9 +309,10 @@ class Solver:
         Stats gain `repair` (the mode taken), `patch` (plan-cache layer of
         the patched plan), `plan_epoch` and the delta sizes.
         """
-        from repro.dyngraph.repair import dirty_mask, repair_mis
+        from repro.dyngraph.repair import dirty_mask, note_repair, repair_mis
 
-        plan2, patch_status = self.plans.apply_delta(prior.plan, delta)
+        with trace_span(trace, "solver.plan"):
+            plan2, patch_status = self.plans.apply_delta(prior.plan, delta)
         extra = dict(
             patch=patch_status, plan_epoch=plan2.epoch,
             delta_add=delta.n_add, delta_remove=delta.n_remove,
@@ -279,8 +325,10 @@ class Solver:
                 else "cold"
         if mode == "incremental" and self.route(plan2) == "sharded":
             mode = "cold"
+        note_repair(mode, dirty_frac=touched.size / max(plan2.n_nodes, 1))
         if mode == "cold":
-            res = self.solve(plan2, key=key)
+            with trace_span(trace, "solver.update", mode="cold"):
+                res = self.solve(plan2, key=key, trace=trace)
             return dataclasses.replace(
                 res, stats=dict(res.stats, repair="cold", **extra)
             )
@@ -302,20 +350,23 @@ class Solver:
         dirty = jnp.asarray(dirty_mask(plan2.n_nodes, touched_plan))
         prior_plan = jnp.asarray(plan2.to_plan_ids(prior.in_mis).astype(bool))
         t = plan2.tiled
-        compile_stat = self._note_signature(
-            ("repair", t.tile_size, t.storage, t.n_block_rows,
-             t.n_block_cols, t.n_tiles, int(t.tiles.shape[0]), t.n_nodes,
-             plan2.g.n_nodes, plan2.g.n_edges, plan2.g.e_pad)
-        )
-        t0 = time.perf_counter()
-        result = self._jit_repair(plan2.g, plan2.tiled, key, prior_plan, dirty)
-        jax.block_until_ready(result.in_mis)
-        solve_ms = (time.perf_counter() - t0) * 1e3
-        self.stats["solves"] += 1
+        sig = ("repair", t.tile_size, t.storage, t.n_block_rows,
+               t.n_block_cols, t.n_tiles, int(t.tiles.shape[0]), t.n_nodes,
+               plan2.g.n_nodes, plan2.g.n_edges, plan2.g.e_pad)
+        compile_stat = self._note_signature(sig)
+        with trace_span(trace, "solver.update", mode="incremental"):
+            out, timing = self._dispatch(
+                self._jit_repair, sig, compile_stat, trace,
+                plan2.g, plan2.tiled, key, prior_plan, dirty,
+            )
+        result, rt = self._split_telemetry(out, plan2.g, plan2.tiled,
+                                           scope="repair")
+        self.metrics.counter("solver.solves").inc()
+        self.metrics.histogram("solver.solve_ms").observe(timing["solve_ms"])
         return self._wrap(plan2, result, "local", dict(
-            solve_ms=round(solve_ms, 3), compile=compile_stat, batch_size=1,
-            repair="incremental", **extra,
-        ))
+            compile=compile_stat, batch_size=1,
+            repair="incremental", **timing, **extra,
+        ), telemetry=rt)
 
     def profile(self, graph: GraphLike, *, key: Optional[jax.Array] = None):
         """The instrumented twin: python-stepped rounds with per-phase wall
@@ -326,13 +377,18 @@ class Solver:
         if key is None:
             key = jax.random.key(self.options.seed)
         result, times = _run_phases_impl(plan.g, plan.tiled, key, self.options)
-        self.stats["solves"] += 1
+        self.metrics.counter("solver.solves").inc()
         return self._wrap(plan, result, "local", dict(times)), times
 
     # -- the three execution paths ----------------------------------------
 
     def _wrap(
-        self, plan: Plan, result: MISResult, placement: str, stats: Dict
+        self,
+        plan: Plan,
+        result: MISResult,
+        placement: str,
+        stats: Dict,
+        telemetry: Optional[RoundTrace] = None,
     ) -> SolveResult:
         in_mis_plan = np.asarray(result.in_mis).astype(bool)
         return SolveResult(
@@ -342,62 +398,155 @@ class Solver:
             placement=placement,
             plan=plan,
             stats=stats,
+            telemetry=telemetry,
         )
 
     def _note_signature(self, sig) -> str:
         reused = sig in self._seen_signatures
         self._seen_signatures[sig] = True
         if not reused:
-            self.stats["compiles"] += 1
+            self.metrics.counter("solver.compiles").inc()
             while len(self._seen_signatures) > _SEEN_SIGNATURE_CAP:
                 self._seen_signatures.popitem(last=False)
         return "reused" if reused else "compiled"
 
-    def _solve_local(self, plan: Plan, key: jax.Array) -> SolveResult:
+    def _dispatch(self, jit_fn, sig, compile_stat, trace, *args):
+        """One compiled-program dispatch → (output, timing stats dict).
+
+        Untraced (the default): call the jit wrapper, book the conflated
+        wall clock as `solve_ms` — byte-identical behaviour to pre-obs.
+        Traced: on a cold signature, lower + compile AHEAD of time under a
+        `solver.compile` span (program kept in the bounded `_aot` cache,
+        keyed by the same signature as the compile stat), then run under
+        `solver.execute` — so `compile_ms` / `execute_ms` are measured
+        separately and `solve_ms` is their sum, not a conflation.
+        """
+        t0 = time.perf_counter()
+        if trace is None:
+            out = jit_fn(*args)
+            jax.block_until_ready(out)
+            return out, {"solve_ms": round((time.perf_counter() - t0) * 1e3, 3)}
+        timing = {}
+        compiled = self._aot.get(sig)
+        if compiled is None and compile_stat == "compiled":
+            tc = time.perf_counter()
+            with trace_span(trace, "solver.compile"):
+                compiled = jit_fn.lower(*args).compile()
+            timing["compile_ms"] = round((time.perf_counter() - tc) * 1e3, 3)
+            self.metrics.histogram("solver.compile_ms").observe(
+                timing["compile_ms"]
+            )
+            self._aot[sig] = compiled
+            while len(self._aot) > _AOT_PROGRAM_CACHE:
+                self._aot.popitem(last=False)
+        fn = compiled if compiled is not None else jit_fn
+        te = time.perf_counter()
+        with trace_span(trace, "solver.execute"):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        now = time.perf_counter()
+        timing["execute_ms"] = round((now - te) * 1e3, 3)
+        timing["solve_ms"] = round((now - t0) * 1e3, 3)
+        return out, timing
+
+    def _split_telemetry(
+        self, out, g: Graph, tiled, *, scope: str = "solve", batch_size: int = 1
+    ):
+        """Telemetry-off: identity → (result, None).  Telemetry-on: unpack
+        the `(result, buffer)` pair `_tc_mis_impl` returns and materialise
+        the buffer — THE one device→host telemetry transfer — into a
+        `RoundTrace`."""
+        if not self.options.telemetry:
+            return out, None
+        result, buf = out
+        rounds = np.asarray(result.rounds)
+        # vector (member_rounds) mode: the batch-global executed round count
+        # is the max per-vertex settle round — the last round's selections
+        # are real member vertices, all inside the slice
+        rounds = int(rounds.max()) if rounds.ndim else int(rounds)
+        engine = get_engine(self.options.engine)
+        meta = dict(
+            scope=scope,
+            engine=self.options.engine,
+            storage=tiled.storage,
+            frontier=resolve_frontier(
+                self.options, engine, storage=tiled.storage,
+                member_rounds=batch_size > 1,
+            ),
+            n_nodes=g.n_nodes,
+        )
+        if batch_size > 1:
+            meta["batch_size"] = batch_size
+        rt = RoundTrace.from_buffer(
+            np.asarray(buf), rounds,
+            tiles_total=int(tiled.tile_cols.shape[0]), meta=meta,
+        )
+        return result, rt
+
+    def _solve_local(
+        self, plan: Plan, key: jax.Array, trace: Optional[Trace] = None
+    ) -> SolveResult:
         # every static trace input of the jitted program, or the stat lies
         t = plan.tiled
-        compile_stat = self._note_signature(
-            ("local", t.tile_size, t.storage, t.n_block_rows, t.n_block_cols,
-             t.n_tiles, int(t.tiles.shape[0]), t.n_nodes, plan.g.n_nodes,
-             plan.g.n_edges, plan.g.e_pad)
+        sig = ("local", t.tile_size, t.storage, t.n_block_rows, t.n_block_cols,
+               t.n_tiles, int(t.tiles.shape[0]), t.n_nodes, plan.g.n_nodes,
+               plan.g.n_edges, plan.g.e_pad)
+        compile_stat = self._note_signature(sig)
+        out, timing = self._dispatch(
+            self._jit_single, sig, compile_stat, trace, plan.g, plan.tiled, key
         )
-        t0 = time.perf_counter()
-        result = self._jit_single(plan.g, plan.tiled, key)
-        jax.block_until_ready(result.in_mis)
-        solve_ms = (time.perf_counter() - t0) * 1e3
-        self.stats["solves"] += 1
+        result, rt = self._split_telemetry(out, plan.g, plan.tiled)
+        self.metrics.counter("solver.solves").inc()
+        self.metrics.histogram("solver.solve_ms").observe(timing["solve_ms"])
         return self._wrap(plan, result, "local", dict(
-            solve_ms=round(solve_ms, 3), compile=compile_stat, batch_size=1,
-        ))
+            compile=compile_stat, batch_size=1, **timing,
+        ), telemetry=rt)
 
     def _solve_batched(
         self,
         plans: Sequence[Plan],
         keys: Sequence[jax.Array],
         use_priority_cache: bool = True,
+        trace: Optional[Trace] = None,
     ) -> List[SolveResult]:
         from repro.serve_mis.batcher import pack_batch
 
-        batch = pack_batch(
-            plans, keys, self.options.heuristic,
-            priority_cache=self._priority_cache if use_priority_cache else None,
-        )
+        with trace_span(trace, "solver.pack", batch_size=len(plans)):
+            batch = pack_batch(
+                plans, keys, self.options.heuristic,
+                priority_cache=self._priority_cache if use_priority_cache
+                else None,
+            )
         sig = batch.signature()
         compile_stat = self._note_signature(sig)
-        self.stats["batches"] += 1
+        self.metrics.counter("solver.batches").inc()
+        self.metrics.histogram("solver.batch_size").observe(len(plans))
 
-        t0 = time.perf_counter()
-        result = self._jit_packed(
-            batch.g, batch.tiled, batch.priorities, batch.alive0, batch.col_gate
+        out_raw, timing = self._dispatch(
+            self._jit_packed, sig, compile_stat, trace,
+            batch.g, batch.tiled, batch.priorities, batch.alive0,
+            batch.col_gate,
         )
-        jax.block_until_ready(result.in_mis)
-        solve_ms = (time.perf_counter() - t0) * 1e3
-        self.stats["solves"] += len(plans)
+        result, rt = self._split_telemetry(
+            out_raw, batch.g, batch.tiled, scope="batch",
+            batch_size=len(plans),
+        )
+        self.metrics.counter("solver.solves").inc(len(plans))
+        self.metrics.histogram("solver.batch_ms").observe(timing["solve_ms"])
         converged = bool(result.converged)
 
+        # attribution (DESIGN.md §14): ONE dispatch served the whole bucket,
+        # so each member's `solve_ms` is its 1/batch share, with the shared
+        # wall clock reported explicitly as `batch_ms` — summing members'
+        # solve_ms across a workload now totals real device time instead of
+        # multiply-counting every bucket by its size.  `compile_ms` (cold
+        # traced dispatches) stays whole-bucket — compilation is not
+        # per-member work.
+        batch_ms = timing.pop("solve_ms")
         shared = dict(
-            solve_ms=round(solve_ms, 3), bucket=sig,
-            compile=compile_stat, batch_size=len(plans),
+            solve_ms=round(batch_ms / len(plans), 3),
+            batch_ms=batch_ms, bucket=sig,
+            compile=compile_stat, batch_size=len(plans), **timing,
         )
         out = []
         for plan, mis, rnd in zip(
@@ -411,10 +560,13 @@ class Solver:
                 placement="batched",
                 plan=plan,
                 stats=dict(shared),
+                telemetry=rt,   # batch-global series, shared by members
             ))
         return out
 
-    def _solve_sharded(self, plan: Plan, key: jax.Array) -> SolveResult:
+    def _solve_sharded(
+        self, plan: Plan, key: jax.Array, trace: Optional[Trace] = None
+    ) -> SolveResult:
         from repro.core.distributed import (
             DistConfig, build_distributed_mis, shard_tiled,
         )
@@ -424,17 +576,18 @@ class Solver:
         run = self._dist_runs.get(plan.key)
         compile_stat = "reused" if run is not None else "compiled"
         if run is None:
-            self.stats["compiles"] += 1
-            axis_type = getattr(jax.sharding, "AxisType", compat._AxisType)
-            mesh = compat.make_mesh(
-                (n_dev,), ("shard",), axis_types=(axis_type.Auto,)
-            )
-            sharded = shard_tiled(plan.tiled, n_shards=n_dev)
-            run = build_distributed_mis(sharded, mesh, DistConfig(
-                max_rounds=self.options.max_rounds,
-                bitpack=self.options.bitpack,
-                lanes=self.options.lanes,
-            ))
+            self.metrics.counter("solver.compiles").inc()
+            with trace_span(trace, "solver.compile", placement="sharded"):
+                axis_type = getattr(jax.sharding, "AxisType", compat._AxisType)
+                mesh = compat.make_mesh(
+                    (n_dev,), ("shard",), axis_types=(axis_type.Auto,)
+                )
+                sharded = shard_tiled(plan.tiled, n_shards=n_dev)
+                run = build_distributed_mis(sharded, mesh, DistConfig(
+                    max_rounds=self.options.max_rounds,
+                    bitpack=self.options.bitpack,
+                    lanes=self.options.lanes,
+                ))
             self._dist_runs[plan.key] = run
             while len(self._dist_runs) > _DIST_PROGRAM_CACHE:
                 self._dist_runs.popitem(last=False)
@@ -443,10 +596,12 @@ class Solver:
             self.options.heuristic, key, plan.g.n_nodes, plan.g.degrees()
         )
         t0 = time.perf_counter()
-        res = run(pri)
-        jax.block_until_ready(res.in_mis)
+        with trace_span(trace, "solver.execute", placement="sharded"):
+            res = run(pri)
+            jax.block_until_ready(res.in_mis)
         solve_ms = (time.perf_counter() - t0) * 1e3
-        self.stats["solves"] += 1
+        self.metrics.counter("solver.solves").inc()
+        self.metrics.histogram("solver.solve_ms").observe(round(solve_ms, 3))
         rounds = int(res.rounds)
         in_mis_plan = np.asarray(res.in_mis)[: plan.g.n_nodes].astype(bool)
         return SolveResult(

@@ -58,6 +58,17 @@ from repro.core.tiling import (
 )
 from repro.graphs.graph import Graph
 
+# Round-telemetry buffer columns (DESIGN.md §14).  obs.rounds is the owner
+# of the layout and is deliberately numpy-only, so this import cannot cycle
+# back into core.
+from repro.obs.rounds import (
+    COL_ALIVE,
+    COL_FRONTIER,
+    COL_SELECTED,
+    COL_TILES_SKIPPED,
+    TELEMETRY_COLS,
+)
+
 _NEG = np.int32(-(1 << 30))  # numpy scalar: safe to create at import time under a trace
 
 
@@ -379,6 +390,41 @@ def phase3_update_bits(
 
 
 # --------------------------------------------------------------------------
+# round telemetry reductions (DESIGN.md §14) — cheap folds over state the
+# round body already holds; used only by `step_with_stats`, never by `step`
+# --------------------------------------------------------------------------
+
+def _popcount_words(words: jnp.ndarray) -> jnp.ndarray:
+    """Σ popcount over a packed (nbc, W) uint32 frontier — scalar int32."""
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32))
+
+
+def _count(mask: jnp.ndarray) -> jnp.ndarray:
+    """popcount of a dense bool vector — scalar int32."""
+    return jnp.sum(mask.astype(jnp.int32))
+
+
+def _tiles_skipped(ctx: EngineContext, flags: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Tiles gated off this round by the empty-C col_flags skip: every tile
+    whose block column carries flag 0.  Engines without flags (segment) skip
+    nothing — 0."""
+    if flags is None:
+        return jnp.int32(0)
+    n_tiles = int(ctx.tiled.tile_cols.shape[0])
+    return jnp.int32(n_tiles) - jnp.sum(flags[ctx.tiled.tile_cols].astype(jnp.int32))
+
+
+def _telemetry_row(alive, frontier, selected, skipped) -> jnp.ndarray:
+    """(TELEMETRY_COLS,) int32 row in the obs.rounds column layout."""
+    vals = [None] * TELEMETRY_COLS
+    vals[COL_ALIVE] = alive
+    vals[COL_FRONTIER] = frontier
+    vals[COL_SELECTED] = selected
+    vals[COL_TILES_SKIPPED] = skipped
+    return jnp.stack([jnp.asarray(v, jnp.int32) for v in vals])
+
+
+# --------------------------------------------------------------------------
 # the engine interface
 # --------------------------------------------------------------------------
 
@@ -495,6 +541,47 @@ class RoundEngine:
             )
         n_c = self.phase2_counts(ctx, cand, state.alive, flags)
         return phase3_update(state, cand, n_c, inc)
+
+    # -- the instrumented round body (telemetry runs only) -----------------
+    def _step_bits_with_stats(
+        self, ctx: EngineContext, pri, state: MISRoundState
+    ) -> Tuple[MISRoundState, jnp.ndarray]:
+        raise NotImplementedError(
+            f"{self.name} has no packed-frontier round body "
+            f"(supports_bitwise={self.supports_bitwise})"
+        )
+
+    def step_with_stats(
+        self, ctx: EngineContext, pri, state: MISRoundState
+    ) -> Tuple[MISRoundState, jnp.ndarray]:
+        """`step` plus a (TELEMETRY_COLS,) int32 telemetry row — the same
+        round body with four extra reductions (no extra SpMVs, no host
+        callbacks).  Kept separate from `step` so the telemetry-off program
+        is the byte-exact pre-telemetry jaxpr (DESIGN.md §14's zero-cost
+        guarantee)."""
+        if ctx.frontier == "bitwise":
+            return self._step_bits_with_stats(ctx, pri, state)
+        alive_count = _count(state.alive)
+        cand = self.phase1_candidates(ctx, pri, state.alive)
+        flags = self.col_flags(ctx, cand, state.alive)
+        inc = round_increment(state)
+        if self.fused:
+            new_alive, mis_add = self.fused_step(ctx, cand, state.alive, flags)
+            new = MISRoundState(
+                alive=new_alive,
+                in_mis=state.in_mis | mis_add,
+                rnd=state.rnd + inc,
+            )
+        else:
+            n_c = self.phase2_counts(ctx, cand, state.alive, flags)
+            new = phase3_update(state, cand, n_c, inc)
+        row = _telemetry_row(
+            alive_count,
+            _count(cand),
+            _count(new.in_mis) - _count(state.in_mis),
+            _tiles_skipped(ctx, flags),
+        )
+        return new, row
 
 
 # --------------------------------------------------------------------------
@@ -663,6 +750,35 @@ class _TiledEngine(RoundEngine):
             )
         hit_w = self.phase2_hits(ctx, cand_w, state.alive, flags)
         return phase3_update_bits(state, cand_w, hit_w, inc)
+
+    def _step_bits_with_stats(
+        self, ctx, pri, state: MISRoundState
+    ) -> Tuple[MISRoundState, jnp.ndarray]:
+        """`step_bits` + telemetry row; the counts are word popcounts
+        (`jax.lax.population_count`) — the frontier never densifies."""
+        alive_count = _popcount_words(state.alive)
+        cand_w = self.phase1_candidates_bits(ctx, pri, state.alive)
+        flags = self.col_flags_bits(ctx, cand_w)
+        inc = round_increment(state)
+        if self.fused:
+            new_alive, mis_add = self.fused_step_bits(
+                ctx, cand_w, state.alive, flags
+            )
+            new = MISRoundState(
+                alive=new_alive,
+                in_mis=state.in_mis | mis_add,
+                rnd=state.rnd + inc,
+            )
+        else:
+            hit_w = self.phase2_hits(ctx, cand_w, state.alive, flags)
+            new = phase3_update_bits(state, cand_w, hit_w, inc)
+        row = _telemetry_row(
+            alive_count,
+            _popcount_words(cand_w),
+            _popcount_words(new.in_mis) - _popcount_words(state.in_mis),
+            _tiles_skipped(ctx, flags),
+        )
+        return new, row
 
 
 class TiledRefEngine(_TiledEngine):

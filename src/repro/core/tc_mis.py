@@ -55,6 +55,7 @@ from repro.core.tiling import (
     unpack_frontier_words,
 )
 from repro.graphs.graph import Graph
+from repro.obs.rounds import TELEMETRY_COLS, TELEMETRY_FILL
 
 # back-compat alias: the round state now lives with the engine layer
 TCMISState = MISRoundState
@@ -214,10 +215,37 @@ def _tc_mis_impl(
     def cond(state: MISRoundState):
         return jnp.any(state.alive) & (jnp.max(state.rnd) < config.max_rounds)
 
-    final = jax.lax.while_loop(
-        cond, lambda s: engine.step(ctx, pri, s), state0
+    if not getattr(config, "telemetry", False):
+        final = jax.lax.while_loop(
+            cond, lambda s: engine.step(ctx, pri, s), state0
+        )
+        return _result(final, g, tiled)
+
+    # Telemetry run (SolveOptions.telemetry; the deprecated TCMISConfig
+    # never sets it): the loop carries a fixed-shape (max_rounds, K) int32
+    # buffer, round r writes row r via `engine.step_with_stats`, and the
+    # return becomes (result, buffer) — ONE device→host transfer when the
+    # caller materialises the buffer at the epilogue (RoundTrace.from_buffer).
+    # The flag is static under jit, so the telemetry-off program above stays
+    # the byte-exact pre-telemetry while_loop (DESIGN.md §14).
+    buf0 = jnp.full(
+        (int(config.max_rounds), TELEMETRY_COLS), TELEMETRY_FILL, jnp.int32
     )
-    return _result(final, g, tiled)
+
+    def body(carry):
+        s, buf = carry
+        new, row = engine.step_with_stats(ctx, pri, s)
+        # max(rnd) is the current round index in BOTH counting modes: a
+        # scalar rnd counts rounds directly, and in member_rounds mode every
+        # currently-alive vertex has incremented in every prior round (alive
+        # is monotone per vertex), so the max over vertices is the round
+        # index while anything is alive — which `cond` guarantees here.
+        return new, buf.at[jnp.max(s.rnd)].set(row)
+
+    final, buf = jax.lax.while_loop(
+        lambda c: cond(c[0]), body, (state0, buf0)
+    )
+    return _result(final, g, tiled), buf
 
 
 # --------------------------------------------------------------------------

@@ -61,6 +61,17 @@ from repro.core.tiling import (
     tiles_as_words,
 )
 from repro.graphs.graph import Graph
+from repro.obs import metrics as obs_metrics
+
+
+def note_repair(mode: str, *, dirty_frac: float = 0.0) -> None:
+    """Record one repair-mode decision in the process metrics registry
+    (repro.obs).  EAGER-ONLY by contract: the Solver calls this where the
+    mode is decided (before jit dispatch) — never from inside `repair_mis`
+    or `warm_state`, which run under a trace and would count compiles, not
+    repairs."""
+    obs_metrics.counter(f"repair.{mode}").inc()
+    obs_metrics.histogram("repair.dirty_frac").observe(dirty_frac)
 
 
 def dirty_mask(n_nodes: int, touched: np.ndarray) -> np.ndarray:
@@ -176,6 +187,11 @@ def repair_mis(
     graph would use (same heuristic, same key, the NEW degree vector), so
     an empty delta repairs to exactly the cold answer.  Jit-compatible with
     `config` static — the Solver wraps this whole call in one `jax.jit`.
+
+    With `config.telemetry` the return is `_tc_mis_impl`'s `(result,
+    telemetry_buffer)` pair — the round buffer passes through this seam
+    untouched, so repaired solves carry per-round series exactly like cold
+    ones (the warm loop's row 0 is the first REPAIR round).
     """
     alive0, in_mis0 = warm_state(g, tiled, config, prior_in_mis, dirty)
     return _tc_mis_impl(

@@ -1,0 +1,44 @@
+"""repro.obs — observability for the TC-MIS stack (DESIGN.md §14).
+
+Three legs, importable independently:
+
+* `rounds`  — on-device round-telemetry buffer layout + host `RoundTrace`
+              (numpy-only; `core.engine` imports its column constants)
+* `trace`   — `Trace` / `trace_span` span tracing + JSONL export
+* `metrics` — `MetricsRegistry` counters/gauges/histograms + the
+              process-wide `REGISTRY`
+
+`python -m repro.obs report trace.jsonl` renders the JSONL stream.
+"""
+from .metrics import REGISTRY, Counter, Gauge, Histogram, MetricsRegistry
+from .rounds import (
+    COL_ALIVE,
+    COL_FRONTIER,
+    COL_SELECTED,
+    COL_TILES_SKIPPED,
+    COLUMN_NAMES,
+    TELEMETRY_COLS,
+    TELEMETRY_FILL,
+    RoundTrace,
+)
+from .trace import JsonlWriter, Span, Trace, trace_span
+
+__all__ = [
+    "REGISTRY",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "COL_ALIVE",
+    "COL_FRONTIER",
+    "COL_SELECTED",
+    "COL_TILES_SKIPPED",
+    "COLUMN_NAMES",
+    "TELEMETRY_COLS",
+    "TELEMETRY_FILL",
+    "RoundTrace",
+    "JsonlWriter",
+    "Span",
+    "Trace",
+    "trace_span",
+]

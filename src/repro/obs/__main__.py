@@ -1,0 +1,6 @@
+"""`python -m repro.obs report <trace.jsonl>` — see report.py."""
+import sys
+
+from .report import main
+
+sys.exit(main())

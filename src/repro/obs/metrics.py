@@ -1,0 +1,157 @@
+"""The metrics registry: counters, gauges and histograms for every layer.
+
+One `MetricsRegistry` is a flat namespace of named instruments.  The repo's
+layers each own one — `Solver.metrics`, `PlanCache.metrics`,
+`MISService.metrics` — so per-instance numbers never bleed between two
+solvers in one process, while module-level code with no instance to hang
+state on (the batcher's priority cache, the dyngraph repair-mode decision)
+records into the process-wide `REGISTRY`.  `MISService.metrics_snapshot()`
+merges all four views into the one operator-facing dict (DESIGN.md §14).
+
+The legacy ad-hoc `stats` dicts (`Solver.stats`, `PlanCache.stats`,
+`MISService.stats`) survive as read-only *views* over these instruments —
+same keys, same ints — so nothing downstream re-learns a spelling.
+
+Design constraints:
+
+* **Never inside jit.**  Instruments mutate python state; a call under a
+  trace would fire once per *compile*, not once per event.  Everything
+  device-side goes through the round-telemetry buffer instead
+  (`repro.obs.rounds`); instruments record at the eager seams only.
+* Snapshots are plain JSON-able dicts: counters/gauges flatten to numbers,
+  histograms to {count, total, min, max, mean} records.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+class Gauge:
+    """Last-set value (queue depth, cache size, ...)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def snapshot(self):
+        return self.value
+
+
+class Histogram:
+    """Streaming summary of an observed quantity (latencies, batch sizes).
+
+    Keeps count/total/min/max — O(1) state, enough for the report CLI's
+    mean/extremes rendering without a bucket scheme to mis-tune."""
+
+    __slots__ = ("name", "count", "total", "min", "max")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def snapshot(self):
+        if not self.count:
+            return dict(count=0, total=0.0, min=None, max=None, mean=None)
+        return dict(
+            count=self.count,
+            total=round(self.total, 3),
+            min=round(self.min, 3),
+            max=round(self.max, 3),
+            mean=round(self.total / self.count, 3),
+        )
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class MetricsRegistry:
+    """A named, typed instrument namespace.
+
+    `counter`/`gauge`/`histogram` are get-or-create: the first call for a
+    name fixes its kind, and re-asking with a different kind is a caller
+    bug, raised loudly.  Thread-safe at the registry level (instrument
+    mutation itself is a GIL-atomic int/float update).
+    """
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, object] = {}
+        self._kinds: Dict[str, str] = {}
+
+    def _get(self, kind: str, name: str):
+        with self._lock:
+            have = self._kinds.get(name)
+            if have is None:
+                self._kinds[name] = kind
+                self._instruments[name] = _KINDS[kind](name)
+            elif have != kind:
+                raise TypeError(
+                    f"metric {name!r} is a {have}, requested as {kind}"
+                )
+            return self._instruments[name]
+
+    def counter(self, name: str) -> Counter:
+        return self._get("counter", name)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get("gauge", name)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get("histogram", name)
+
+    def snapshot(self) -> Dict[str, object]:
+        """JSON-able {name: value-or-summary} of every instrument."""
+        with self._lock:
+            return {k: v.snapshot() for k, v in sorted(self._instruments.items())}
+
+
+# The process-wide registry: the home of metrics recorded by module-level
+# code (batcher priority cache, repair-mode decisions) that has no layer
+# instance to own them.  Layer instances (Solver/PlanCache/MISService) own
+# their OWN registries; `MISService.metrics_snapshot()` merges everything.
+REGISTRY = MetricsRegistry("process")
+
+
+def counter(name: str) -> Counter:
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return REGISTRY.gauge(name)
+
+
+def histogram(name: str) -> Histogram:
+    return REGISTRY.histogram(name)

@@ -1,0 +1,128 @@
+"""`python -m repro.obs report trace.jsonl` — render traces for humans.
+
+Three record kinds land in one JSONL stream (`JsonlWriter`):
+
+    {"kind": "trace",   "request_id": ..., "spans": [...]}
+    {"kind": "rounds",  "rounds": R, "alive": [...], ...}
+    {"kind": "metrics", "metrics": {...}}
+
+The report renders each in order: trace records as an indented span tree
+with durations, rounds records as a per-round table plus a sparkline of
+the alive series, metrics records as a name → value table.  Exit code 2
+when the file holds no renderable records — the CI smoke step relies on
+that to catch an empty pipe.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+from .rounds import RoundTrace
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def _sparkline(values: List[int]) -> str:
+    if not values:
+        return ""
+    hi = max(values)
+    if hi <= 0:
+        return _SPARK[0] * len(values)
+    return "".join(_SPARK[min(int(v * 8 / hi), 7)] for v in values)
+
+
+def render_trace(d: Dict, out) -> None:
+    rid = d.get("request_id") or "-"
+    spans = d.get("spans", [])
+    total = max((s["start_ms"] + s["dur_ms"] for s in spans), default=0.0)
+    out.write(f"trace {rid}  ({total:.2f} ms, {len(spans)} spans)\n")
+    for s in spans:
+        indent = "  " * (int(s.get("depth", 0)) + 1)
+        meta = s.get("meta") or {}
+        tail = ("  " + " ".join(f"{k}={v}" for k, v in sorted(meta.items()))) if meta else ""
+        out.write(f"{indent}{s['name']:<20} {s['dur_ms']:>9.3f} ms{tail}\n")
+
+
+def render_rounds(d: Dict, out) -> None:
+    rt = RoundTrace.from_dict(d)
+    s = rt.summary()
+    out.write(
+        f"rounds {rt.rounds}"
+        f"  alive {s.get('alive0', 0)}→{s.get('alive_final', 0)}"
+        f"  selected {s.get('selected_total', 0)}"
+    )
+    if rt.tiles_total:
+        out.write(f"  tiles_skipped {s['tiles_skipped_mean']}/{rt.tiles_total}")
+    out.write("\n")
+    out.write(f"  alive    {_sparkline(rt.alive)}\n")
+    out.write(f"  frontier {_sparkline(rt.frontier)}\n")
+    out.write(f"  {'r':>4} {'alive':>8} {'frontier':>8} {'selected':>8} {'skipped':>8}\n")
+    for r in range(rt.rounds):
+        out.write(
+            f"  {r:>4} {rt.alive[r]:>8} {rt.frontier[r]:>8}"
+            f" {rt.selected[r]:>8} {rt.tiles_skipped[r]:>8}\n"
+        )
+
+
+def render_metrics(d: Dict, out) -> None:
+    metrics = d.get("metrics", {})
+    out.write(f"metrics ({len(metrics)} instruments)\n")
+    for name, val in sorted(metrics.items()):
+        if isinstance(val, dict):
+            val = " ".join(f"{k}={v}" for k, v in val.items() if v is not None)
+        out.write(f"  {name:<44} {val}\n")
+
+
+def report(path: str, out=None) -> int:
+    """Render every record in `path`; return the count rendered."""
+    out = out or sys.stdout
+    rendered = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError as e:
+                out.write(f"! line {lineno}: bad JSON ({e})\n")
+                continue
+            kind = d.get("kind")
+            if kind == "trace":
+                render_trace(d, out)
+            elif kind == "rounds":
+                render_rounds(d, out)
+            elif kind == "metrics":
+                render_metrics(d, out)
+            else:
+                out.write(f"! line {lineno}: unknown kind {kind!r}\n")
+                continue
+            rendered += 1
+    return rendered
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="render repro.obs JSONL telemetry (trace tree, "
+                    "per-round series, metrics tables)",
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+    rp = sub.add_parser("report", help="render a JSONL telemetry file")
+    rp.add_argument("path", help="JSONL file written by the service / solver")
+    args = p.parse_args(argv)
+
+    if args.cmd == "report":
+        n = report(args.path)
+        if n == 0:
+            print(f"# no renderable records in {args.path}", file=sys.stderr)
+            return 2
+        print(f"# rendered {n} records")
+        return 0
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,172 @@
+"""Round-telemetry buffer layout + the host-side `RoundTrace` view.
+
+The device side (DESIGN.md §14): when `SolveOptions.telemetry` is on,
+`_tc_mis_impl` threads a fixed-shape ``(max_rounds, TELEMETRY_COLS)`` int32
+buffer through the round `while_loop`.  Each executed round r writes row r
+with four cheap reductions over state the round body already holds —
+no extra SpMVs, no host callbacks, ONE device→host transfer at the
+epilogue:
+
+    col 0  COL_ALIVE          popcount(alive) at round entry
+    col 1  COL_FRONTIER       popcount(candidates C) — the phase-① frontier
+    col 2  COL_SELECTED       popcount(in_mis_new) − popcount(in_mis_old)
+    col 3  COL_TILES_SKIPPED  n_tiles − Σ col_flags[tile_cols]  (0 when the
+                              engine computes no flags, e.g. segment)
+
+Rows past the executed round count stay at the fill value −1, which is how
+`RoundTrace.from_buffer` distinguishes "round never ran" from a legitimate
+all-zero round without needing the loop counter on-device.
+
+This module is deliberately import-light (numpy only): `core.engine` pulls
+the column constants from here, so any jax / repro.core import would be a
+layering cycle.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+TELEMETRY_COLS = 4
+COL_ALIVE = 0
+COL_FRONTIER = 1
+COL_SELECTED = 2
+COL_TILES_SKIPPED = 3
+
+# rows beyond the executed rounds keep this fill; col 0 (alive) is never
+# negative for an executed round, so it doubles as the row-validity mark
+TELEMETRY_FILL = -1
+
+COLUMN_NAMES = ("alive", "frontier", "selected", "tiles_skipped")
+
+
+@dataclass(frozen=True)
+class RoundTrace:
+    """Host-side per-round series for one solve.
+
+    ``alive[r]`` etc. are python lists of ints, length == ``rounds`` — the
+    executed prefix of the device buffer, already validated and trimmed.
+    """
+
+    rounds: int
+    alive: List[int]
+    frontier: List[int]
+    selected: List[int]
+    tiles_skipped: List[int]
+    tiles_total: int = 0
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    @classmethod
+    def from_buffer(
+        cls,
+        buf,
+        rounds: int,
+        *,
+        tiles_total: int = 0,
+        meta: Optional[Dict[str, object]] = None,
+    ) -> "RoundTrace":
+        """Trim the raw ``(max_rounds, K)`` device buffer to the executed
+        prefix.  ``rounds`` comes from the result epilogue; rows past it are
+        required to still hold the fill value (a mismatch means the loop
+        wrote outside its round index — worth failing loudly)."""
+        a = np.asarray(buf, dtype=np.int64)
+        if a.ndim != 2 or a.shape[1] != TELEMETRY_COLS:
+            raise ValueError(f"telemetry buffer shape {a.shape}, want (R, {TELEMETRY_COLS})")
+        rounds = int(rounds)
+        if rounds < 0 or rounds > a.shape[0]:
+            raise ValueError(f"rounds={rounds} outside buffer of {a.shape[0]} rows")
+        used = a[:rounds]
+        if used.size and (used[:, COL_ALIVE] < 0).any():
+            bad = int(np.argmax(used[:, COL_ALIVE] < 0))
+            raise ValueError(f"round {bad} < rounds={rounds} was never recorded")
+        return cls(
+            rounds=rounds,
+            alive=[int(v) for v in used[:, COL_ALIVE]],
+            frontier=[int(v) for v in used[:, COL_FRONTIER]],
+            selected=[int(v) for v in used[:, COL_SELECTED]],
+            tiles_skipped=[int(v) for v in used[:, COL_TILES_SKIPPED]],
+            tiles_total=int(tiles_total),
+            meta=dict(meta or {}),
+        )
+
+    # -- serialization ----------------------------------------------------
+
+    def to_dict(self) -> Dict[str, object]:
+        return dict(
+            rounds=self.rounds,
+            alive=list(self.alive),
+            frontier=list(self.frontier),
+            selected=list(self.selected),
+            tiles_skipped=list(self.tiles_skipped),
+            tiles_total=self.tiles_total,
+            meta=dict(self.meta),
+        )
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "RoundTrace":
+        return cls(
+            rounds=int(d["rounds"]),
+            alive=[int(v) for v in d["alive"]],
+            frontier=[int(v) for v in d["frontier"]],
+            selected=[int(v) for v in d["selected"]],
+            tiles_skipped=[int(v) for v in d["tiles_skipped"]],
+            tiles_total=int(d.get("tiles_total", 0)),
+            meta=dict(d.get("meta", {})),
+        )
+
+    def to_jsonl_line(self) -> str:
+        return json.dumps({"kind": "rounds", **self.to_dict()}, sort_keys=True)
+
+    @classmethod
+    def from_jsonl_line(cls, line: str) -> "RoundTrace":
+        d = json.loads(line)
+        if d.get("kind") != "rounds":
+            raise ValueError(f"not a rounds record: kind={d.get('kind')!r}")
+        return cls.from_dict(d)
+
+    # -- analysis ---------------------------------------------------------
+
+    def summary(self) -> Dict[str, object]:
+        """Compact scalars for BENCH rows / log lines: total selected, the
+        frontier-shrinkage profile, and the tile-gating win."""
+        if not self.rounds:
+            return dict(rounds=0, selected_total=0)
+        skip_frac = None
+        if self.tiles_total:
+            skip_frac = round(
+                sum(self.tiles_skipped) / (self.tiles_total * self.rounds), 4
+            )
+        return dict(
+            rounds=self.rounds,
+            alive0=self.alive[0],
+            alive_final=self.alive[-1],
+            selected_total=sum(self.selected),
+            frontier_peak=max(self.frontier),
+            frontier_final=self.frontier[-1],
+            tiles_skipped_mean=round(sum(self.tiles_skipped) / self.rounds, 1),
+            tiles_skip_frac=skip_frac,
+        )
+
+    def check_invariants(self) -> None:
+        """The monotonicity contracts the solver guarantees (tested by
+        tests/test_obs.py; also a cheap sanity hook for callers):
+
+        * alive is non-increasing round over round;
+        * every executed round selects ≥1 vertex (the global max-priority
+          alive vertex always survives phase ②), so selected ≥ 1;
+        * counts are bounded by alive₀.
+        """
+        for r in range(1, self.rounds):
+            if self.alive[r] > self.alive[r - 1]:
+                raise AssertionError(
+                    f"alive increased at round {r}: {self.alive[r-1]} -> {self.alive[r]}"
+                )
+        for r in range(self.rounds):
+            if self.selected[r] < 1:
+                raise AssertionError(f"round {r} selected {self.selected[r]} (< 1)")
+            if self.frontier[r] > self.alive[r]:
+                raise AssertionError(
+                    f"round {r} frontier {self.frontier[r]} > alive {self.alive[r]}"
+                )

@@ -1,0 +1,172 @@
+"""Span tracing: nested wall-clock phases for one request, JSONL export.
+
+A `Trace` is a per-request recorder; `trace_span(trace, "plan")` is the one
+instrumentation primitive, a context manager that times its body and
+appends a `Span` with the current nesting depth.  Passing ``trace=None``
+(the default everywhere) makes it a no-op with no timer reads, so the
+untraced hot path pays one `is None` check per seam.
+
+Span taxonomy (DESIGN.md §14) — names are dotted, layer-first:
+
+    service.step            one queue drain
+      service.batch         one packed bucket (meta: bucket, batch_size)
+    solver.solve            one front-door call
+      solver.plan           plan-cache lookup / tiling build
+      solver.pack           block-diagonal batch packing
+      solver.compile        cold-path lower().compile() (AOT; cache misses only)
+      solver.execute        compiled-program dispatch + block_until_ready
+      solver.validate       response validity check
+    solver.update           dyngraph repair route (meta: mode)
+
+The conflated pre-PR `solve_ms` split: on a compile-stat miss ("compiled",
+the existing `_note_signature` signal) the solver lowers and compiles
+ahead-of-time under `solver.compile`, then executes the compiled program
+under `solver.execute`; on a hit, only `solver.execute` appears.
+
+Optional `jax.profiler` bridge: `Trace(profiler=True)` wraps each span in
+`jax.profiler.TraceAnnotation` so spans land in any surrounding profiler
+capture.  Import is lazy and failure-tolerant — tracing never takes the
+solver down.
+"""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class Span:
+    name: str
+    start_ms: float          # offset from trace start
+    dur_ms: float
+    depth: int
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dict(
+            name=self.name,
+            start_ms=round(self.start_ms, 3),
+            dur_ms=round(self.dur_ms, 3),
+            depth=self.depth,
+        )
+        if self.meta:
+            d["meta"] = self.meta
+        return d
+
+
+class Trace:
+    """Per-request span recorder.  Not thread-safe by design — one Trace
+    belongs to one request flowing through one service step."""
+
+    def __init__(self, request_id: str = "", *, profiler: bool = False):
+        self.request_id = request_id
+        self.spans: List[Span] = []
+        self._t0 = time.perf_counter()
+        self._depth = 0
+        self._annot = None
+        if profiler:
+            try:
+                from jax.profiler import TraceAnnotation
+                self._annot = TraceAnnotation
+            except Exception:
+                self._annot = None
+
+    # -- recording --------------------------------------------------------
+
+    @contextmanager
+    def span(self, name: str, **meta):
+        start = time.perf_counter()
+        self._depth += 1
+        annot = self._annot(name) if self._annot is not None else None
+        if annot is not None:
+            annot.__enter__()
+        try:
+            yield self
+        finally:
+            if annot is not None:
+                annot.__exit__(None, None, None)
+            self._depth -= 1
+            end = time.perf_counter()
+            self.spans.append(Span(
+                name=name,
+                start_ms=(start - self._t0) * 1e3,
+                dur_ms=(end - start) * 1e3,
+                depth=self._depth,
+                meta={k: v for k, v in meta.items() if v is not None},
+            ))
+
+    def note(self, name: str, dur_ms: float, **meta) -> None:
+        """Record an already-measured duration as a span (for timings that
+        come from outside the context manager, e.g. a queue wait)."""
+        self.spans.append(Span(
+            name=name,
+            start_ms=(time.perf_counter() - self._t0) * 1e3 - dur_ms,
+            dur_ms=float(dur_ms),
+            depth=self._depth,
+            meta={k: v for k, v in meta.items() if v is not None},
+        ))
+
+    # -- query ------------------------------------------------------------
+
+    def total_ms(self, name: str) -> float:
+        return sum(s.dur_ms for s in self.spans if s.name == name)
+
+    # -- export -----------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, object]:
+        # spans are appended at exit, i.e. children before parents; emit in
+        # start order so the report tree reads top-down
+        ordered = sorted(self.spans, key=lambda s: s.start_ms)
+        return dict(
+            request_id=self.request_id,
+            spans=[s.to_dict() for s in ordered],
+        )
+
+    def to_jsonl_line(self) -> str:
+        return json.dumps({"kind": "trace", **self.to_dict()}, sort_keys=True)
+
+
+@contextmanager
+def trace_span(trace: Optional[Trace], name: str, **meta):
+    """`with trace_span(trace, "solver.plan"): ...` — no-op when trace is
+    None.  The single seam primitive every layer uses."""
+    if trace is None:
+        yield None
+        return
+    with trace.span(name, **meta):
+        yield trace
+
+
+class JsonlWriter:
+    """Append-only JSONL sink for trace / rounds / metrics records.
+
+    Opens lazily on first write so constructing a service with a trace path
+    configured but never exercised leaves no empty file behind."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = None
+
+    def write_line(self, line: str) -> None:
+        if self._fh is None:
+            self._fh = open(self.path, "a")
+        self._fh.write(line + "\n")
+        self._fh.flush()
+
+    def write_trace(self, trace: Trace) -> None:
+        self.write_line(trace.to_jsonl_line())
+
+    def write_rounds(self, rt) -> None:
+        self.write_line(rt.to_jsonl_line())
+
+    def write_metrics(self, snapshot: Dict[str, object]) -> None:
+        self.write_line(json.dumps(
+            {"kind": "metrics", "metrics": snapshot}, sort_keys=True))
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None

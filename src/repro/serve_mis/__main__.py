@@ -64,6 +64,15 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--stream-ingest", action="store_true",
                    help="ingest via the chunked readers (dyngraph.stream) "
                         "instead of readlines()")
+    p.add_argument("--telemetry", action="store_true",
+                   help="record the on-device round buffer; responses carry "
+                        "a per-round summary (DESIGN.md §14)")
+    p.add_argument("--trace-path", default=None, metavar="FILE",
+                   help="append span traces + round series as JSONL here "
+                        "(render with `python -m repro.obs report FILE`)")
+    p.add_argument("--metrics", action="store_true",
+                   help="print the merged metrics snapshot as JSON on stderr "
+                        "at exit")
     return p
 
 
@@ -79,6 +88,8 @@ def main(argv=None) -> int:
         cache_dir=args.cache_dir,
         seed=args.seed,
         repair=args.repair,
+        telemetry=args.telemetry,
+        trace_path=args.trace_path,
     ))
 
     def emit(responses) -> int:
@@ -155,6 +166,9 @@ def main(argv=None) -> int:
         f"disk={p['disk_hits']} built={p['misses']} failures={failures}",
         file=sys.stderr,
     )
+    if args.metrics:
+        print(json.dumps(service.metrics_snapshot(), sort_keys=True),
+              file=sys.stderr)
     return 1 if failures else 0
 
 

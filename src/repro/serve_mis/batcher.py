@@ -48,6 +48,9 @@ from repro.core.heuristics import Priorities, make_priorities
 from repro.core.spmv import _NEG
 from repro.core.tiling import BlockTiledGraph, next_pow2, packed_words
 from repro.graphs.graph import Graph
+# module-level code with no layer instance to own metrics records into the
+# process-wide registry (repro.obs; DESIGN.md §14)
+from repro.obs import metrics as obs_metrics
 from repro.serve_mis.planner import TilePlan
 
 
@@ -109,7 +112,10 @@ def _member_priorities(
     as `MISService` does by owning one cache per service instance).
     """
     if cache is not None and plan.key in cache:
+        obs_metrics.counter("batcher.priority_cache.hits").inc()
         return cache[plan.key]
+    if cache is not None:
+        obs_metrics.counter("batcher.priority_cache.misses").inc()
     pri = make_priorities(heuristic, key, plan.n_nodes, plan.g.degrees())
     entry = (
         np.asarray(pri.select),

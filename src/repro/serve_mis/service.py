@@ -38,6 +38,8 @@ from repro.api import Solver, SolveOptions
 from repro.core.validate import is_valid_mis_jit
 from repro.dyngraph.delta import EdgeDelta
 from repro.graphs.graph import Graph
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+from repro.obs.trace import JsonlWriter, Trace, trace_span
 from repro.serve_mis.io import load_graph
 from repro.serve_mis.planner import TilePlan
 
@@ -65,6 +67,12 @@ class ServeConfig:
     # matches plan_cache_entries by default: retention must not out-pin
     # the plan cache's own memory bound.
     result_entries: int = 256
+    # observability (repro.obs, DESIGN.md §14): `telemetry` turns on the
+    # on-device round buffer (responses carry per-round series);
+    # `trace_path` appends span traces + round series as JSONL there (each
+    # worker step is one Trace).  Both off = the pre-obs zero-cost path.
+    telemetry: bool = False
+    trace_path: Optional[str] = None
 
     def solve_options(self) -> SolveOptions:
         """The Solver half of this config (the front door, DESIGN.md §10)."""
@@ -83,6 +91,7 @@ class ServeConfig:
             cache_dir=self.cache_dir,
             plan_cache_entries=self.plan_cache_entries,
             repair=self.repair,
+            telemetry=self.telemetry,
         )
 
 
@@ -155,7 +164,7 @@ class MISService:
         self.planner = self.solver.plans
         self._queue: Deque[Union[Request, UpdateRequest]] = deque()
         self._next_id = 0
-        self._requests = 0
+        self._steps = 0
         # completed results by request id — the targets `submit_update`
         # may name (bounded FIFO; a long stream retires old targets)
         self._results: "OrderedDict[int, object]" = OrderedDict()
@@ -163,14 +172,33 @@ class MISService:
         # the base key and the jitted packed dispatch now
         self._base_key = self.solver._base_key
         self._solve = self.solver._jit_packed
+        # observability (repro.obs): service-level metrics registry + the
+        # optional JSONL sink for span traces and round series
+        self.metrics = MetricsRegistry("service")
+        self.metrics.counter("service.requests")
+        self._trace_writer = (
+            JsonlWriter(config.trace_path) if config.trace_path else None
+        )
 
     @property
     def stats(self) -> Dict[str, int]:
         return {
-            "requests": self._requests,
+            "requests": self.metrics.counter("service.requests").value,
             "batches": self.solver.stats["batches"],
             "compiles": self.solver.stats["compiles"],
         }
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """One operator-facing dict over every registry this service can
+        see: its own instruments, the Solver's, the plan cache's, and the
+        process-wide registry (batcher priority cache, repair decisions).
+        Names are layer-prefixed (`service.*`, `solver.*`, `plan_cache.*`,
+        `batcher.*`, `repair.*`), so the flat merge cannot collide."""
+        out: Dict[str, object] = {}
+        for reg in (REGISTRY, self.solver.metrics, self.planner.metrics,
+                    self.metrics):
+            out.update(reg.snapshot())
+        return out
 
     # -- intake ------------------------------------------------------------
 
@@ -206,7 +234,7 @@ class MISService:
             t_enqueue=time.perf_counter(),
         )
         self._next_id += 1
-        self._requests += 1
+        self.metrics.counter("service.requests").inc()
         self._queue.append(req)
         return req.id
 
@@ -233,7 +261,7 @@ class MISService:
             t_enqueue=time.perf_counter(),
         )
         self._next_id += 1
-        self._requests += 1
+        self.metrics.counter("service.requests").inc()
         self._queue.append(req)
         return req.id
 
@@ -260,29 +288,44 @@ class MISService:
             self._queue.popleft()
             for _ in range(min(self.config.max_batch, len(self._queue)))
         ]
+        # one Trace per worker step, created only when a sink is configured
+        # — tr=None keeps the Solver on its untraced (pre-obs) dispatch path
+        tr = (
+            Trace(f"step-{self._steps}", profiler=False)
+            if self._trace_writer is not None else None
+        )
+        self._steps += 1
+        self.metrics.counter("service.steps").inc()
+        self.metrics.histogram("service.window").observe(len(reqs))
         t_pop = time.perf_counter()
         solves = [r for r in reqs if isinstance(r, Request)]
-        results = dict(zip(
-            (r.id for r in solves),
-            self.solver.solve_many([r.plan for r in solves]),
-        ))
+        with trace_span(tr, "service.batch", size=len(solves)):
+            results = dict(zip(
+                (r.id for r in solves),
+                self.solver.solve_many(
+                    [r.plan for r in solves], trace=tr
+                ),
+            ))
         for r in reqs:
             if isinstance(r, UpdateRequest):
                 try:
-                    results[r.id] = self._run_update(r)
+                    results[r.id] = self._run_update(r, tr)
                 except (ValueError, KeyError) as e:
                     results[r.id] = e
 
         responses = []
         for req, res in ((r, results[r.id]) for r in reqs):
+            queue_ms = round((t_pop - req.t_enqueue) * 1e3, 3)
+            self.metrics.histogram("service.queue_ms").observe(queue_ms)
             if isinstance(res, Exception):
+                self.metrics.counter("service.errors").inc()
                 responses.append(Response(
                     id=req.id, source=req.source,
                     in_mis=np.zeros(0, dtype=bool), mis_size=0,
                     independent=False, maximal=False, converged=False,
                     rounds=0,
                     stats=dict(
-                        queue_ms=round((t_pop - req.t_enqueue) * 1e3, 3),
+                        queue_ms=queue_ms,
                         error=f"{type(res).__name__}: {res}",
                         batch_size=len(reqs),
                     ),
@@ -290,25 +333,34 @@ class MISService:
                 continue
             independent = maximal = True
             if self.config.validate:
-                independent, maximal = is_valid_mis_jit(
-                    res.plan.g, jnp.asarray(res.in_mis_plan)
-                )
+                with trace_span(tr, "service.validate", id=req.id):
+                    independent, maximal = is_valid_mis_jit(
+                        res.plan.g, jnp.asarray(res.in_mis_plan)
+                    )
             in_mis = np.asarray(res.in_mis).astype(bool)
             is_update = isinstance(req, UpdateRequest)
             stats = dict(
-                queue_ms=round((t_pop - req.t_enqueue) * 1e3, 3),
+                queue_ms=queue_ms,
                 solve_ms=res.stats.get("solve_ms", 0.0),
                 plan_cache=res.stats["patch"] if is_update else req.plan_status,
                 bucket=res.stats.get("bucket", res.placement),
                 compile=res.stats.get("compile", "n/a"),
                 batch_size=len(reqs),
             )
+            # traced dispatches split solve_ms into its phases — surface
+            # them (plus the batch wall the member's share came from)
+            for k in ("batch_ms", "compile_ms", "execute_ms"):
+                if k in res.stats:
+                    stats[k] = res.stats[k]
             if is_update:
                 stats.update(
                     repair=res.stats["repair"],
                     plan_epoch=res.stats["plan_epoch"],
                     base_id=req.base_id,
                 )
+            rt = getattr(res, "telemetry", None)
+            if rt is not None:
+                stats["rounds_summary"] = rt.summary()
             responses.append(Response(
                 id=req.id,
                 source=req.source,
@@ -323,9 +375,20 @@ class MISService:
             self._results[req.id] = res
             while len(self._results) > max(self.config.result_entries, 1):
                 self._results.popitem(last=False)
+        if self._trace_writer is not None:
+            self._trace_writer.write_trace(tr)
+            # one rounds record per distinct RoundTrace — batched members
+            # share the batch-global series, so dedupe by object identity
+            seen_ids = set()
+            for req in reqs:
+                res = results[req.id]
+                rt = getattr(res, "telemetry", None)
+                if rt is not None and id(rt) not in seen_ids:
+                    seen_ids.add(id(rt))
+                    self._trace_writer.write_rounds(rt)
         return responses
 
-    def _run_update(self, r: UpdateRequest):
+    def _run_update(self, r: UpdateRequest, trace: Optional[Trace] = None):
         """One update's repair dispatch, under the CONTENT-DERIVED key of
         the patched graph — the key a fresh submission of that mutated
         graph would be solved under (`Solver.request_key`), and, for an
@@ -345,7 +408,7 @@ class MISService:
         # would always read 'mem' — overwrite with the real layer
         plan2, patch_status = self.solver.plans.apply_delta(prior.plan, r.delta)
         res = self.solver.update(
-            prior, r.delta, key=self.solver.request_key(plan2)
+            prior, r.delta, key=self.solver.request_key(plan2), trace=trace
         )
         res.stats["patch"] = patch_status
         return res

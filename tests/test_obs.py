@@ -1,0 +1,367 @@
+"""Observability subsystem (DESIGN.md §14): round telemetry bit-neutrality
+and invariants across engine × storage × frontier, `Solver.profile` parity,
+span tracing with the compile/execute split, batched solve_ms attribution,
+metrics-registry views, the JSONL report CLI, and Guard 5 (host-silent hot
+loop)."""
+import importlib.util
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import SolveOptions, Solver
+from repro.core.engine import engine_names, get_engine
+from repro.graphs.generators import erdos_renyi
+from repro.obs import (
+    COL_ALIVE,
+    COL_FRONTIER,
+    COL_SELECTED,
+    COL_TILES_SKIPPED,
+    REGISTRY,
+    MetricsRegistry,
+    RoundTrace,
+    TELEMETRY_COLS,
+    TELEMETRY_FILL,
+    Trace,
+    trace_span,
+)
+from repro.obs.report import main as report_main
+from repro.serve_mis.service import MISService, ServeConfig
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+ENGINES = engine_names()
+STORAGES = ("int8", "bitpack")
+FRONTIERS = ("dense", "bitwise")
+
+
+def _graph(n=128, seed=0):
+    return erdos_renyi(n, avg_deg=6.0, seed=seed)
+
+
+def _opts(engine, storage, frontier, telemetry, **kw):
+    return SolveOptions(
+        engine=engine, storage=storage, frontier=frontier,
+        telemetry=telemetry, tile_size=32, placement="local", **kw,
+    )
+
+
+# --------------------------------------------------------------------------
+# metrics registry
+# --------------------------------------------------------------------------
+
+def test_metrics_registry_basics():
+    reg = MetricsRegistry("t")
+    reg.counter("a").inc()
+    reg.counter("a").inc(2)
+    reg.gauge("g").set(7)
+    reg.histogram("h").observe(1.0)
+    reg.histogram("h").observe(3.0)
+    snap = reg.snapshot()
+    assert snap["a"] == 3
+    assert snap["g"] == 7.0
+    assert snap["h"] == dict(count=2, total=4.0, min=1.0, max=3.0, mean=2.0)
+    # first registration fixes the kind
+    with pytest.raises(TypeError):
+        reg.gauge("a")
+
+
+def test_stats_properties_are_metrics_views():
+    """The legacy dicts survive as read-only views — same keys, same ints —
+    so nothing downstream re-learns a spelling."""
+    solver = Solver(SolveOptions(engine="tiled_ref", placement="local"))
+    assert solver.stats == {"solves": 0, "batches": 0, "compiles": 0}
+    solver.solve(_graph())
+    assert solver.stats["solves"] == 1
+    assert solver.stats["compiles"] == 1
+    with pytest.raises(AttributeError):
+        solver.stats = {}
+    assert set(solver.plans.stats) == {
+        "mem_hits", "disk_hits", "misses", "evicted_stale",
+    }
+    assert solver.plans.stats["misses"] == 1
+
+
+# --------------------------------------------------------------------------
+# RoundTrace: construction, JSONL round-trip, validation
+# --------------------------------------------------------------------------
+
+def _fake_buffer(rows):
+    buf = np.full((8, TELEMETRY_COLS), TELEMETRY_FILL, np.int32)
+    for i, (a, f, s, k) in enumerate(rows):
+        buf[i, COL_ALIVE] = a
+        buf[i, COL_FRONTIER] = f
+        buf[i, COL_SELECTED] = s
+        buf[i, COL_TILES_SKIPPED] = k
+    return buf
+
+
+def test_roundtrace_roundtrip_and_summary():
+    buf = _fake_buffer([(10, 4, 3, 1), (5, 2, 2, 2), (1, 1, 1, 3)])
+    rt = RoundTrace.from_buffer(buf, 3, tiles_total=4, meta={"engine": "x"})
+    rt.check_invariants()
+    assert rt.rounds == 3 and list(rt.alive) == [10, 5, 1]
+    line = rt.to_jsonl_line()
+    assert json.loads(line)["kind"] == "rounds"
+    rt2 = RoundTrace.from_jsonl_line(line)
+    assert rt2.to_dict() == rt.to_dict()
+    s = rt.summary()
+    assert s["alive0"] == 10 and s["selected_total"] == 6
+    assert s["frontier_peak"] == 4
+
+
+def test_roundtrace_rejects_bad_buffers():
+    with pytest.raises(ValueError):
+        RoundTrace.from_buffer(np.zeros((4, TELEMETRY_COLS + 1), np.int32), 2)
+    # a used row still holding the fill value = the loop never wrote it
+    buf = _fake_buffer([(10, 4, 3, 0)])
+    with pytest.raises(ValueError):
+        RoundTrace.from_buffer(buf, 2)
+    # alive must be non-increasing
+    rt = RoundTrace.from_buffer(_fake_buffer([(5, 2, 2, 0), (9, 1, 1, 0)]), 2)
+    with pytest.raises(AssertionError):
+        rt.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# telemetry: bit-neutral, invariant-clean, across every combination
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_telemetry_bit_identity_and_invariants(engine):
+    """Telemetry on/off must trace to the same solution for every storage ×
+    frontier, and the recorded series must satisfy the round invariants."""
+    g = _graph(n=128, seed=3)
+    for storage in STORAGES:
+        for frontier in FRONTIERS:
+            off = Solver(_opts(engine, storage, frontier, False)).solve(g)
+            on = Solver(_opts(engine, storage, frontier, True)).solve(g)
+            assert np.array_equal(
+                np.asarray(off.in_mis), np.asarray(on.in_mis)
+            ), (engine, storage, frontier)
+            assert off.rounds == on.rounds
+            rt = on.telemetry
+            assert rt is not None and off.telemetry is None
+            rt.check_invariants()
+            # the buffer's trimmed length IS the convergence round count,
+            # and the series opens on the full vertex set
+            assert rt.rounds == on.rounds
+            assert rt.alive[0] == g.n_nodes
+            # a cold solve never evicts: selections accumulate to |MIS|
+            assert sum(rt.selected) == on.mis_size
+            assert rt.meta["engine"] == engine
+            assert rt.meta["frontier"] in ("dense", "bitwise")
+
+
+def test_telemetry_tiles_skipped_bounded():
+    g = _graph(n=256, seed=5)
+    res = Solver(_opts("tiled_ref", "bitpack", "auto", True)).solve(g)
+    rt = res.telemetry
+    assert rt.tiles_total > 0
+    assert min(rt.tiles_skipped) >= 0
+    assert max(rt.tiles_skipped) <= rt.tiles_total
+
+
+# --------------------------------------------------------------------------
+# Solver.profile parity (satellite: PR 6 left the bitwise frontier uncovered)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_profile_bit_matches_solve(engine):
+    g = _graph(n=128, seed=7)
+    for storage in STORAGES:
+        for frontier in FRONTIERS:
+            solver = Solver(_opts(engine, storage, frontier, False))
+            res = solver.solve(g)
+            prof, times = solver.profile(g)
+            assert np.array_equal(
+                np.asarray(res.in_mis), np.asarray(prof.in_mis)
+            ), (engine, storage, frontier)
+            assert prof.rounds == res.rounds
+            assert set(times) >= {"phase1", "phase2", "phase3", "rounds"}
+            assert times["rounds"] == res.rounds
+            assert all(
+                times[k] >= 0.0 for k in ("phase1", "phase2", "phase3")
+            )
+            # the stepped loop did real work: some phase accumulated time
+            assert times["phase1"] + times["phase2"] + times["phase3"] > 0
+
+
+# --------------------------------------------------------------------------
+# span tracing + the compile/execute split
+# --------------------------------------------------------------------------
+
+def test_trace_span_tree_and_noop():
+    tr = Trace("t")
+    with trace_span(tr, "outer", k=1):
+        with trace_span(tr, "inner"):
+            pass
+    names = [(s.name, s.depth) for s in tr.spans]
+    assert ("outer", 0) in names and ("inner", 1) in names
+    d = json.loads(tr.to_jsonl_line())
+    assert d["kind"] == "trace" and len(d["spans"]) == 2
+    # trace=None is a no-op seam, not an error
+    with trace_span(None, "ignored"):
+        pass
+
+
+def test_traced_solve_splits_compile_from_execute():
+    g = _graph(n=128, seed=9)
+    solver = Solver(_opts("tiled_ref", "int8", "auto", False))
+    tr = Trace("cold")
+    res = solver.solve(g, trace=tr)
+    names = [s.name for s in tr.spans]
+    assert "solver.plan" in names and "solver.compile" in names
+    assert "solver.execute" in names
+    assert res.stats["compile_ms"] > 0 and res.stats["execute_ms"] >= 0
+    assert res.stats["solve_ms"] >= res.stats["execute_ms"]
+    # warm re-dispatch: AOT cache hit, no compile span, identical bits
+    tr2 = Trace("warm")
+    res2 = solver.solve(g, trace=tr2)
+    assert "solver.compile" not in [s.name for s in tr2.spans]
+    assert "compile_ms" not in res2.stats
+    assert np.array_equal(np.asarray(res.in_mis), np.asarray(res2.in_mis))
+    # traced and untraced dispatches agree bit-for-bit too
+    res3 = Solver(_opts("tiled_ref", "int8", "auto", False)).solve(g)
+    assert np.array_equal(np.asarray(res.in_mis), np.asarray(res3.in_mis))
+
+
+def test_batched_solve_ms_attribution():
+    """Members report their SHARE of the batch wall plus the explicit
+    `batch_ms` — the old code booked the whole batch on every member."""
+    gs = [_graph(n=96, seed=s) for s in (1, 2, 3)]
+    solver = Solver(_opts("tiled_ref", "int8", "auto", True))
+    tr = Trace("batch")
+    plans = [solver.plan(g) for g in gs]
+    results = solver.solve_many(plans, trace=tr)
+    assert len(results) == 3
+    for r in results:
+        assert r.stats["batch_size"] == 3
+        assert r.stats["batch_ms"] == pytest.approx(
+            r.stats["solve_ms"] * 3, rel=0.01
+        )
+        assert r.telemetry is not None
+        assert r.telemetry.meta["batch_size"] == 3
+    # batch-global series is shared, not duplicated per member
+    assert len({id(r.telemetry) for r in results}) == 1
+
+
+# --------------------------------------------------------------------------
+# service: end-to-end JSONL through the report CLI
+# --------------------------------------------------------------------------
+
+def test_service_telemetry_trace_jsonl(tmp_path):
+    trace_path = str(tmp_path / "trace.jsonl")
+    svc = MISService(ServeConfig(
+        engine="tiled_ref", max_batch=4,
+        telemetry=True, trace_path=trace_path,
+    ))
+    svc.submit(_graph(n=96, seed=11))
+    svc.submit(_graph(n=96, seed=12))
+    responses = svc.drain()
+    assert all(r.valid for r in responses)
+    for r in responses:
+        assert "rounds_summary" in r.stats
+        # the series is BATCH-global (like `converged`): its round count
+        # bounds every member's own convergence round from above
+        assert r.stats["rounds_summary"]["rounds"] >= r.rounds
+        assert "batch_ms" in r.stats and "execute_ms" in r.stats
+    kinds = [
+        json.loads(line)["kind"]
+        for line in open(trace_path).read().splitlines()
+    ]
+    assert "trace" in kinds and "rounds" in kinds
+    # the merged snapshot spans every layer's prefix
+    snap = svc.metrics_snapshot()
+    assert snap["service.requests"] == 2
+    assert any(k.startswith("solver.") for k in snap)
+    assert any(k.startswith("plan_cache.") for k in snap)
+    assert svc.stats["requests"] == 2
+    # the report CLI renders it (exit 0) and rejects an empty file (exit 2)
+    assert report_main(["report", trace_path]) == 0
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert report_main(["report", str(empty)]) == 2
+
+
+def test_service_disabled_obs_is_quiet(tmp_path):
+    """No trace_path, no telemetry → no writer, no telemetry payloads, and
+    the response stats keep exactly the legacy solve keys."""
+    svc = MISService(ServeConfig(engine="tiled_ref", max_batch=2))
+    svc.submit(_graph(n=96, seed=13))
+    (r,) = svc.drain()
+    assert svc._trace_writer is None
+    assert "rounds_summary" not in r.stats
+    assert "compile_ms" not in r.stats
+    assert r.valid
+
+
+# --------------------------------------------------------------------------
+# repair metrics (process registry) — eager-only contract
+# --------------------------------------------------------------------------
+
+def test_update_records_repair_metrics():
+    from repro.dyngraph.delta import EdgeDelta
+
+    before = REGISTRY.snapshot().get("repair.incremental", 0)
+    solver = Solver(_opts(
+        "tiled_ref", "int8", "auto", True, repair="incremental",
+    ))
+    g = _graph(n=96, seed=15)
+    res = solver.solve(g)
+    res2 = solver.update(res, EdgeDelta.make([0, 7], [5, 9], [], []))
+    assert res2.stats["repair"] == "incremental"
+    assert res2.telemetry is not None
+    assert res2.telemetry.meta["scope"] == "repair"
+    assert REGISTRY.snapshot()["repair.incremental"] == before + 1
+
+
+# --------------------------------------------------------------------------
+# Guard 5: the hot loop stays host-silent
+# --------------------------------------------------------------------------
+
+def _load_ci_guards():
+    spec = importlib.util.spec_from_file_location(
+        "ci_guards", ROOT / "tools" / "ci_guards.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_guard5_detects_host_roundtrips(tmp_path):
+    guards = _load_ci_guards()
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""
+        import jax
+        from jax.experimental import io_callback
+        from jax.experimental import host_callback as hcb
+
+        def f(x):
+            jax.debug.print("x = {}", x)
+            io_callback(print, None, x)
+            return x
+    """))
+    msgs = guards.host_silence_violations(bad)
+    assert len(msgs) == 3, msgs
+    assert any("debug.print" in m for m in msgs)
+    assert any("io_callback" in m for m in msgs)
+    assert any("host_callback" in m for m in msgs)
+    clean = tmp_path / "clean.py"
+    clean.write_text("import jax\n\ndef f(x):\n    return x + 1\n")
+    assert guards.host_silence_violations(clean) == []
+
+
+def test_ci_guards_clean_on_repo():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "ci_guards.py")],
+        capture_output=True, text=True, cwd=str(ROOT),
+        env=dict(os.environ, PYTHONPATH=str(ROOT / "src")),
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "host-silence" in proc.stdout

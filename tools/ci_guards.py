@@ -35,6 +35,15 @@ path, after the convergence loop) and `core/distributed.py::gather_bool`
 other densify would smuggle a (n_padded,) bool round-trip back into the
 packed round body the bitwise mode exists to eliminate.
 
+Guard 5 — the hot loop stays host-silent (DESIGN.md §14): under
+`src/repro/core/` and `src/repro/kernels/`, no call to `io_callback` /
+`pure_callback` / `debug_callback` / `debug.print`, and no reference to the
+legacy `host_callback` module at all.  Observability of the round loop goes
+through the on-device telemetry buffer (`repro.obs.rounds`) — ONE
+device→host transfer at the epilogue — never through per-round host
+round-trips, which would serialise the `lax.while_loop` on host sync and
+quietly destroy the very timings the telemetry exists to measure.
+
 Run: python tools/ci_guards.py   (exit 0 = clean)
 """
 from __future__ import annotations
@@ -56,6 +65,15 @@ ORACLE_FN_SUFFIX = "_oracle"
 TILE_UNPACKS = ("unpack_tile_bits", "unpack_tile_mask")
 TILE_DENSE_DISPATCH = ("dense_tiles", "dense_tile_mask")
 DENSIFY_CALLS = TILE_UNPACKS + TILE_DENSE_DISPATCH
+
+# host round-trips banned from the device-hot modules (Guard 5)
+HOT_DIRS = ("core", "kernels")          # relative to src/repro
+HOST_CALLBACK_CALLS = (
+    "io_callback", "pure_callback", "debug_callback",
+)
+# `jax.debug.print(...)` parses as Attribute(attr='print') on a Name 'debug'
+# or Attribute '...debug' receiver — catch the attr name + receiver check
+HOST_PRINT_RECEIVERS = ("debug",)
 
 # frontier densifies (Guard 4)
 FRONTIER_UNPACKS = ("unpack_frontier_bits", "unpack_frontier_words")
@@ -164,6 +182,54 @@ def frontier_violations(path: pathlib.Path) -> list:
     return out
 
 
+def host_silence_violations(path: pathlib.Path) -> list:
+    """Guard 5: no host callbacks or debug prints in the device-hot modules.
+
+    Catches the call forms (`io_callback(...)`, `jax.experimental
+    .io_callback(...)`, `pure_callback`, `debug_callback`,
+    `jax.debug.print(...)`) via the AST and the legacy `host_callback`
+    module by name anywhere in the tree (imports included)."""
+    src = path.read_text()
+    out = []
+    tree = ast.parse(src, filename=str(path))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name in HOST_CALLBACK_CALLS:
+                out.append(
+                    f"{path}:{node.lineno}: {name}() in a device-hot module "
+                    f"— round-loop observability goes through the telemetry "
+                    f"buffer (repro.obs.rounds), never host callbacks"
+                )
+            elif (
+                name == "print"
+                and isinstance(node.func, ast.Attribute)
+                and (
+                    (isinstance(node.func.value, ast.Name)
+                     and node.func.value.id in HOST_PRINT_RECEIVERS)
+                    or (isinstance(node.func.value, ast.Attribute)
+                        and node.func.value.attr in HOST_PRINT_RECEIVERS)
+                )
+            ):
+                out.append(
+                    f"{path}:{node.lineno}: debug.print() in a device-hot "
+                    f"module — it forces a host sync per round inside the "
+                    f"while_loop"
+                )
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            names = [a.name for a in node.names]
+            module = getattr(node, "module", "") or ""
+            if "host_callback" in module or any(
+                "host_callback" in n for n in names
+            ):
+                out.append(
+                    f"{path}:{node.lineno}: host_callback import in a "
+                    f"device-hot module — the legacy host round-trip API is "
+                    f"banned here"
+                )
+    return out
+
+
 def main() -> int:
     problems = []
     for path in sorted(KERNEL_DIR.glob("*.py")):
@@ -177,19 +243,25 @@ def main() -> int:
     for path in sorted(SRC_DIR.rglob("*.py")):
         problems += frontier_violations(path)
     n_frontier = len(problems) - n_kernel - n_dyngraph
+    n_before_host = len(problems)
+    for d in HOT_DIRS:
+        for path in sorted((SRC_DIR / d).rglob("*.py")):
+            problems += host_silence_violations(path)
+    n_host = len(problems) - n_before_host
     for p in problems:
         print(p, file=sys.stderr)
     if problems:
         print(
-            f"\n{len(problems)} packed-representation guard violation(s) "
+            f"\n{len(problems)} guard violation(s) "
             f"({n_kernel} kernel, {n_dyngraph} dyngraph, {n_frontier} "
-            f"frontier): HBM and the round loop must only ever see packed "
-            f"words outside the oracle/int8/epilogue paths",
+            f"frontier, {n_host} host-silence): HBM and the round loop must "
+            f"only ever see packed words outside the oracle/int8/epilogue "
+            f"paths, and the hot loop never talks to the host mid-round",
             file=sys.stderr,
         )
         return 1
     print(
-        "ci_guards: kernel + dyngraph + frontier packed-representation "
+        "ci_guards: kernel + dyngraph + frontier + host-silence "
         "guards clean"
     )
     return 0
