@@ -252,7 +252,7 @@ def _tc_mis_impl(
 # instrumented twin (python-stepped) for the Fig.-1 phase profiler
 # --------------------------------------------------------------------------
 
-def _run_phases_impl(
+def _run_phases_impl(  # repro-lint: disable=RPR010,RPR011 host-stepped profiler twin: per-phase wall timing requires sync
     g: Graph,
     tiled: BlockTiledGraph,
     key: jax.Array,

@@ -1,0 +1,6 @@
+"""Entry point: `python -m repro.lint [paths...]`."""
+import sys
+
+from repro.lint.cli import main
+
+sys.exit(main())

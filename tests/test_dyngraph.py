@@ -523,29 +523,27 @@ def test_load_delta_format(tmp_path):
 # ---------------------------------------------------------------------------
 
 
-def _load_ci_guards():
-    root = pathlib.Path(__file__).resolve().parent.parent
-    spec = importlib.util.spec_from_file_location(
-        "ci_guards", root / "tools" / "ci_guards.py"
-    )
-    mod = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(mod)
-    return mod
-
-
 def test_ci_guard_dyngraph_clean_and_detects_violations(tmp_path):
-    guards = _load_ci_guards()
-    # the shipped dyngraph modules are clean
-    for path in sorted(guards.DYNGRAPH_DIR.glob("*.py")):
-        assert guards.dyngraph_violations(path) == [], str(path)
-    assert guards.main() == 0
+    from repro.lint.analysis import load_universe
+    from repro.lint.cli import main as lint_main
+    from repro.lint.rules import get_rules, run_rules
+
+    # the shipped dyngraph modules are clean (guard rule RPR003)
+    root = pathlib.Path(__file__).resolve().parent.parent
+    assert lint_main(
+        ["--rules", "RPR003", "--no-baseline", str(root / "src" / "repro")]
+    ) == 0
     # a densify outside an *_oracle body is flagged; inside one is allowed
-    bad = tmp_path / "sneaky.py"
+    bad = tmp_path / "src" / "repro" / "dyngraph" / "sneaky.py"
+    bad.parent.mkdir(parents=True)
     bad.write_text(
         "def patch(t):\n"
         "    return unpack_tile_bits(t.tiles, t.tile_size)\n"
         "def check_oracle(t):\n"
         "    return dense_tiles(t.tiles, t.tile_size)\n"
     )
-    problems = guards.dyngraph_violations(bad)
-    assert len(problems) == 1 and "unpack_tile_bits" in problems[0]
+    ctx = load_universe([tmp_path / "src"])
+    problems = [
+        f for f in run_rules(ctx, get_rules(["RPR003"])) if f.active
+    ]
+    assert len(problems) == 1 and "unpack_tile_bits" in problems[0].message

@@ -325,18 +325,17 @@ def test_update_records_repair_metrics():
 # Guard 5: the hot loop stays host-silent
 # --------------------------------------------------------------------------
 
-def _load_ci_guards():
-    spec = importlib.util.spec_from_file_location(
-        "ci_guards", ROOT / "tools" / "ci_guards.py"
-    )
-    mod = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(mod)
-    return mod
+def _guard5_findings(tree_root):
+    from repro.lint.analysis import load_universe
+    from repro.lint.rules import get_rules, run_rules
+
+    ctx = load_universe([tree_root])
+    return [f for f in run_rules(ctx, get_rules(["RPR005"])) if f.active]
 
 
 def test_guard5_detects_host_roundtrips(tmp_path):
-    guards = _load_ci_guards()
-    bad = tmp_path / "bad.py"
+    bad = tmp_path / "src" / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
     bad.write_text(textwrap.dedent("""
         import jax
         from jax.experimental import io_callback
@@ -347,14 +346,13 @@ def test_guard5_detects_host_roundtrips(tmp_path):
             io_callback(print, None, x)
             return x
     """))
-    msgs = guards.host_silence_violations(bad)
+    msgs = [f.message for f in _guard5_findings(tmp_path / "src")]
     assert len(msgs) == 3, msgs
     assert any("debug.print" in m for m in msgs)
     assert any("io_callback" in m for m in msgs)
     assert any("host_callback" in m for m in msgs)
-    clean = tmp_path / "clean.py"
-    clean.write_text("import jax\n\ndef f(x):\n    return x + 1\n")
-    assert guards.host_silence_violations(clean) == []
+    bad.write_text("import jax\n\ndef f(x):\n    return x + 1\n")
+    assert _guard5_findings(tmp_path / "src") == []
 
 
 def test_ci_guards_clean_on_repo():
@@ -364,4 +362,4 @@ def test_ci_guards_clean_on_repo():
         env=dict(os.environ, PYTHONPATH=str(ROOT / "src")),
     )
     assert proc.returncode == 0, proc.stdout + proc.stderr
-    assert "host-silence" in proc.stdout
+    assert "0 error(s)" in proc.stdout

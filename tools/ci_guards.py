@@ -1,271 +1,27 @@
-"""CI source guards that a grep can't express precisely (DESIGN.md §11–§13).
+#!/usr/bin/env python3
+"""Thin compatibility shim over `python -m repro.lint` (DESIGN.md §15).
 
-Guard 1 — packed tiles must stay packed until VMEM: in the kernel modules
-(`src/repro/kernels/`, excluding the oracle `ref.py`), `unpack_tile_bits` /
-`unpack_tile_mask` may only be CALLED inside Pallas kernel-body functions
-(names ending in `_kernel`).  An unpack anywhere else — e.g. in `ops.py`
-before the `pallas_call` — would materialise the dense (nt, T, T) array in
-HBM and forfeit the 8× DMA reduction the storage axis exists for.  The jnp
-oracle paths (`kernels/ref.py`, `core/engine.py`) are the sanctioned
-exceptions.
-
-Guard 2 — kernel modules must not densify via the whole-array helpers
-either: `dense_tiles` / `dense_tile_mask` (the oracle dispatches) and
-`to_storage` (the format converter) never appear under `src/repro/kernels/`
-outside `ref.py`.
-
-Guard 3 — the dyngraph delta path edits packed tiles AS packed words
-(word-level bit edits, DESIGN.md §12): under `src/repro/dyngraph/`, none of
-`unpack_tile_bits` / `unpack_tile_mask` / `dense_tiles` / `dense_tile_mask`
-/ `to_storage` may be called outside a function whose name ends in
-`_oracle` (the sanctioned densify path for reference checks).  A densify in
-`retile.py` would silently turn the O(delta) patch into an O(tiles)
-unpack-repack; in `repair.py` it would materialise dense tiles the engines
-never need.
-
-Guard 4 — frontier words stay packed on the hot path (DESIGN.md §13): in
-all of `src/repro/` EXCEPT the packing substrate (`core/tiling.py`, which
-defines the contract and owns the word-level repacks) and the sanctioned
-densifying reference (`kernels/ref.py`), `unpack_frontier_bits` /
-`unpack_frontier_words` may only be called inside a `*_kernel` or
-`*_oracle` body, or in one of the explicitly allowlisted seam functions:
-`core/tc_mis.py::_result` (the run epilogue — the ONE unpack on the solve
-path, after the convergence loop) and `core/distributed.py::gather_bool`
-(the all-gather payload boundary — shard-local phases are dense ops).  Any
-other densify would smuggle a (n_padded,) bool round-trip back into the
-packed round body the bitwise mode exists to eliminate.
-
-Guard 5 — the hot loop stays host-silent (DESIGN.md §14): under
-`src/repro/core/` and `src/repro/kernels/`, no call to `io_callback` /
-`pure_callback` / `debug_callback` / `debug.print`, and no reference to the
-legacy `host_callback` module at all.  Observability of the round loop goes
-through the on-device telemetry buffer (`repro.obs.rounds`) — ONE
-device→host transfer at the epilogue — never through per-round host
-round-trips, which would serialise the `lax.while_loop` on host sync and
-quietly destroy the very timings the telemetry exists to measure.
-
-Run: python tools/ci_guards.py   (exit 0 = clean)
+The five AST guards that used to live here are now rules RPR001–RPR005 of
+the repro.lint engine; this script runs exactly those rules over src/repro
+with the baseline disabled, preserving the historical exit semantics
+(0 = clean, 1 = violations).
 """
-from __future__ import annotations
-
-import ast
 import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-SRC_DIR = ROOT / "src/repro"
-KERNEL_DIR = ROOT / "src/repro/kernels"
-DYNGRAPH_DIR = ROOT / "src/repro/dyngraph"
-ORACLE_FILES = {"ref.py"}          # the sanctioned full-unpack path
-KERNEL_FN_SUFFIX = "_kernel"
-ORACLE_FN_SUFFIX = "_oracle"
+sys.path.insert(0, str(ROOT / "src"))
 
-# tile densifies: bit-extraction to int8 (kernel-body only) vs whole-array
-# oracle dispatches (never in kernel modules)
-TILE_UNPACKS = ("unpack_tile_bits", "unpack_tile_mask")
-TILE_DENSE_DISPATCH = ("dense_tiles", "dense_tile_mask")
-DENSIFY_CALLS = TILE_UNPACKS + TILE_DENSE_DISPATCH
-
-# host round-trips banned from the device-hot modules (Guard 5)
-HOT_DIRS = ("core", "kernels")          # relative to src/repro
-HOST_CALLBACK_CALLS = (
-    "io_callback", "pure_callback", "debug_callback",
-)
-# `jax.debug.print(...)` parses as Attribute(attr='print') on a Name 'debug'
-# or Attribute '...debug' receiver — catch the attr name + receiver check
-HOST_PRINT_RECEIVERS = ("debug",)
-
-# frontier densifies (Guard 4)
-FRONTIER_UNPACKS = ("unpack_frontier_bits", "unpack_frontier_words")
-# rel-path → allowed enclosing function names (sanctioned seams, see above)
-FRONTIER_ALLOWLIST = {
-    "core/tc_mis.py": {"_result"},
-    "core/distributed.py": {"gather_bool"},
-}
-FRONTIER_EXCLUDED_FILES = {"core/tiling.py", "kernels/ref.py"}
-
-
-def _call_name(node: ast.Call):
-    if isinstance(node.func, ast.Name):
-        return node.func.id
-    if isinstance(node.func, ast.Attribute):
-        return node.func.attr
-    return None
-
-
-def _walk_calls(path: pathlib.Path):
-    """Yield (call_name, lineno, enclosing_fn_stack) for every call."""
-    tree = ast.parse(path.read_text(), filename=str(path))
-    out = []
-
-    class Visitor(ast.NodeVisitor):
-        def __init__(self):
-            self.stack = []
-
-        def _visit_fn(self, node):
-            self.stack.append(node.name)
-            self.generic_visit(node)
-            self.stack.pop()
-
-        visit_FunctionDef = _visit_fn
-        visit_AsyncFunctionDef = _visit_fn
-
-        def visit_Call(self, node):
-            name = _call_name(node)
-            if name:
-                out.append((name, node.lineno, tuple(self.stack)))
-            self.generic_visit(node)
-
-    Visitor().visit(tree)
-    return out
-
-
-def kernel_violations(path: pathlib.Path) -> list:
-    """Guards 1+2: unpack only inside *_kernel bodies; never densify."""
-    out = []
-    for name, lineno, stack in _walk_calls(path):
-        if name in DENSIFY_CALLS:
-            in_kernel_body = any(fn.endswith(KERNEL_FN_SUFFIX) for fn in stack)
-            if name in TILE_DENSE_DISPATCH or not in_kernel_body:
-                out.append(
-                    f"{path}:{lineno}: {name} called "
-                    f"outside a *{KERNEL_FN_SUFFIX} body (scope: "
-                    f"{'.'.join(stack) or '<module>'}) — this "
-                    f"materialises (nt, T, T) in HBM"
-                )
-        if name == "to_storage":
-            out.append(
-                f"{path}:{lineno}: to_storage() in a kernel module "
-                f"— kernels must consume tiles as stored"
-            )
-    return out
-
-
-def dyngraph_violations(path: pathlib.Path) -> list:
-    """Guard 3: the delta path never densifies outside a *_oracle body."""
-    out = []
-    for name, lineno, stack in _walk_calls(path):
-        if name in DENSIFY_CALLS + ("to_storage",):
-            if any(fn.endswith(ORACLE_FN_SUFFIX) for fn in stack):
-                continue
-            out.append(
-                f"{path}:{lineno}: {name} called outside a "
-                f"*{ORACLE_FN_SUFFIX} body (scope: "
-                f"{'.'.join(stack) or '<module>'}) — the delta path must "
-                f"edit packed tiles as packed words, never densify"
-            )
-    return out
-
-
-def frontier_violations(path: pathlib.Path) -> list:
-    """Guard 4: frontier words densify only in kernels, oracles, or the
-    allowlisted seams (run epilogue, gather payload boundary)."""
-    rel = path.relative_to(SRC_DIR).as_posix()
-    if rel in FRONTIER_EXCLUDED_FILES:
-        return []
-    allowed_fns = FRONTIER_ALLOWLIST.get(rel, set())
-    out = []
-    for name, lineno, stack in _walk_calls(path):
-        if name not in FRONTIER_UNPACKS:
-            continue
-        if any(
-            fn.endswith((KERNEL_FN_SUFFIX, ORACLE_FN_SUFFIX)) or fn in allowed_fns
-            for fn in stack
-        ):
-            continue
-        out.append(
-            f"{path}:{lineno}: {name} called outside a *{KERNEL_FN_SUFFIX}/"
-            f"*{ORACLE_FN_SUFFIX} body or an allowlisted seam (scope: "
-            f"{'.'.join(stack) or '<module>'}) — frontier vectors stay "
-            f"packed words on the hot path (DESIGN.md §13)"
-        )
-    return out
-
-
-def host_silence_violations(path: pathlib.Path) -> list:
-    """Guard 5: no host callbacks or debug prints in the device-hot modules.
-
-    Catches the call forms (`io_callback(...)`, `jax.experimental
-    .io_callback(...)`, `pure_callback`, `debug_callback`,
-    `jax.debug.print(...)`) via the AST and the legacy `host_callback`
-    module by name anywhere in the tree (imports included)."""
-    src = path.read_text()
-    out = []
-    tree = ast.parse(src, filename=str(path))
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Call):
-            name = _call_name(node)
-            if name in HOST_CALLBACK_CALLS:
-                out.append(
-                    f"{path}:{node.lineno}: {name}() in a device-hot module "
-                    f"— round-loop observability goes through the telemetry "
-                    f"buffer (repro.obs.rounds), never host callbacks"
-                )
-            elif (
-                name == "print"
-                and isinstance(node.func, ast.Attribute)
-                and (
-                    (isinstance(node.func.value, ast.Name)
-                     and node.func.value.id in HOST_PRINT_RECEIVERS)
-                    or (isinstance(node.func.value, ast.Attribute)
-                        and node.func.value.attr in HOST_PRINT_RECEIVERS)
-                )
-            ):
-                out.append(
-                    f"{path}:{node.lineno}: debug.print() in a device-hot "
-                    f"module — it forces a host sync per round inside the "
-                    f"while_loop"
-                )
-        elif isinstance(node, (ast.Import, ast.ImportFrom)):
-            names = [a.name for a in node.names]
-            module = getattr(node, "module", "") or ""
-            if "host_callback" in module or any(
-                "host_callback" in n for n in names
-            ):
-                out.append(
-                    f"{path}:{node.lineno}: host_callback import in a "
-                    f"device-hot module — the legacy host round-trip API is "
-                    f"banned here"
-                )
-    return out
-
-
-def main() -> int:
-    problems = []
-    for path in sorted(KERNEL_DIR.glob("*.py")):
-        if path.name in ORACLE_FILES:
-            continue
-        problems += kernel_violations(path)
-    n_kernel = len(problems)
-    for path in sorted(DYNGRAPH_DIR.glob("*.py")):
-        problems += dyngraph_violations(path)
-    n_dyngraph = len(problems) - n_kernel
-    for path in sorted(SRC_DIR.rglob("*.py")):
-        problems += frontier_violations(path)
-    n_frontier = len(problems) - n_kernel - n_dyngraph
-    n_before_host = len(problems)
-    for d in HOT_DIRS:
-        for path in sorted((SRC_DIR / d).rglob("*.py")):
-            problems += host_silence_violations(path)
-    n_host = len(problems) - n_before_host
-    for p in problems:
-        print(p, file=sys.stderr)
-    if problems:
-        print(
-            f"\n{len(problems)} guard violation(s) "
-            f"({n_kernel} kernel, {n_dyngraph} dyngraph, {n_frontier} "
-            f"frontier, {n_host} host-silence): HBM and the round loop must "
-            f"only ever see packed words outside the oracle/int8/epilogue "
-            f"paths, and the hot loop never talks to the host mid-round",
-            file=sys.stderr,
-        )
-        return 1
-    print(
-        "ci_guards: kernel + dyngraph + frontier + host-silence "
-        "guards clean"
-    )
-    return 0
-
+from repro.lint.cli import main  # noqa: E402
+from repro.lint.rules import GUARD_RULE_IDS  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(
+        main(
+            [
+                "--rules", ",".join(GUARD_RULE_IDS),
+                "--no-baseline",
+                str(ROOT / "src" / "repro"),
+            ]
+        )
+    )
