@@ -22,6 +22,7 @@ def main() -> None:
         ("fig1", "benchmarks.fig1_phase_profile"),
         ("fig4", "benchmarks.fig4_runtime"),
         ("kernel", "benchmarks.kernel_bench"),
+        ("hybrid", "benchmarks.hybrid_bench"),
         ("serve", "benchmarks.serve_throughput"),
         ("dyngraph", "benchmarks.dyngraph_bench"),
     ]

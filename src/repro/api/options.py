@@ -21,6 +21,7 @@ PLACEMENTS = ("auto", "local", "sharded")
 STORAGES = ("auto", "int8", "bitpack")   # tile storage axis (DESIGN.md §11)
 REPAIRS = ("auto", "cold", "incremental")   # delta-repair policy (§12)
 FRONTIERS = ("auto", "dense", "bitwise")    # frontier-vector mode (§13)
+HYBRIDS = ("auto", "off", "forced")         # hybrid tile routing (§16)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,20 @@ class SolveOptions:
                   `repro.api.plan.BITPACK_AUTO_THRESHOLD` bytes
                   (`repro.api.plan.resolve_storage`).  Solutions are
                   bit-identical in either format.
+      hybrid:     per-tile hybrid routing (DESIGN.md §16) — classify tiles
+                  by nnz at plan time and route the sub-threshold sparse
+                  tail through COO/segment ops while dense tiles keep the
+                  TC/Pallas path, both lists compacted so empty tiles cost
+                  zero dispatch.  'auto' partitions when the tiling has
+                  ≥ `core.tiling.HYBRID_AUTO_MIN_TILES` non-empty tiles and
+                  a ≥ `HYBRID_AUTO_MIN_SPARSE_FRAC` sparse tail; 'forced'
+                  always partitions; 'off' never does.  Solutions are
+                  bit-identical in every mode (a perf knob, never a
+                  semantics knob).  The sharded route ignores the
+                  partition (documented dense-only fallback).
+      hybrid_threshold: nnz cut for the classifier; None = the analytic
+                  roofline break-even (`repro.perf.hybrid_density_threshold`
+                  for the plan's tile size and storage).
 
     Placement (the routing policy, DESIGN.md §10):
       placement:        auto | local | sharded.  `auto` solves on one
@@ -111,6 +126,8 @@ class SolveOptions:
     tile_size: Optional[int] = None
     reorder: Optional[str] = None
     storage: str = "auto"
+    hybrid: str = "auto"
+    hybrid_threshold: Optional[int] = None
 
     placement: str = "auto"
     shard_threshold: int = 1 << 15
@@ -141,6 +158,14 @@ class SolveOptions:
         if self.frontier not in FRONTIERS:
             raise ValueError(
                 f"unknown frontier {self.frontier!r}; valid: {FRONTIERS}"
+            )
+        if self.hybrid not in HYBRIDS:
+            raise ValueError(
+                f"unknown hybrid {self.hybrid!r}; valid: {HYBRIDS}"
+            )
+        if self.hybrid_threshold is not None and self.hybrid_threshold < 1:
+            raise ValueError(
+                f"hybrid_threshold must be >= 1, got {self.hybrid_threshold}"
             )
 
     @property

@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.tiling import (
     STORAGES as TILE_STORAGES,
     BlockTiledGraph,
+    attach_partition,
     build_block_tiles,
     next_pow2,
     rcm_ordering,
@@ -68,8 +69,22 @@ _PLAN_STAT_KEYS = ("mem_hits", "disk_hits", "misses", "evicted_stale")
 # persist in the same v2 layout under delta-chained keys (`delta_cache_key`)
 # with an optional `epoch` tail record; superseded pre-delta entries are
 # retired through the same eviction machinery (`PlanCache.apply_delta`).
-_PLAN_VERSION = 2
-_META_LEN = 8  # n_nodes, n_edges, n_tiles, tile_size, nbr, nbc, version, storage
+#
+# v3: the hybrid axis (DESIGN.md §16) — the tile-partition POLICY (mode +
+# resolved nnz threshold) joins the meta record and, for hybrid != 'off',
+# the cache key (`|h{mode}:{threshold}` tail; 'off' keys are unchanged so
+# off-mode requests land on the v2 paths and the version check retires the
+# old layout in place).  The partition ARRAYS are deliberately not
+# persisted: `partition_tiles` is deterministic in (tiles, threshold), so
+# `_load` re-attaches from the stored policy — disk entries stay exactly as
+# big as v2 and can never desynchronise from their tiles.
+_PLAN_VERSION = 3
+# n_nodes, n_edges, n_tiles, tile_size, nbr, nbc, version, storage,
+# hybrid mode, hybrid threshold
+_META_LEN = 10
+
+# partition policy axis, in meta-index order (0 = off keeps the v2 keys)
+HYBRID_MODES = ("off", "auto", "forced")
 
 # --------------------------------------------------------------------------
 # the auto-T policy (paper §3.2: largest T whose BSR fits the budget)
@@ -138,6 +153,27 @@ def resolve_storage(
     return "bitpack" if est >= threshold else "int8"
 
 
+# --------------------------------------------------------------------------
+# the hybrid-partition policy (DESIGN.md §16: roofline break-even threshold)
+# --------------------------------------------------------------------------
+
+
+def resolve_hybrid_threshold(
+    tile_size: int, storage: str, threshold: Optional[int] = None
+) -> int:
+    """Concrete nnz classifier cut for a plan: the caller's override, or the
+    analytic roofline break-even for this (tile size, storage) — the edge
+    count at which one dense tile pass costs the same as streaming its
+    edges through the COO/segment tail (`repro.perf.hybrid_density_threshold`).
+    Resolved at PLAN time so the cache key and the persisted meta record
+    name a concrete integer, never a policy that could drift."""
+    if threshold is not None:
+        return int(threshold)
+    from repro.perf.roofline import hybrid_density_threshold
+
+    return hybrid_density_threshold(tile_size, storage)
+
+
 def choose_tile_size(
     n_nodes: int,
     n_edges: int,
@@ -185,6 +221,8 @@ class Plan:
     inv: Optional[np.ndarray] = None   # inv[original_id] = plan_id
     reorder: Optional[str] = None      # the reorder choice this plan was built with
     epoch: int = 0                     # deltas applied since the epoch-0 build
+    hybrid: str = "off"                # tile-partition policy (DESIGN.md §16)
+    hybrid_threshold: int = 0          # resolved nnz cut (0 iff hybrid == 'off')
 
     @property
     def n_nodes(self) -> int:
@@ -229,6 +267,8 @@ class Plan:
         tile_size: Optional[int] = None,
         reorder: Optional[str] = None,
         storage: str = "int8",
+        hybrid: str = "off",
+        hybrid_threshold: Optional[int] = None,
         cache: Optional["PlanCache"] = None,
     ) -> "Plan":
         """The front door: plan a graph, through a cache when one is given.
@@ -237,8 +277,10 @@ class Plan:
         with or without a cache, so the same call plans the same graph
         identically either way (the cache's constructor `tile_size` is only
         the default of its own `plan()` method).  `storage` may be a
-        concrete format or 'auto' (`resolve_storage`).  A `Plan` passes
-        through untouched — callers may hold either.
+        concrete format or 'auto' (`resolve_storage`).  `hybrid` is the
+        tile-partition policy (DESIGN.md §16); `hybrid_threshold=None`
+        resolves to the analytic roofline cut (`resolve_hybrid_threshold`).
+        A `Plan` passes through untouched — callers may hold either.
         """
         if isinstance(graph, Plan):
             return graph
@@ -246,11 +288,16 @@ class Plan:
         storage = resolve_storage(storage, graph.n_nodes, graph.n_edges, T)
         if cache is not None:
             return cache.plan(
-                graph, tile_size=T, reorder=reorder, storage=storage
+                graph, tile_size=T, reorder=reorder, storage=storage,
+                hybrid=hybrid, hybrid_threshold=hybrid_threshold,
             )[0]
+        thr = 0 if hybrid == "off" else resolve_hybrid_threshold(
+            T, storage, hybrid_threshold
+        )
+        key = plan_cache_key(graph, T, reorder, storage, hybrid, thr)
         return build_plan(
-            graph, T, reorder, plan_cache_key(graph, T, reorder, storage),
-            storage=storage,
+            graph, T, reorder, key, storage=storage,
+            hybrid=hybrid, hybrid_threshold=thr,
         )
 
     def apply_delta(
@@ -296,19 +343,27 @@ def plan_cache_key(
     tile_size: int,
     reorder: Optional[str],
     storage: str = "int8",
+    hybrid: str = "off",
+    hybrid_threshold: int = 0,
 ) -> str:
     """Content hash of (canonical edges, n_nodes, build params).
 
     `from_edges` already canonicalises (dedupe, both directions, sender-sorted),
     so any two loads of the same graph — different files, different formats,
     shuffled edge order — hash identically.  `storage` is a build param:
-    int8 and bitpack plans of one graph are distinct cache entries.
+    int8 and bitpack plans of one graph are distinct cache entries.  So is
+    the hybrid-partition policy — but ONLY when it is on: 'off' contributes
+    nothing to the key, so hybrid-free keys (and their disk paths) are
+    byte-identical to the v2 derivation and old entries retire through the
+    in-place version check rather than orphaning.
     """
     h = hashlib.sha256()
     # no version in the key: a format bump must hit the SAME file so the
     # meta check in `PlanCache._load` can detect + evict the stale layout
+    tail = "" if hybrid == "off" else f"|h{hybrid}:{int(hybrid_threshold)}"
     h.update(
-        f"tcmis-plan|{g.n_nodes}|{tile_size}|{reorder or ''}|{storage}".encode()
+        f"tcmis-plan|{g.n_nodes}|{tile_size}|{reorder or ''}|{storage}"
+        f"{tail}".encode()
     )
     h.update(np.asarray(g.senders)[: g.n_edges].astype(np.int32).tobytes())
     h.update(np.asarray(g.receivers)[: g.n_edges].astype(np.int32).tobytes())
@@ -354,6 +409,16 @@ def patch_plan(plan: Plan, delta) -> Plan:
     mapped = delta if plan.inv is None else delta.mapped(plan.inv)
     g2 = apply_graph_delta(plan.g, mapped)
     tiled2 = apply_tiled_delta(plan.tiled, mapped)
+    if plan.hybrid == "auto":
+        # `apply_tiled_delta` reclassifies an existing partition in place,
+        # but only the PLAN knows the auto policy: a delta can push the
+        # graph across the auto gate in either direction, so re-run it
+        # (forced/off plans need nothing — present stays present, absent
+        # stays absent)
+        tiled2 = attach_partition(
+            dataclasses.replace(tiled2, partition=None),
+            mode="auto", threshold=plan.hybrid_threshold,
+        )
     return dataclasses.replace(
         plan,
         g=g2,
@@ -369,8 +434,12 @@ def build_plan(
     reorder: Optional[str],
     key: str,
     storage: str = "int8",
+    hybrid: str = "off",
+    hybrid_threshold: int = 0,
 ) -> Plan:
-    """The cache-miss path: (optional) RCM + BSR tiling, no caching."""
+    """The cache-miss path: (optional) RCM + BSR tiling + (optional) tile
+    partition, no caching.  `hybrid_threshold` arrives already resolved
+    (`resolve_hybrid_threshold`) — this function never invents policy."""
     perm = inv = None
     if reorder == "rcm":
         perm = np.asarray(rcm_ordering(g))
@@ -382,7 +451,13 @@ def build_plan(
     elif reorder is not None:
         raise ValueError(f"unknown reorder {reorder!r} (None or 'rcm')")
     tiled = build_block_tiles(g, tile_size=tile_size, storage=storage)
-    return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv, reorder=reorder)
+    if hybrid != "off":
+        tiled = attach_partition(
+            tiled, mode=hybrid, threshold=int(hybrid_threshold)
+        )
+    return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv,
+                reorder=reorder, hybrid=hybrid,
+                hybrid_threshold=int(hybrid_threshold))
 
 
 class PlanCache:
@@ -410,10 +485,14 @@ class PlanCache:
         cache_dir: Optional[str] = None,
         max_mem_entries: int = 256,
         storage: str = "int8",
+        hybrid: str = "off",
+        hybrid_threshold: Optional[int] = None,
     ):
         self.tile_size = int(tile_size)
         self.reorder = reorder
         self.storage = storage
+        self.hybrid = hybrid
+        self.hybrid_threshold = hybrid_threshold
         self.cache_dir = cache_dir
         self.max_mem_entries = max(int(max_mem_entries), 1)
         self._mem: "OrderedDict[str, Plan]" = OrderedDict()
@@ -450,6 +529,8 @@ class PlanCache:
         tile_size: Optional[int] = None,
         reorder: Optional[str] = None,
         storage: Optional[str] = None,
+        hybrid: Optional[str] = None,
+        hybrid_threshold: Optional[int] = None,
     ) -> Tuple[Plan, str]:
         """Return (plan, status) with status ∈ {'mem', 'disk', 'built'}."""
         T = self.tile_size if tile_size is None else int(tile_size)
@@ -458,7 +539,13 @@ class PlanCache:
             self.storage if storage is None else storage,
             g.n_nodes, g.n_edges, T,
         )
-        key = plan_cache_key(g, T, ro, st)
+        hy = self.hybrid if hybrid is None else hybrid
+        thr = 0 if hy == "off" else resolve_hybrid_threshold(
+            T, st,
+            self.hybrid_threshold if hybrid_threshold is None
+            else hybrid_threshold,
+        )
+        key = plan_cache_key(g, T, ro, st, hy, thr)
         hit = self._mem.get(key)
         if hit is not None:
             self._count("mem_hits")
@@ -476,12 +563,37 @@ class PlanCache:
             legacy = self._path(_legacy_v1_cache_key(g, T, ro))
             if os.path.exists(legacy):
                 self._evict_stale(legacy, "pre-storage-axis entry (v1 key)")
+            if hy != "off":
+                # hybrid keys moved off the v2 paths — a pre-hybrid entry
+                # for this graph sits at the hybrid-free key.  Evict it only
+                # if it really is old-format: the same path is a LIVE v3
+                # entry for hybrid='off' requests.
+                self._evict_legacy_version(
+                    self._path(plan_cache_key(g, T, ro, st))
+                )
         self._count("misses")
-        plan = build_plan(g, T, ro, key, storage=st)
+        plan = build_plan(
+            g, T, ro, key, storage=st, hybrid=hy, hybrid_threshold=thr
+        )
         self._remember(key, plan)
         if self.cache_dir:
             self._store(plan)
         return plan, "built"
+
+    def _evict_legacy_version(self, path: str) -> None:
+        """Evict the entry at `path` iff it predates the current format —
+        used for probing legacy key locations that may also hold live
+        current-format entries (never evict those)."""
+        if not os.path.exists(path):
+            return
+        try:
+            with np.load(path) as z:
+                meta = z["meta"]
+                version = int(meta[6]) if meta.shape[0] > 6 else 1
+        except Exception:  # noqa: BLE001 — torn/unreadable: treat as stale
+            version = 0
+        if version != _PLAN_VERSION:
+            self._evict_stale(path, f"pre-hybrid entry (format v{version})")
 
     def apply_delta(self, plan: Plan, delta) -> Tuple[Plan, str]:
         """Patch a plan through the cache: return (patched, status) with
@@ -550,7 +662,8 @@ class PlanCache:
             meta=np.asarray(
                 [g.n_nodes, g.n_edges, t.n_tiles, t.tile_size,
                  t.n_block_rows, t.n_block_cols,
-                 _PLAN_VERSION, TILE_STORAGES.index(t.storage)],
+                 _PLAN_VERSION, TILE_STORAGES.index(t.storage),
+                 HYBRID_MODES.index(plan.hybrid), plan.hybrid_threshold],
                 dtype=np.int64,
             ),
         )
@@ -604,6 +717,8 @@ class PlanCache:
                     int(v) for v in meta[:6]
                 )
                 storage = TILE_STORAGES[int(meta[7])]
+                hybrid = HYBRID_MODES[int(meta[8])]
+                hybrid_threshold = int(meta[9])
                 g = Graph(
                     senders=jnp.asarray(z["senders"]),
                     receivers=jnp.asarray(z["receivers"]),
@@ -624,11 +739,18 @@ class PlanCache:
                 )
                 perm = np.asarray(z["perm"]) if "perm" in z.files else None
                 epoch = int(z["epoch"][0]) if "epoch" in z.files else 0
+            if hybrid != "off":
+                # the partition is policy, not payload: deterministic in
+                # (tiles, threshold), so re-attach instead of persisting
+                tiled = attach_partition(
+                    tiled, mode=hybrid, threshold=hybrid_threshold
+                )
             inv = None
             if perm is not None:
                 inv = np.empty_like(perm)
                 inv[perm] = np.arange(n_nodes)
             return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv,
-                        reorder=reorder, epoch=epoch)
+                        reorder=reorder, epoch=epoch, hybrid=hybrid,
+                        hybrid_threshold=hybrid_threshold)
         except Exception:  # noqa: BLE001 — np.load raises BadZipFile/EOFError/
             return None    # pickle errors on torn files: any failure ⇒ rebuild

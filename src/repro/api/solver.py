@@ -110,6 +110,8 @@ class Solver:
             tile_size=options.tile_size or 32,
             reorder=options.reorder,
             storage=options.storage,   # cache default mirrors the Solver
+            hybrid=options.hybrid,
+            hybrid_threshold=options.hybrid_threshold,
             cache_dir=options.cache_dir,
             max_mem_entries=options.plan_cache_entries,
         )
@@ -180,7 +182,16 @@ class Solver:
         storage = resolve_storage(
             self.options.storage, graph.n_nodes, graph.n_edges, tile_size
         )
-        plan, _ = self.plans.plan(graph, tile_size=tile_size, storage=storage)
+        # the hybrid policy only partitions where an engine can use it —
+        # the segment engine has no tile schedule to split, so hybrid plans
+        # for it would carry dead partition arrays through every dispatch
+        hybrid = self.options.hybrid
+        if not get_engine(self.options.engine).supports_hybrid:
+            hybrid = "off"
+        plan, _ = self.plans.plan(
+            graph, tile_size=tile_size, storage=storage,
+            hybrid=hybrid, hybrid_threshold=self.options.hybrid_threshold,
+        )
         return plan
 
     def request_key(self, plan: Plan) -> jax.Array:
@@ -352,7 +363,8 @@ class Solver:
         t = plan2.tiled
         sig = ("repair", t.tile_size, t.storage, t.n_block_rows,
                t.n_block_cols, t.n_tiles, int(t.tiles.shape[0]), t.n_nodes,
-               plan2.g.n_nodes, plan2.g.n_edges, plan2.g.e_pad)
+               plan2.g.n_nodes, plan2.g.n_edges, plan2.g.e_pad,
+               self._partition_sig(t))
         compile_stat = self._note_signature(sig)
         with trace_span(trace, "solver.update", mode="incremental"):
             out, timing = self._dispatch(
@@ -400,6 +412,19 @@ class Solver:
             stats=stats,
             telemetry=telemetry,
         )
+
+    @staticmethod
+    def _partition_sig(tiled):
+        """The hybrid partition's static trace inputs (None when absent):
+        threshold + both compacted list shapes.  Joins every jit-cache
+        signature a partitioned tiling can reach — the partition is a
+        pytree child of `BlockTiledGraph`, so jax already recompiles on
+        these; the signature must agree or the compile stat lies."""
+        p = tiled.partition
+        if p is None:
+            return None
+        return (p.threshold, p.n_dense_tiles, int(p.dense.tiles.shape[0]),
+                p.n_sparse_tiles, int(p.sp_rows.shape[0]))
 
     def _note_signature(self, sig) -> str:
         reused = sig in self._seen_signatures
@@ -490,7 +515,7 @@ class Solver:
         t = plan.tiled
         sig = ("local", t.tile_size, t.storage, t.n_block_rows, t.n_block_cols,
                t.n_tiles, int(t.tiles.shape[0]), t.n_nodes, plan.g.n_nodes,
-               plan.g.n_edges, plan.g.e_pad)
+               plan.g.n_edges, plan.g.e_pad, self._partition_sig(t))
         compile_stat = self._note_signature(sig)
         out, timing = self._dispatch(
             self._jit_single, sig, compile_stat, trace, plan.g, plan.tiled, key
@@ -582,7 +607,11 @@ class Solver:
                 mesh = compat.make_mesh(
                     (n_dev,), ("shard",), axis_types=(axis_type.Auto,)
                 )
-                sharded = shard_tiled(plan.tiled, n_shards=n_dev)
+                # documented dense-only fallback (DESIGN.md §16): the
+                # shard_map loop has no sparse-tail seam, so the partition
+                # is stripped rather than half-honoured
+                tiled_full = dataclasses.replace(plan.tiled, partition=None)
+                sharded = shard_tiled(tiled_full, n_shards=n_dev)
                 run = build_distributed_mis(sharded, mesh, DistConfig(
                     max_rounds=self.options.max_rounds,
                     bitpack=self.options.bitpack,

@@ -16,10 +16,15 @@ from repro.core.tc_mis import TCMISConfig, tc_mis, run_phases
 from repro.core.tiling import (
     STORAGES,
     BlockTiledGraph,
+    TilePartition,
+    attach_partition,
     build_block_tiles,
+    gather_frontier_bits,
     pack_tile_bits,
     pack_vertex_vector,
     packed_words,
+    partition_tiles,
+    tile_nnz,
     tile_stats,
     unpack_tile_bits,
     unpack_vertex_vector,
@@ -44,9 +49,10 @@ __all__ = [
     "HEURISTICS", "Priorities", "make_priorities",
     "MISResult", "luby_mis", "ecl_mis",
     "TCMISConfig", "tc_mis", "run_phases",
-    "STORAGES", "BlockTiledGraph", "build_block_tiles", "pack_tile_bits",
-    "pack_vertex_vector", "packed_words", "tile_stats", "unpack_tile_bits",
-    "unpack_vertex_vector",
+    "STORAGES", "BlockTiledGraph", "TilePartition", "attach_partition",
+    "build_block_tiles", "gather_frontier_bits", "pack_tile_bits",
+    "pack_vertex_vector", "packed_words", "partition_tiles", "tile_nnz",
+    "tile_stats", "unpack_tile_bits", "unpack_vertex_vector",
     "cardinality", "is_independent", "is_maximal", "is_valid_mis",
     "is_valid_mis_jit",
     "DistConfig", "ShardedTiledGraph", "build_distributed_mis", "shard_tiled",

@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.tiling import (
     BlockTiledGraph,
     dense_tile_mask,
+    gather_frontier_bits,
     pack_frontier_bits,
     pack_frontier_words,
     pack_priority_planes,
@@ -65,7 +66,9 @@ from repro.obs.rounds import (
     COL_ALIVE,
     COL_FRONTIER,
     COL_SELECTED,
+    COL_TILES_DENSE,
     COL_TILES_SKIPPED,
+    COL_TILES_SPARSE,
     TELEMETRY_COLS,
 )
 
@@ -414,14 +417,46 @@ def _tiles_skipped(ctx: EngineContext, flags: Optional[jnp.ndarray]) -> jnp.ndar
     return jnp.int32(n_tiles) - jnp.sum(flags[ctx.tiled.tile_cols].astype(jnp.int32))
 
 
-def _telemetry_row(alive, frontier, selected, skipped) -> jnp.ndarray:
+def _telemetry_row(
+    alive, frontier, selected, skipped, tiles_dense, tiles_sparse
+) -> jnp.ndarray:
     """(TELEMETRY_COLS,) int32 row in the obs.rounds column layout."""
     vals = [None] * TELEMETRY_COLS
     vals[COL_ALIVE] = alive
     vals[COL_FRONTIER] = frontier
     vals[COL_SELECTED] = selected
     vals[COL_TILES_SKIPPED] = skipped
+    vals[COL_TILES_DENSE] = tiles_dense
+    vals[COL_TILES_SPARSE] = tiles_sparse
     return jnp.stack([jnp.asarray(v, jnp.int32) for v in vals])
+
+
+def _tiles_routed_dense(
+    ctx: EngineContext, skipped: jnp.ndarray, flags: Optional[jnp.ndarray]
+) -> jnp.ndarray:
+    """Tiles actually dispatched on the dense path this round: the stored
+    list minus the flag-gated ones.  Engines with no tile schedule (flags
+    None) route zero tiles."""
+    if flags is None:
+        return jnp.int32(0)
+    return jnp.int32(int(ctx.tiled.tile_cols.shape[0])) - skipped
+
+
+def _covered_rows(tiled) -> jnp.ndarray:
+    """(n_block_rows,) bool — block rows owning at least one stored tile.
+
+    The Pallas kernels write an output block only when a tile's grid step
+    visits it (`@pl.when` zero-init on the row transition); a block row no
+    tile maps to keeps whatever was in the output buffer.  Full tilings
+    cover every row by construction, but the COMPACTED hybrid dense
+    partition routinely has rows whose every tile went to the sparse tail —
+    their lanes must be masked out before merging with the sparse half."""
+    return tiled.row_starts[1:] > tiled.row_starts[:-1]
+
+
+def _covered_vertices(tiled) -> jnp.ndarray:
+    """`_covered_rows` expanded to the (n_padded,) vertex axis."""
+    return jnp.repeat(_covered_rows(tiled), tiled.tile_size)
 
 
 # --------------------------------------------------------------------------
@@ -446,6 +481,10 @@ class RoundEngine:
     name: str = "abstract"
     fused: bool = False
     supports_bitwise: bool = False
+    # honours a `BlockTiledGraph.partition` (hybrid dense/sparse routing,
+    # DESIGN.md §16) — tile-schedule engines only; the segment engine has
+    # no tiles to split, so a partition is simply inert there
+    supports_hybrid: bool = False
     # wants the (n_bits, nbc, W) plane stacks built at setup — only the
     # Pallas engines, whose bitwise phase ① can run the plane-scan kernel
     plane_kernel_nbr_max: bool = False
@@ -527,6 +566,10 @@ class RoundEngine:
     def step(
         self, ctx: EngineContext, pri, state: MISRoundState
     ) -> MISRoundState:
+        if self.supports_hybrid and ctx.tiled.partition is not None:
+            if ctx.frontier == "bitwise":
+                return self.step_bits_hybrid(ctx, pri, state)
+            return self.step_hybrid(ctx, pri, state)
         if ctx.frontier == "bitwise":
             return self.step_bits(ctx, pri, state)
         cand = self.phase1_candidates(ctx, pri, state.alive)
@@ -555,10 +598,14 @@ class RoundEngine:
         self, ctx: EngineContext, pri, state: MISRoundState
     ) -> Tuple[MISRoundState, jnp.ndarray]:
         """`step` plus a (TELEMETRY_COLS,) int32 telemetry row — the same
-        round body with four extra reductions (no extra SpMVs, no host
+        round body with six extra reductions (no extra SpMVs, no host
         callbacks).  Kept separate from `step` so the telemetry-off program
         is the byte-exact pre-telemetry jaxpr (DESIGN.md §14's zero-cost
         guarantee)."""
+        if self.supports_hybrid and ctx.tiled.partition is not None:
+            if ctx.frontier == "bitwise":
+                return self._step_bits_hybrid_with_stats(ctx, pri, state)
+            return self._step_hybrid_with_stats(ctx, pri, state)
         if ctx.frontier == "bitwise":
             return self._step_bits_with_stats(ctx, pri, state)
         alive_count = _count(state.alive)
@@ -575,11 +622,14 @@ class RoundEngine:
         else:
             n_c = self.phase2_counts(ctx, cand, state.alive, flags)
             new = phase3_update(state, cand, n_c, inc)
+        skipped = _tiles_skipped(ctx, flags)
         row = _telemetry_row(
             alive_count,
             _count(cand),
             _count(new.in_mis) - _count(state.in_mis),
-            _tiles_skipped(ctx, flags),
+            skipped,
+            _tiles_routed_dense(ctx, skipped, flags),
+            jnp.int32(0),
         )
         return new, row
 
@@ -666,9 +716,20 @@ def _segment_nbr_max_bits_oracle(ctx: EngineContext, p, mask_words) -> jnp.ndarr
 
 class _TiledEngine(RoundEngine):
     """Shared phase-① policy for tile-schedule engines: `cfg.phase1` picks
-    the paper-faithful segment max or the beyond-paper tiled max."""
+    the paper-faithful segment max or the beyond-paper tiled max.
+
+    Also owns the HYBRID round bodies (DESIGN.md §16): when the tiling
+    carries a `TilePartition`, phase ① and ② each run twice — the existing
+    dense machinery over the COMPACTED dense sub-tiling (`partition.dense`,
+    via a sub-context that swaps `ctx.tiled`) and the COO sparse tail
+    through segment gather/scatter — and the two halves merge exactly
+    (`max` for Max_Np, `+` / `|` for N_c) before phase ③, so hybrid
+    solutions are bit-identical to the dense-only path.  Fused engines
+    demote to the split ② under hybrid (the in-kernel ③ can't see the
+    sparse hits) via the `_dense_phase2` indirection."""
 
     supports_bitwise = True
+    supports_hybrid = True
 
     def _tiled_nbr_max(self, ctx, p, mask) -> jnp.ndarray:
         t = ctx.tiled
@@ -772,11 +833,204 @@ class _TiledEngine(RoundEngine):
         else:
             hit_w = self.phase2_hits(ctx, cand_w, state.alive, flags)
             new = phase3_update_bits(state, cand_w, hit_w, inc)
+        skipped = _tiles_skipped(ctx, flags)
         row = _telemetry_row(
             alive_count,
             _popcount_words(cand_w),
             _popcount_words(new.in_mis) - _popcount_words(state.in_mis),
-            _tiles_skipped(ctx, flags),
+            skipped,
+            _tiles_routed_dense(ctx, skipped, flags),
+            jnp.int32(0),
+        )
+        return new, row
+
+    # -- hybrid round bodies (DESIGN.md §16) -------------------------------
+    #
+    # The dense half reuses the engine's own machinery verbatim on a
+    # sub-context whose `tiled` is the compacted dense partition; the
+    # sparse tail is pure segment gather/scatter in GLOBAL padded vertex
+    # ids.  Sentinel pairs (row == col == n_padded) scatter into the
+    # dropped segment row, so padding contributes nothing — the same
+    # convention as the Graph sentinel edges.
+
+    def _dense_phase2(self, ctx, cand, alive, col_flags):
+        """Split-② over the dense partition, masked to covered rows (the
+        Pallas kernel leaves unvisited output blocks uninitialised — see
+        `_covered_rows`).  `ctx` here is the DENSE sub-context."""
+        counts = self._dense_phase2_counts(ctx, cand, alive, col_flags)
+        return jnp.where(_covered_vertices(ctx.tiled), counts, 0.0)
+
+    def _dense_phase2_counts(self, ctx, cand, alive, col_flags):
+        """Kernel dispatch seam for the hybrid split ②.  Fused engines
+        override to reach their parent's split kernel: the fused ②+③ would
+        commit phase ③ before the sparse hits can merge in."""
+        return self.phase2_counts(ctx, cand, alive, col_flags)
+
+    def _sparse_nbr_max(self, ctx, p, mask) -> jnp.ndarray:
+        """① over the COO tail: masked priority gather at the senders,
+        segment max at the receivers.  Empty segments come back at the
+        int32 min (< _NEG), so `jnp.maximum` with the dense half is exact."""
+        part = ctx.tiled.partition
+        pm = jnp.where(mask, p, _NEG)
+        return jax.ops.segment_max(
+            pm[part.sp_cols], part.sp_rows,
+            num_segments=ctx.tiled.n_padded + 1,
+        )[:-1]
+
+    def _sparse_counts(self, ctx, cand) -> jnp.ndarray:
+        """② over the COO tail: candidate gather + segment sum — the exact
+        nnz-wise slice of N_c the dense partition no longer covers."""
+        part = ctx.tiled.partition
+        return jax.ops.segment_sum(
+            cand[part.sp_cols].astype(jnp.float32), part.sp_rows,
+            num_segments=ctx.tiled.n_padded + 1,
+        )[:-1]
+
+    def _hybrid_nbr_max(self, ctx, dctx, p, mask) -> jnp.ndarray:
+        if ctx.cfg.phase1 != "tiled":
+            # the segment phase ① already covers the WHOLE graph — no merge
+            return _segment_nbr_max(ctx, p, mask)
+        dense_mx = jnp.where(
+            _covered_vertices(dctx.tiled),
+            self._tiled_nbr_max(dctx, p, mask),
+            _NEG,
+        )
+        return jnp.maximum(dense_mx, self._sparse_nbr_max(ctx, p, mask))
+
+    def _hybrid_candidates(self, ctx, dctx, pri, alive) -> jnp.ndarray:
+        max_np = self._hybrid_nbr_max(ctx, dctx, pri.select, alive)
+        if pri.resolve is None:
+            return alive & (pri.select > max_np)
+        pending = alive & (pri.select >= max_np)
+        max_res = self._hybrid_nbr_max(ctx, dctx, pri.resolve, pending)
+        return pending & (pri.resolve > max_res)
+
+    def step_hybrid(self, ctx, pri, state: MISRoundState) -> MISRoundState:
+        dctx = dataclasses.replace(ctx, tiled=ctx.tiled.partition.dense)
+        cand = self._hybrid_candidates(ctx, dctx, pri, state.alive)
+        flags = self.col_flags(dctx, cand, state.alive)
+        inc = round_increment(state)
+        n_c = self._dense_phase2(dctx, cand, state.alive, flags)
+        n_c = n_c + self._sparse_counts(ctx, cand)
+        return phase3_update(state, cand, n_c, inc)
+
+    def _step_hybrid_with_stats(
+        self, ctx, pri, state: MISRoundState
+    ) -> Tuple[MISRoundState, jnp.ndarray]:
+        dctx = dataclasses.replace(ctx, tiled=ctx.tiled.partition.dense)
+        alive_count = _count(state.alive)
+        cand = self._hybrid_candidates(ctx, dctx, pri, state.alive)
+        flags = self.col_flags(dctx, cand, state.alive)
+        inc = round_increment(state)
+        n_c = self._dense_phase2(dctx, cand, state.alive, flags)
+        n_c = n_c + self._sparse_counts(ctx, cand)
+        new = phase3_update(state, cand, n_c, inc)
+        skipped = _tiles_skipped(dctx, flags)
+        row = _telemetry_row(
+            alive_count,
+            _count(cand),
+            _count(new.in_mis) - _count(state.in_mis),
+            skipped,
+            _tiles_routed_dense(dctx, skipped, flags),
+            jnp.int32(ctx.tiled.partition.n_sparse_tiles),
+        )
+        return new, row
+
+    # -- hybrid, packed frontiers ------------------------------------------
+
+    def _sparse_nbr_max_bits(self, ctx, p, mask_words) -> jnp.ndarray:
+        """① tail on packed frontiers: a single-bit gather per nnz
+        (`gather_frontier_bits` — shift-and-mask, not a densify), then the
+        same masked segment max.  Priorities stay dense (they are values,
+        not frontiers)."""
+        part = ctx.tiled.partition
+        T = ctx.tiled.tile_size
+        bit = gather_frontier_bits(mask_words, part.sp_cols, T)
+        pm = jnp.where(bit, p[part.sp_cols], _NEG)
+        return jax.ops.segment_max(
+            pm, part.sp_rows, num_segments=ctx.tiled.n_padded + 1
+        )[:-1]
+
+    def _sparse_hits_bits(self, ctx, cand_words) -> jnp.ndarray:
+        """② tail on packed frontiers: candidate-bit gather, segment max
+        (any-hit), repacked to (nbc, W) words for the `|` merge."""
+        part = ctx.tiled.partition
+        T = ctx.tiled.tile_size
+        bit = gather_frontier_bits(cand_words, part.sp_cols, T)
+        hit = jax.ops.segment_max(
+            bit.astype(jnp.uint32), part.sp_rows,
+            num_segments=ctx.tiled.n_padded + 1,
+        )[:-1]
+        return pack_frontier_words(hit, T)
+
+    def _dense_hits_bits(self, dctx, cand_words, alive_words, flags) -> jnp.ndarray:
+        """② hit words over the dense partition, masked to covered rows
+        (same uninitialised-output hazard as `_dense_phase2`)."""
+        hit_w = self.phase2_hits(dctx, cand_words, alive_words, flags)
+        return jnp.where(_covered_rows(dctx.tiled)[:, None], hit_w, jnp.uint32(0))
+
+    def _hybrid_nbr_max_bits(
+        self, ctx, dctx, st, planes, p, mask_words
+    ) -> jnp.ndarray:
+        dense_mx = jnp.where(
+            _covered_vertices(dctx.tiled),
+            self._nbr_max_bits(dctx, st, planes, mask_words),
+            _NEG,
+        )
+        return jnp.maximum(dense_mx, self._sparse_nbr_max_bits(ctx, p, mask_words))
+
+    def _hybrid_candidates_bits(self, ctx, dctx, pri, alive_words) -> jnp.ndarray:
+        """`phase1_candidates_bits` with the merged Max_Np.  The bitwise
+        setup artefacts (`ctx.bits`) are built over the DENSE PARTITION in
+        hybrid runs (`make_bitwise_context(partition.dense, ...)`), so the
+        sorted-tile scan only walks dense tiles."""
+        T = ctx.tiled.tile_size
+        b = ctx.bits
+        if ctx.cfg.phase1 != "tiled":
+            max_np = _segment_nbr_max_bits_oracle(ctx, pri.select, alive_words)
+        else:
+            max_np = self._hybrid_nbr_max_bits(
+                ctx, dctx, b.select, b.select_planes, pri.select, alive_words
+            )
+        if pri.resolve is None:
+            return pack_frontier_words(pri.select > max_np, T) & alive_words
+        pending = pack_frontier_words(pri.select >= max_np, T) & alive_words
+        if ctx.cfg.phase1 != "tiled":
+            max_res = _segment_nbr_max_bits_oracle(ctx, pri.resolve, pending)
+        else:
+            max_res = self._hybrid_nbr_max_bits(
+                ctx, dctx, b.resolve, b.resolve_planes, pri.resolve, pending
+            )
+        return pack_frontier_words(pri.resolve > max_res, T) & pending
+
+    def step_bits_hybrid(self, ctx, pri, state: MISRoundState) -> MISRoundState:
+        dctx = dataclasses.replace(ctx, tiled=ctx.tiled.partition.dense)
+        cand_w = self._hybrid_candidates_bits(ctx, dctx, pri, state.alive)
+        flags = self.col_flags_bits(ctx, cand_w)
+        inc = round_increment(state)
+        hit_w = self._dense_hits_bits(dctx, cand_w, state.alive, flags)
+        hit_w = hit_w | self._sparse_hits_bits(ctx, cand_w)
+        return phase3_update_bits(state, cand_w, hit_w, inc)
+
+    def _step_bits_hybrid_with_stats(
+        self, ctx, pri, state: MISRoundState
+    ) -> Tuple[MISRoundState, jnp.ndarray]:
+        dctx = dataclasses.replace(ctx, tiled=ctx.tiled.partition.dense)
+        alive_count = _popcount_words(state.alive)
+        cand_w = self._hybrid_candidates_bits(ctx, dctx, pri, state.alive)
+        flags = self.col_flags_bits(ctx, cand_w)
+        inc = round_increment(state)
+        hit_w = self._dense_hits_bits(dctx, cand_w, state.alive, flags)
+        hit_w = hit_w | self._sparse_hits_bits(ctx, cand_w)
+        new = phase3_update_bits(state, cand_w, hit_w, inc)
+        skipped = _tiles_skipped(dctx, flags)
+        row = _telemetry_row(
+            alive_count,
+            _popcount_words(cand_w),
+            _popcount_words(new.in_mis) - _popcount_words(state.in_mis),
+            skipped,
+            _tiles_routed_dense(dctx, skipped, flags),
+            jnp.int32(ctx.tiled.partition.n_sparse_tiles),
         )
         return new, row
 
@@ -852,6 +1106,14 @@ class FusedPallasEngine(TiledPallasEngine):
 
     def phase2_counts(self, ctx, cand, alive, col_flags=None):
         raise NotImplementedError("fused_pallas runs ②+③ as one fused_step")
+
+    def _dense_phase2_counts(self, ctx, cand, alive, col_flags):
+        # hybrid demotes fused ②+③ to the split ② (the in-kernel ③ can't
+        # merge the sparse hits) — reach TiledPallasEngine's SpMV kernel
+        # past this class's intentionally-raising phase2_counts.  The
+        # bitwise twin needs no indirection: `phase2_hits` is inherited,
+        # not overridden.
+        return super().phase2_counts(ctx, cand, alive, col_flags)
 
     def fused_step(self, ctx, cand, alive, col_flags=None):
         from repro.kernels.ops import tc_spmv_fused

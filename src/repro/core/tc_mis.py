@@ -135,7 +135,13 @@ def _setup(
         # plane stacks only where the plane-scan kernel actually runs (real
         # TPU); everywhere else the clz formulation needs no planes.
         planes = engine.plane_kernel_nbr_max and jax.default_backend() == "tpu"
-        bits = make_bitwise_context(tiled, pri, planes=planes)
+        # hybrid runs walk only the compacted dense partition with the tile
+        # machinery — build the sorted-tile / word structures over it, not
+        # the full list (the sparse tail never touches them, DESIGN.md §16)
+        bits_tiled = tiled
+        if engine.supports_hybrid and tiled.partition is not None:
+            bits_tiled = tiled.partition.dense
+        bits = make_bitwise_context(bits_tiled, pri, planes=planes)
     ctx = EngineContext(
         g=g, tiled=tiled, cfg=config, col_gate=col_gate,
         frontier=frontier, bits=bits,
@@ -276,10 +282,28 @@ def _run_phases_impl(  # repro-lint: disable=RPR010,RPR011 host-stepped profiler
         g, tiled, key, config, priorities, alive0, col_gate, member_rounds
     )
 
+    # Hybrid runs always profile as SPLIT ②+③: fused engines demote under a
+    # partition (the in-kernel ③ cannot merge the sparse-tail hits), exactly
+    # like the production `step_hybrid` path.
+    hybrid = engine.supports_hybrid and ctx.tiled.partition is not None
+    fused_call = engine.fused and not hybrid
+    if hybrid:
+        dctx = dataclasses.replace(ctx, tiled=ctx.tiled.partition.dense)
     if ctx.frontier == "bitwise":
         # the packed-frontier round body, split at the same phase seams
-        p1 = jax.jit(lambda alive: engine.phase1_candidates_bits(ctx, pri, alive))
-        if engine.fused:
+        if hybrid:
+            p1 = jax.jit(
+                lambda alive: engine._hybrid_candidates_bits(ctx, dctx, pri, alive)
+            )
+            p2 = jax.jit(
+                lambda cand, alive: engine._dense_hits_bits(
+                    dctx, cand, alive, engine.col_flags_bits(ctx, cand)
+                )
+                | engine._sparse_hits_bits(ctx, cand)
+            )
+            p3 = jax.jit(phase3_update_bits)
+        elif fused_call:
+            p1 = jax.jit(lambda alive: engine.phase1_candidates_bits(ctx, pri, alive))
             p2 = jax.jit(
                 lambda cand, alive: engine.fused_step_bits(
                     ctx, cand, alive, engine.col_flags_bits(ctx, cand)
@@ -291,6 +315,7 @@ def _run_phases_impl(  # repro-lint: disable=RPR010,RPR011 host-stepped profiler
                 )
             )
         else:
+            p1 = jax.jit(lambda alive: engine.phase1_candidates_bits(ctx, pri, alive))
             p2 = jax.jit(
                 lambda cand, alive: engine.phase2_hits(
                     ctx, cand, alive, engine.col_flags_bits(ctx, cand)
@@ -298,8 +323,19 @@ def _run_phases_impl(  # repro-lint: disable=RPR010,RPR011 host-stepped profiler
             )
             p3 = jax.jit(phase3_update_bits)
     else:
-        p1 = jax.jit(lambda alive: engine.phase1_candidates(ctx, pri, alive))
-        if engine.fused:
+        if hybrid:
+            p1 = jax.jit(
+                lambda alive: engine._hybrid_candidates(ctx, dctx, pri, alive)
+            )
+            p2 = jax.jit(
+                lambda cand, alive: engine._dense_phase2(
+                    dctx, cand, alive, engine.col_flags(dctx, cand, alive)
+                )
+                + engine._sparse_counts(ctx, cand)
+            )
+            p3 = jax.jit(phase3_update)
+        elif fused_call:
+            p1 = jax.jit(lambda alive: engine.phase1_candidates(ctx, pri, alive))
             p2 = jax.jit(
                 lambda cand, alive: engine.fused_step(
                     ctx, cand, alive, engine.col_flags(ctx, cand, alive)
@@ -311,6 +347,7 @@ def _run_phases_impl(  # repro-lint: disable=RPR010,RPR011 host-stepped profiler
                 )
             )
         else:
+            p1 = jax.jit(lambda alive: engine.phase1_candidates(ctx, pri, alive))
             p2 = jax.jit(
                 lambda cand, alive: engine.phase2_counts(
                     ctx, cand, alive, engine.col_flags(ctx, cand, alive)
@@ -320,7 +357,7 @@ def _run_phases_impl(  # repro-lint: disable=RPR010,RPR011 host-stepped profiler
 
     def advance(state, cand, out):
         inc = round_increment(state)
-        return p3(state, out, inc) if engine.fused else p3(state, cand, out, inc)
+        return p3(state, out, inc) if fused_call else p3(state, cand, out, inc)
 
     if warmup:  # compile outside the timers
         c = p1(state0.alive)

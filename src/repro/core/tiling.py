@@ -28,7 +28,7 @@ the tile dtype, so raw-array call sites stay storage-polymorphic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,12 @@ from repro.graphs.graph import Graph
 
 STORAGES = ("int8", "bitpack")   # concrete tile storage formats
 _BITS = 32                       # bits per packed word (uint32)
+
+# auto-mode gate for hybrid tile routing (DESIGN.md §16): attaching a
+# partition only pays off once there are enough tiles for the split to
+# matter AND a real sparse tail to peel off.
+HYBRID_AUTO_MIN_TILES = 16
+HYBRID_AUTO_MIN_SPARSE_FRAC = 0.25
 
 
 def packed_words(tile_size: int) -> int:
@@ -166,6 +172,12 @@ class BlockTiledGraph:
       n_block_rows / n_block_cols: static — ceil(n_nodes / T).
       storage:    static — 'int8' | 'bitpack' (the tile dtype's declared
                   format; raw-array consumers detect it from the dtype).
+      partition:  optional hybrid routing split (DESIGN.md §16): a
+                  `TilePartition` whose compacted dense sub-tiling and
+                  COO sparse tail the hybrid engines dispatch instead of
+                  `tiles`.  The FULL tile list above stays authoritative —
+                  repair, retiling and sharding operate on it; the
+                  partition is a derived, rebuildable view.
     """
     tiles: jnp.ndarray
     tile_rows: jnp.ndarray
@@ -177,6 +189,7 @@ class BlockTiledGraph:
     n_block_rows: int = dataclasses.field(metadata=dict(static=True))
     n_block_cols: int = dataclasses.field(metadata=dict(static=True))
     storage: str = dataclasses.field(default="int8", metadata=dict(static=True))
+    partition: Optional["TilePartition"] = None
 
     @property
     def n_tiles_pad(self) -> int:
@@ -234,7 +247,212 @@ class BlockTiledGraph:
             tiles = jnp.asarray(
                 np.asarray(unpack_tile_bits(self.tiles, self.tile_size))
             )
-        return dataclasses.replace(self, tiles=tiles, storage=storage)
+        out = dataclasses.replace(
+            self, tiles=tiles, storage=storage, partition=None
+        )
+        if self.partition is not None:
+            # the partition's dense sub-tiling must share the new storage —
+            # rebuild it (deterministic, so bit-identical up to format)
+            out = dataclasses.replace(
+                out, partition=partition_tiles(out, self.partition.threshold)
+            )
+        return out
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TilePartition:
+    """nnz-classified hybrid routing split of a tiled adjacency (§16).
+
+    Built at plan time by `partition_tiles`: tiles at or above the density
+    threshold form a COMPACTED dense sub-tiling (same block grid, same
+    storage, own `row_starts` — all dense tile ops run on it unchanged,
+    and the sparse/empty tiles vanish from its dispatch entirely); tiles
+    below the threshold are lowered to COO edge lists executed through the
+    `core/spmv.py` segment ops.  Empty tiles appear in NEITHER list.
+
+    Attributes:
+      dense:     compacted `BlockTiledGraph` over the dense tile set
+                 (its own `partition` is always None).
+      sp_rows:   (sp_pad,) int32 — GLOBAL padded output-vertex id per
+                 sparse nnz (tile row axis: the SpMV scatter target).
+      sp_cols:   (sp_pad,) int32 — GLOBAL padded input-vertex id per
+                 sparse nnz (tile column axis: the gather source).
+                 Both padded to a power of two with the sentinel id
+                 `n_padded`; segment consumers use `num_segments =
+                 n_padded + 1` and slice the sentinel row off, exactly
+                 like the Graph sentinel-edge convention.
+      threshold: static — nnz cut: dense iff nnz >= threshold.
+      n_dense_tiles / n_sparse_tiles: static — real tiles per class.
+      sp_nnz:    static — real (unpadded) sparse-tail edge count.
+    """
+    dense: BlockTiledGraph
+    sp_rows: jnp.ndarray
+    sp_cols: jnp.ndarray
+    threshold: int = dataclasses.field(metadata=dict(static=True))
+    n_dense_tiles: int = dataclasses.field(metadata=dict(static=True))
+    n_sparse_tiles: int = dataclasses.field(metadata=dict(static=True))
+    sp_nnz: int = dataclasses.field(metadata=dict(static=True))
+
+
+def tile_nnz(tiled: BlockTiledGraph) -> np.ndarray:
+    """Per-tile nnz over the stored tile list, computed ON DEVICE — one
+    (n_tiles_pad,) int32 transfer (bitpack counts bits via popcount;
+    padding tiles are all-zero so their entries read 0)."""
+    t = tiled.tiles
+    if tiled.storage == "bitpack":
+        counts = jnp.sum(
+            jax.lax.population_count(t).astype(jnp.int32),
+            axis=(1, 2), dtype=jnp.int32,
+        )
+    else:
+        counts = jnp.sum(
+            (t != 0).astype(jnp.int32), axis=(1, 2), dtype=jnp.int32
+        )
+    return np.asarray(counts)
+
+
+def _host_unpack_tile_bits(packed: np.ndarray, tile_size: int) -> np.ndarray:
+    """Host-side (numpy) inverse of `pack_tile_bits` for the plan-time
+    partition build — no device round-trip, no jit trace."""
+    shifts = np.arange(_BITS, dtype=np.uint32)
+    bits = (packed[..., None] >> shifts) & np.uint32(1)
+    full = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * _BITS,))
+    return (full[..., : int(tile_size)] != 0).astype(np.int8)
+
+
+def partition_tiles(
+    tiled: BlockTiledGraph,
+    threshold: int,
+    *,
+    nnz: np.ndarray | None = None,
+) -> TilePartition:
+    """Classify tiles by nnz and build the hybrid split (host-side, numpy).
+
+    Deterministic in (tiles, threshold): rebuilding after a delta or a
+    storage conversion yields bit-identical partitions, which keeps the
+    dyngraph rebuild oracle exact.  Dense tiles keep their row-major order
+    so the compacted CSR stays kernel-legal; the sparse tail needs no
+    ordering (segment ops scatter by id).
+    """
+    T = tiled.tile_size
+    thr = int(threshold)
+    if nnz is None:
+        nnz = tile_nnz(tiled)
+    real = np.asarray(nnz)[: tiled.n_tiles]
+    dense_idx = np.nonzero(real >= thr)[0]
+    sparse_idx = np.nonzero((real > 0) & (real < thr))[0]
+
+    tiles_h = np.asarray(tiled.tiles)
+    rows_h = np.asarray(tiled.tile_rows)
+    cols_h = np.asarray(tiled.tile_cols)
+
+    # -- dense subset: gather, recompute CSR, re-pad (empty tiles vanish) --
+    n_dense = int(dense_idx.shape[0])
+    d_tiles = tiles_h[dense_idx]
+    d_rows = rows_h[dense_idx].astype(np.int32)
+    d_cols = cols_h[dense_idx].astype(np.int32)
+    counts = np.bincount(
+        d_rows if n_dense else np.zeros(0, np.int64),
+        minlength=tiled.n_block_rows,
+    )
+    row_starts = np.zeros(tiled.n_block_rows + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_starts[1:])
+    target = padded_tile_count(n_dense)
+    if target > n_dense:
+        last_row = d_rows[-1] if n_dense else np.int32(0)
+        pad_shape = (target - n_dense,) + tiles_h.shape[1:]
+        d_tiles = np.concatenate(
+            [d_tiles, np.zeros(pad_shape, tiles_h.dtype)], axis=0
+        )
+        d_rows = np.concatenate(
+            [d_rows, np.full(target - n_dense, last_row, np.int32)]
+        )
+        d_cols = np.concatenate(
+            [d_cols, np.zeros(target - n_dense, np.int32)]
+        )
+    dense = BlockTiledGraph(
+        tiles=jnp.asarray(d_tiles),
+        tile_rows=jnp.asarray(d_rows),
+        tile_cols=jnp.asarray(d_cols),
+        row_starts=jnp.asarray(row_starts),
+        n_tiles=n_dense,
+        n_nodes=tiled.n_nodes,
+        tile_size=T,
+        n_block_rows=tiled.n_block_rows,
+        n_block_cols=tiled.n_block_cols,
+        storage=tiled.storage,
+    )
+
+    # -- sparse tail: COO in GLOBAL padded vertex ids, sentinel-padded --
+    sp_sub = tiles_h[sparse_idx]
+    if tiled.storage == "bitpack":
+        sp_sub = _host_unpack_tile_bits(sp_sub, T)
+    t_i, r_i, c_i = np.nonzero(sp_sub)
+    v = rows_h[sparse_idx][t_i].astype(np.int64) * T + r_i
+    u = cols_h[sparse_idx][t_i].astype(np.int64) * T + c_i
+    sp_nnz = int(v.shape[0])
+    cap = next_pow2(max(sp_nnz, 8))
+    sentinel = np.int32(tiled.n_padded)
+    sp_rows = np.full(cap, sentinel, np.int32)
+    sp_cols = np.full(cap, sentinel, np.int32)
+    sp_rows[:sp_nnz] = v.astype(np.int32)
+    sp_cols[:sp_nnz] = u.astype(np.int32)
+
+    return TilePartition(
+        dense=dense,
+        sp_rows=jnp.asarray(sp_rows),
+        sp_cols=jnp.asarray(sp_cols),
+        threshold=thr,
+        n_dense_tiles=n_dense,
+        n_sparse_tiles=int(sparse_idx.shape[0]),
+        sp_nnz=sp_nnz,
+    )
+
+
+def attach_partition(
+    tiled: BlockTiledGraph,
+    mode: str = "auto",
+    threshold: int | None = None,
+) -> BlockTiledGraph:
+    """Hybrid-routing policy front door (the knob behind
+    `SolveOptions.hybrid`): returns `tiled` with a partition attached,
+    or partition-free when the policy says the split won't pay.
+
+      off     never partition (drop any stale one).
+      forced  always partition (tests force tiny graphs through hybrid).
+      auto    partition iff there are ≥ HYBRID_AUTO_MIN_TILES non-empty
+              tiles AND the sub-threshold tail is ≥
+              HYBRID_AUTO_MIN_SPARSE_FRAC of them.
+
+    `threshold` defaults to the roofline break-even
+    (`repro.perf.hybrid_density_threshold`).
+    """
+    if mode == "off":
+        if tiled.partition is None:
+            return tiled
+        return dataclasses.replace(tiled, partition=None)
+    if mode not in ("auto", "forced"):
+        raise ValueError(f"unknown hybrid mode {mode!r}; valid: auto|off|forced")
+    if threshold is None:
+        from repro.perf.roofline import hybrid_density_threshold
+
+        threshold = hybrid_density_threshold(tiled.tile_size, tiled.storage)
+    thr = int(threshold)
+    nnz = tile_nnz(tiled)
+    real = nnz[: tiled.n_tiles]
+    nonempty = int(np.count_nonzero(real))
+    n_sparse = int(np.count_nonzero((real > 0) & (real < thr)))
+    if mode == "auto" and (
+        nonempty < HYBRID_AUTO_MIN_TILES
+        or n_sparse == 0
+        or n_sparse < HYBRID_AUTO_MIN_SPARSE_FRAC * nonempty
+    ):
+        if tiled.partition is None:
+            return tiled
+        return dataclasses.replace(tiled, partition=None)
+    part = partition_tiles(tiled, thr, nnz=nnz)
+    return dataclasses.replace(tiled, partition=part)
 
 
 def rcm_ordering(g: Graph) -> np.ndarray:
@@ -409,6 +627,27 @@ def unpack_frontier_words(words: jnp.ndarray, tile_size: int) -> jnp.ndarray:
     return unpack_frontier_bits(words, tile_size).reshape(-1)
 
 
+def gather_frontier_bits(
+    words: jnp.ndarray, ids: jnp.ndarray, tile_size: int
+) -> jnp.ndarray:
+    """Per-id bit extraction from standard-layout frontier words: for each
+    GLOBAL padded vertex id, the bool at its (block, word, bit) slot.
+
+    The hybrid sparse tail reads single frontier bits at its COO gather
+    sites; this is a shift-and-mask per id — NOT a frontier densify, so it
+    stays legal on hot paths (and lives here, in the packing substrate,
+    like every other consumer of the bit layout).  Sentinel ids (= the
+    padded vertex count) land out of range and clamp under jnp gather
+    semantics; hybrid callers pair them with sentinel scatter rows, so the
+    clamped garbage is always dropped.
+    """
+    T = int(tile_size)
+    ids = ids.astype(jnp.int32)
+    slot = ids % T
+    word = words[ids // T, slot // _BITS]
+    return ((word >> (slot % _BITS).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+
+
 # -- priority-sorted bit order (the bitwise neighbour-max substrate) --------
 #
 # The bitwise Max_Np is a priority-plane scan collapsed to one pass: sort
@@ -502,13 +741,30 @@ def pack_priority_planes(
 
 
 def tile_stats(tiled: BlockTiledGraph) -> dict:
-    """Stats for the memory-footprint benchmark (paper §3.2).
+    """Stats for the memory-footprint benchmark (paper §3.2) and the hybrid
+    classifier (§16).
 
-    nnz is computed on device (`BlockTiledGraph.nnz`) — only the scalar is
-    transferred; the old `np.asarray(tiles)` full-array pull is gone."""
-    nnz = tiled.nnz()
+    Per-tile nnz is computed on device (`tile_nnz` popcount) — ONE
+    (n_tiles_pad,) transfer; the aggregate nnz and the histogram derive
+    from it on host, so adding the distribution cost no extra traffic
+    (the old aggregate-only scalar pull is gone)."""
+    per_tile = tile_nnz(tiled)[: tiled.n_tiles]
+    nnz = int(per_tile.sum())
     cells = tiled.n_tiles * tiled.tile_size * tiled.tile_size
     total_blocks = tiled.n_block_rows * tiled.n_block_cols
+    # power-of-two-bucketed nnz histogram: bucket `u` counts stored tiles
+    # with nnz in (u/2, u]; bucket 0 would be empty tiles (never stored by
+    # the builder, but deltas can drain a tile in place).
+    cap = tiled.tile_size * tiled.tile_size
+    hist = {0: int(np.count_nonzero(per_tile == 0))}
+    upper = 1
+    while True:
+        hist[upper] = int(
+            np.count_nonzero((per_tile > upper // 2) & (per_tile <= upper))
+        )
+        if upper >= cap:
+            break
+        upper *= 2
     return dict(
         tile_size=tiled.tile_size,
         n_tiles=tiled.n_tiles,
@@ -516,6 +772,8 @@ def tile_stats(tiled: BlockTiledGraph) -> dict:
         block_grid=total_blocks,
         block_occupancy=tiled.n_tiles / max(total_blocks, 1),
         intra_tile_density=nnz / max(cells, 1),
+        tile_nnz=per_tile.tolist(),
+        nnz_hist=hist,
         tile_payload_bytes=tiled.tile_payload_bytes(),
         bsr_bytes=tiled.memory_bytes(),
         csr_bytes=8 * nnz + 4 * (tiled.n_nodes + 1),  # int32 idx + int64-ish ptr

@@ -36,7 +36,12 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tiling import BlockTiledGraph, packed_words, padded_tile_count
+from repro.core.tiling import (
+    BlockTiledGraph,
+    packed_words,
+    padded_tile_count,
+    partition_tiles,
+)
 from repro.dyngraph.delta import EdgeDelta, _pair_keys
 from repro.graphs.graph import Graph, from_edges
 
@@ -110,6 +115,23 @@ def _edit_tiles(
         tiles[tidx, rloc, cloc] = 1 if set_bit else 0
 
 
+def _repartition(
+    old: BlockTiledGraph, out: BlockTiledGraph
+) -> BlockTiledGraph:
+    """Hybrid reclassification after a tile edit (DESIGN.md §16): a delta
+    can push a tile across the nnz threshold in either direction, and the
+    compacted dense partition holds COPIES of the edited tiles — so a
+    partitioned input rebuilds its partition, at the same threshold, over
+    the mutated tile list.  Deterministic (`partition_tiles`), hence still
+    bit-exact with partitioning a from-scratch rebuild.  Plan-level 'auto'
+    gate re-evaluation is the caller's concern (`api.plan.patch_plan`)."""
+    if old.partition is None:
+        return out
+    return dataclasses.replace(
+        out, partition=partition_tiles(out, old.partition.threshold)
+    )
+
+
 def apply_delta(tiled: BlockTiledGraph, delta: EdgeDelta) -> BlockTiledGraph:
     """Repack only the touched tiles of a `BlockTiledGraph`.
 
@@ -157,10 +179,14 @@ def apply_delta(tiled: BlockTiledGraph, delta: EdgeDelta) -> BlockTiledGraph:
         drained = touched[~stored[touched].any(axis=(1, 2))] \
             if touched.size else touched
         if drained.size == 0:
-            return dataclasses.replace(tiled, tiles=jnp.asarray(stored))
+            return _repartition(
+                tiled, dataclasses.replace(tiled, tiles=jnp.asarray(stored))
+            )
         keep = np.ones(nt, bool)
         keep[drained] = False
-        return _rebuild_index(tiled, stored[:nt][keep], tile_keys[keep])
+        return _repartition(
+            tiled, _rebuild_index(tiled, stored[:nt][keep], tile_keys[keep])
+        )
 
     # ---- structural path: merge new (zero) tiles into the sorted list ---
     merged_keys = np.union1d(tile_keys, new_keys)
@@ -185,7 +211,7 @@ def apply_delta(tiled: BlockTiledGraph, delta: EdgeDelta) -> BlockTiledGraph:
         keep = np.ones(n_merged, bool)
         keep[drained] = False
         merged, merged_keys = merged[keep], merged_keys[keep]
-    return _rebuild_index(tiled, merged, merged_keys)
+    return _repartition(tiled, _rebuild_index(tiled, merged, merged_keys))
 
 
 def _rebuild_index(

@@ -42,7 +42,7 @@ def _compile_pass(cell, mesh, variant):
 
 
 def _cost_record(compiled):
-    from benchmarks.roofline import parse_collective_bytes
+    from repro.perf.roofline import parse_collective_bytes
 
     ca = compiled.cost_analysis() or {}
     colls = parse_collective_bytes(compiled.as_text())
@@ -74,7 +74,7 @@ def run_cell(arch_id: str, shape: str, mesh_kind: str, out_dir: str,
              skip_existing: bool) -> dict:
     from repro.configs import REGISTRY
     from repro.launch.mesh import make_production_mesh
-    from benchmarks.roofline import RooflineTerms, HBM_BW, ICI_BW, PEAK_FLOPS
+    from repro.perf.roofline import RooflineTerms, HBM_BW, ICI_BW, PEAK_FLOPS
 
     tag = f"{arch_id}__{shape}__{mesh_kind}".replace("/", "_")
     path = os.path.join(out_dir, tag + ".json")

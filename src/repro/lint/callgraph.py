@@ -56,6 +56,10 @@ SEED_ENGINE_METHODS = frozenset(
         "fused_step_bits",
         "step_with_stats",
         "_step_bits_with_stats",
+        "step_hybrid",
+        "step_bits_hybrid",
+        "_step_hybrid_with_stats",
+        "_step_bits_hybrid_with_stats",
     }
 )
 SEED_SUFFIXES = ("_kernel",)

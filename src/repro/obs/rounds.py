@@ -3,7 +3,7 @@
 The device side (DESIGN.md §14): when `SolveOptions.telemetry` is on,
 `_tc_mis_impl` threads a fixed-shape ``(max_rounds, TELEMETRY_COLS)`` int32
 buffer through the round `while_loop`.  Each executed round r writes row r
-with four cheap reductions over state the round body already holds —
+with six cheap reductions over state the round body already holds —
 no extra SpMVs, no host callbacks, ONE device→host transfer at the
 epilogue:
 
@@ -12,6 +12,12 @@ epilogue:
     col 2  COL_SELECTED       popcount(in_mis_new) − popcount(in_mis_old)
     col 3  COL_TILES_SKIPPED  n_tiles − Σ col_flags[tile_cols]  (0 when the
                               engine computes no flags, e.g. segment)
+    col 4  COL_TILES_DENSE    tiles dispatched on the dense path this round
+                              (hybrid: the compacted dense partition minus
+                              its skipped tiles; non-hybrid: n_tiles −
+                              skipped)
+    col 5  COL_TILES_SPARSE   tiles routed through the COO/segment tail
+                              (0 outside hybrid)
 
 Rows past the executed round count stay at the fill value −1, which is how
 `RoundTrace.from_buffer` distinguishes "round never ran" from a legitimate
@@ -29,17 +35,22 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-TELEMETRY_COLS = 4
+TELEMETRY_COLS = 6
 COL_ALIVE = 0
 COL_FRONTIER = 1
 COL_SELECTED = 2
 COL_TILES_SKIPPED = 3
+COL_TILES_DENSE = 4
+COL_TILES_SPARSE = 5
 
 # rows beyond the executed rounds keep this fill; col 0 (alive) is never
 # negative for an executed round, so it doubles as the row-validity mark
 TELEMETRY_FILL = -1
 
-COLUMN_NAMES = ("alive", "frontier", "selected", "tiles_skipped")
+COLUMN_NAMES = (
+    "alive", "frontier", "selected", "tiles_skipped",
+    "tiles_dense", "tiles_sparse",
+)
 
 
 @dataclass(frozen=True)
@@ -55,6 +66,8 @@ class RoundTrace:
     frontier: List[int]
     selected: List[int]
     tiles_skipped: List[int]
+    tiles_dense: List[int] = field(default_factory=list)
+    tiles_sparse: List[int] = field(default_factory=list)
     tiles_total: int = 0
     meta: Dict[str, object] = field(default_factory=dict)
 
@@ -87,6 +100,8 @@ class RoundTrace:
             frontier=[int(v) for v in used[:, COL_FRONTIER]],
             selected=[int(v) for v in used[:, COL_SELECTED]],
             tiles_skipped=[int(v) for v in used[:, COL_TILES_SKIPPED]],
+            tiles_dense=[int(v) for v in used[:, COL_TILES_DENSE]],
+            tiles_sparse=[int(v) for v in used[:, COL_TILES_SPARSE]],
             tiles_total=int(tiles_total),
             meta=dict(meta or {}),
         )
@@ -100,6 +115,8 @@ class RoundTrace:
             frontier=list(self.frontier),
             selected=list(self.selected),
             tiles_skipped=list(self.tiles_skipped),
+            tiles_dense=list(self.tiles_dense),
+            tiles_sparse=list(self.tiles_sparse),
             tiles_total=self.tiles_total,
             meta=dict(self.meta),
         )
@@ -112,6 +129,8 @@ class RoundTrace:
             frontier=[int(v) for v in d["frontier"]],
             selected=[int(v) for v in d["selected"]],
             tiles_skipped=[int(v) for v in d["tiles_skipped"]],
+            tiles_dense=[int(v) for v in d.get("tiles_dense", [])],
+            tiles_sparse=[int(v) for v in d.get("tiles_sparse", [])],
             tiles_total=int(d.get("tiles_total", 0)),
             meta=dict(d.get("meta", {})),
         )
@@ -147,6 +166,14 @@ class RoundTrace:
             frontier_final=self.frontier[-1],
             tiles_skipped_mean=round(sum(self.tiles_skipped) / self.rounds, 1),
             tiles_skip_frac=skip_frac,
+            tiles_dense_mean=(
+                round(sum(self.tiles_dense) / self.rounds, 1)
+                if self.tiles_dense else None
+            ),
+            tiles_sparse_mean=(
+                round(sum(self.tiles_sparse) / self.rounds, 1)
+                if self.tiles_sparse else None
+            ),
         )
 
     def check_invariants(self) -> None:

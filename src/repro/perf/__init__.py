@@ -1,0 +1,24 @@
+"""Performance modelling: roofline terms and the hybrid-routing cost model."""
+from repro.perf.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    dense_tile_cost_s,
+    hybrid_density_threshold,
+    parse_collective_bytes,
+    roofline_from_compiled,
+    sparse_edge_cost_s,
+)
+
+__all__ = [
+    "HBM_BW",
+    "ICI_BW",
+    "PEAK_FLOPS",
+    "RooflineTerms",
+    "dense_tile_cost_s",
+    "hybrid_density_threshold",
+    "parse_collective_bytes",
+    "roofline_from_compiled",
+    "sparse_edge_cost_s",
+]

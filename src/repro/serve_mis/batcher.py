@@ -46,7 +46,12 @@ import numpy as np
 
 from repro.core.heuristics import Priorities, make_priorities
 from repro.core.spmv import _NEG
-from repro.core.tiling import BlockTiledGraph, next_pow2, packed_words
+from repro.core.tiling import (
+    BlockTiledGraph,
+    next_pow2,
+    packed_words,
+    partition_tiles,
+)
 from repro.graphs.graph import Graph
 # module-level code with no layer instance to own metrics records into the
 # process-wide registry (repro.obs; DESIGN.md §14)
@@ -147,12 +152,23 @@ class PackedBatch:
         return len(self.sizes)
 
     def signature(self) -> str:
-        """Shape-class id: batches with equal signatures reuse one compile."""
+        """Shape-class id: batches with equal signatures reuse one compile.
+
+        A hybrid-partitioned batch carries the partition's static shapes
+        (threshold + both padded compacted-list sizes): the partition is a
+        pytree child of the tiling, so these are jit keys — two batches
+        differing only there must not claim one compiled program.  The
+        storage stays the terminal component (callers key on it)."""
         b = self.bucket
         resolve = "r" if self.priorities.resolve is not None else "-"
+        part = self.tiled.partition
+        hy = "" if part is None else (
+            f".h{part.threshold}:{int(part.dense.tiles.shape[0])}"
+            f":{int(part.sp_rows.shape[0])}"
+        )
         return (
             f"T{b.tile_size}.b{b.n_blocks}.t{b.n_tiles_pad}.e{b.e_pad}"
-            f".{resolve}.{b.storage}"
+            f".{resolve}{hy}.{b.storage}"
         )
 
     def unpack(self, x) -> List[np.ndarray]:
@@ -293,6 +309,20 @@ def pack_batch(
         n_block_cols=bucket.n_blocks,
         storage=storage,
     )
+
+    # Hybrid routing survives batching only when it is coherent across the
+    # whole pack: every member partitioned, all at one threshold.  The batch
+    # partition is REBUILT over the packed tile list (padding tiles are
+    # all-zero, so they land in neither compacted list) rather than
+    # offset-concatenated — `partition_tiles` is deterministic, so this is
+    # the same partition a from-scratch plan of the packed graph would get.
+    parts = [p.tiled.partition for p in plans]
+    if parts and all(pt is not None for pt in parts):
+        thr = parts[0].threshold
+        if all(pt.threshold == thr for pt in parts):
+            batch_tiled = dataclasses.replace(
+                batch_tiled, partition=partition_tiles(batch_tiled, thr)
+            )
 
     priorities = Priorities(
         select=jnp.asarray(sel),
