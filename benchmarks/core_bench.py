@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import QUICK, emit, time_fn
 from repro.api import Solver, SolveOptions
+from repro.obs.bench import write_bench
 from repro.core import build_block_tiles, tile_stats
 from repro.core.engine import (
     tile_neighbor_max,
@@ -292,16 +293,15 @@ def main() -> None:
     reduction = s_int8["bsr_bytes"] / max(s_pack["bsr_bytes"], 1)
     emit("core.mem.T128_reduction", 0.0, f"{reduction:.2f}x")
 
-    doc = dict(
+    # stamped (git_sha/timestamp/backend/jax_version) + history-appended
+    # through the one bench emission seam (repro.obs.bench, DESIGN.md §17)
+    doc = write_bench(dict(
         bench="core",
         backend=jax.default_backend(),
         quick=quick,
         results=results,
         t128_tile_hbm_reduction=round(reduction, 2),
-    )
-    with open(OUT_PATH, "w") as f:
-        json.dump(doc, f, indent=2)
-    print(f"# wrote {OUT_PATH}")
+    ), OUT_PATH)
 
     # bit-parity of the storage formats is asserted by tier-1 tests; here we
     # only guard that both formats actually ran every layer

@@ -23,7 +23,6 @@ STRICTLY fewer rounds than the cold re-solve, in both storage formats.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -35,6 +34,7 @@ from repro.api import Solver, SolveOptions
 from repro.core.validate import is_valid_mis_jit
 from repro.dyngraph import random_delta
 from repro.graphs.generators import erdos_renyi
+from repro.obs.bench import write_bench
 
 OUT_PATH = os.environ.get("BENCH_DYNGRAPH_OUT", "BENCH_dyngraph.json")
 STORAGES = ("int8", "bitpack")
@@ -98,15 +98,15 @@ def main() -> None:
     for storage in STORAGES:
         results += _bench_storage(storage, n, T)
 
-    with open(OUT_PATH, "w") as f:
-        json.dump(dict(
-            bench="dyngraph",
-            backend=jax.default_backend(),
-            quick=QUICK,
-            small_delta_frac=SMALL_FRAC,
-            results=results,
-        ), f, indent=2)
-    print(f"# wrote {OUT_PATH}")
+    # stamped (git_sha/timestamp/backend/jax_version) + history-appended
+    # through the one bench emission seam (repro.obs.bench, DESIGN.md §17)
+    write_bench(dict(
+        bench="dyngraph",
+        backend=jax.default_backend(),
+        quick=QUICK,
+        small_delta_frac=SMALL_FRAC,
+        results=results,
+    ), OUT_PATH)
 
 
 if __name__ == "__main__":

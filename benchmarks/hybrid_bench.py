@@ -34,7 +34,6 @@ Acceptance bars (ISSUE 9), asserted at the sweep's top density:
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 
@@ -43,6 +42,7 @@ import jax
 from benchmarks.common import QUICK, emit
 from repro.api import Solver, SolveOptions
 from repro.graphs.generators import erdos_renyi, powerlaw
+from repro.obs.bench import write_bench
 
 OUT_PATH = os.environ.get("BENCH_HYBRID_OUT", "BENCH_hybrid.json")
 ENGINES = ("hybrid", "dense", "segment")
@@ -147,15 +147,14 @@ def main() -> None:
     for kind in ("uniform", "powerlaw"):
         rows += _sweep(kind, n, T, densities)
 
-    doc = dict(
+    # stamped (git_sha/timestamp/backend/jax_version) + history-appended
+    # through the one bench emission seam (repro.obs.bench, DESIGN.md §17)
+    write_bench(dict(
         bench="hybrid",
         backend=jax.default_backend(),
         quick=quick,
         results=rows,
-    )
-    with open(OUT_PATH, "w") as f:
-        json.dump(doc, f, indent=2)
-    print(f"# wrote {OUT_PATH}")
+    ), OUT_PATH)
 
     # the §16 perf bars (ISSUE 9 acceptance).  Skewed takes the sweep's BEST
     # point — the bar asserts the routing win exists, and where it lands on

@@ -16,12 +16,12 @@ caches are not doing their job.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 from benchmarks.common import QUICK, emit
 from repro.graphs.generators import erdos_renyi, grid2d, powerlaw
+from repro.obs.bench import write_bench
 from repro.serve_mis import MISService, ServeConfig
 
 OUT_PATH = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
@@ -83,10 +83,10 @@ def main() -> None:
         emit(f"serve_warm_b{batch}", t_warm / n_requests * 1e6,
              f"{warm_gps:.1f} graphs/s warm/cold={warm_gps / cold_gps:.2f}x")
 
-    with open(OUT_PATH, "w") as f:
-        json.dump(dict(bench="serve_throughput", engine=ENGINE,
-                       results=results), f, indent=2)
-    print(f"# wrote {OUT_PATH}")
+    # stamped (git_sha/timestamp/backend/jax_version) + history-appended
+    # through the one bench emission seam (repro.obs.bench, DESIGN.md §17)
+    write_bench(dict(bench="serve_throughput", engine=ENGINE, quick=QUICK,
+                     results=results), OUT_PATH)
 
     slow = [r for r in results if r["warm_graphs_per_s"] <= r["cold_graphs_per_s"]]
     if slow:

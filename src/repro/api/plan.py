@@ -223,6 +223,10 @@ class Plan:
     epoch: int = 0                     # deltas applied since the epoch-0 build
     hybrid: str = "off"                # tile-partition policy (DESIGN.md §16)
     hybrid_threshold: int = 0          # resolved nnz cut (0 iff hybrid == 'off')
+    occupancy0: float = 0.0            # stored-tile density at the epoch-0
+    #                                    build — the locality-decay baseline
+    #                                    (DESIGN.md §17); 0.0 = unknown
+    #                                    (directly-constructed plans)
 
     @property
     def n_nodes(self) -> int:
@@ -401,6 +405,7 @@ def patch_plan(plan: Plan, delta) -> Plan:
     present adds) runs FIRST, so the tile edit — which trusts its input —
     only ever sees a validated batch.
     """
+    from repro.dyngraph import drift
     from repro.dyngraph.retile import apply_delta as apply_tiled_delta
     from repro.dyngraph.retile import apply_graph_delta
 
@@ -409,6 +414,25 @@ def patch_plan(plan: Plan, delta) -> Plan:
     mapped = delta if plan.inv is None else delta.mapped(plan.inv)
     g2 = apply_graph_delta(plan.g, mapped)
     tiled2 = apply_tiled_delta(plan.tiled, mapped)
+    # drift telemetry (DESIGN.md §17): this is the ONE funnel every actual
+    # patch event passes through — cache mem/disk hits replay a patch that
+    # was recorded when it happened, so each epoch counts exactly once.
+    # Eager seam, observability only: never raise into the patch path.
+    try:
+        drift.note_drift(
+            epoch=plan.epoch + 1,
+            touched_tiles=drift.touched_tile_count(
+                mapped, plan.tiled.tile_size, plan.tiled.n_block_cols
+            ),
+            n_tiles=tiled2.n_tiles,
+            dirty_frac=drift.dirty_vertex_frac(mapped, plan.g.n_nodes),
+            occupancy=drift.tile_occupancy(
+                g2.n_edges, tiled2.n_tiles, tiled2.tile_size
+            ),
+            occupancy0=plan.occupancy0,
+        )
+    except Exception:  # noqa: BLE001
+        pass
     if plan.hybrid == "auto":
         # `apply_tiled_delta` reclassifies an existing partition in place,
         # but only the PLAN knows the auto policy: a delta can push the
@@ -455,9 +479,13 @@ def build_plan(
         tiled = attach_partition(
             tiled, mode=hybrid, threshold=int(hybrid_threshold)
         )
+    from repro.dyngraph.drift import tile_occupancy
+
     return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv,
                 reorder=reorder, hybrid=hybrid,
-                hybrid_threshold=int(hybrid_threshold))
+                hybrid_threshold=int(hybrid_threshold),
+                occupancy0=tile_occupancy(
+                    g.n_edges, tiled.n_tiles, tile_size))
 
 
 class PlanCache:
@@ -749,8 +777,16 @@ class PlanCache:
             if perm is not None:
                 inv = np.empty_like(perm)
                 inv[perm] = np.arange(n_nodes)
+            from repro.dyngraph.drift import tile_occupancy
+
+            # occupancy0 is not persisted (the npz layout is frozen at v3):
+            # a disk-loaded plan re-baselines locality decay at its load
+            # state — exact for epoch-0 entries, a documented reset for
+            # patched lineages (DESIGN.md §17)
             return Plan(g=g, tiled=tiled, key=key, perm=perm, inv=inv,
                         reorder=reorder, epoch=epoch, hybrid=hybrid,
-                        hybrid_threshold=hybrid_threshold)
+                        hybrid_threshold=hybrid_threshold,
+                        occupancy0=tile_occupancy(
+                            n_edges, n_tiles, tile_size))
         except Exception:  # noqa: BLE001 — np.load raises BadZipFile/EOFError/
             return None    # pickle errors on torn files: any failure ⇒ rebuild

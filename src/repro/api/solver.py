@@ -375,6 +375,7 @@ class Solver:
                                            scope="repair")
         self.metrics.counter("solver.solves").inc()
         self.metrics.histogram("solver.solve_ms").observe(timing["solve_ms"])
+        self._note_attribution(plan2.tiled, rt, timing["solve_ms"])
         return self._wrap(plan2, result, "local", dict(
             compile=compile_stat, batch_size=1,
             repair="incremental", **timing, **extra,
@@ -508,6 +509,48 @@ class Solver:
         )
         return result, rt
 
+    def _note_attribution(self, tiled, rt: Optional[RoundTrace],
+                          solve_ms: float) -> None:
+        """Roofline model-error gauges (DESIGN.md §17): predicted vs
+        measured per-round cost from the telemetry dispatch-mix columns.
+
+        Telemetry-on only (`rt is None` → no-op, so the telemetry-off path
+        stays bit-identical), eager, and never raises into the solve path.
+        Gauges, not histograms: the operator question is "what is the
+        model error NOW / is it trending" — `perf.roofline_error_pct`
+        drifting under churn means the dispatch mix no longer matches what
+        the plan priced.
+        """
+        if rt is None or not rt.rounds:
+            return
+        try:
+            from repro.perf.roofline import round_cost_attribution
+
+            dense = sum(rt.tiles_dense) / rt.rounds if rt.tiles_dense else 0.0
+            if dense <= 0.0 and rt.tiles_total:
+                # engines that don't fill COL_TILES_DENSE (segment): every
+                # non-skipped stored tile went through the one dense path
+                dense = max(
+                    rt.tiles_total - sum(rt.tiles_skipped) / rt.rounds, 0.0
+                )
+            p = tiled.partition
+            # the sentinel-padded COO tail is the per-round sparse stream
+            # length — padding entries are processed too, so they cost
+            sparse = float(p.sp_rows.shape[0]) if p is not None else 0.0
+            att = round_cost_attribution(
+                dense_tiles=dense, sparse_edges=sparse,
+                tile_size=tiled.tile_size, storage=tiled.storage,
+                measured_s=(solve_ms / 1e3) / rt.rounds,
+            )
+            self.metrics.gauge("perf.roofline_predicted_us").set(
+                att["predicted_us"])
+            self.metrics.gauge("perf.roofline_measured_us").set(
+                att["measured_us"])
+            self.metrics.gauge("perf.roofline_error_pct").set(
+                att["error_pct"])
+        except Exception:  # noqa: BLE001
+            pass
+
     def _solve_local(
         self, plan: Plan, key: jax.Array, trace: Optional[Trace] = None
     ) -> SolveResult:
@@ -523,6 +566,7 @@ class Solver:
         result, rt = self._split_telemetry(out, plan.g, plan.tiled)
         self.metrics.counter("solver.solves").inc()
         self.metrics.histogram("solver.solve_ms").observe(timing["solve_ms"])
+        self._note_attribution(plan.tiled, rt, timing["solve_ms"])
         return self._wrap(plan, result, "local", dict(
             compile=compile_stat, batch_size=1, **timing,
         ), telemetry=rt)
@@ -558,6 +602,7 @@ class Solver:
         )
         self.metrics.counter("solver.solves").inc(len(plans))
         self.metrics.histogram("solver.batch_ms").observe(timing["solve_ms"])
+        self._note_attribution(batch.tiled, rt, timing["solve_ms"])
         converged = bool(result.converged)
 
         # attribution (DESIGN.md §14): ONE dispatch served the whole bucket,

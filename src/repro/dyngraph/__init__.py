@@ -13,12 +13,21 @@ pipeline's full price (DESIGN.md §12):
             bit-exact with a from-scratch rebuild of the mutated graph
   repair    warm-started round-engine re-entry: seed the prior solution,
             reset only the dirty frontier, converge in a handful of rounds
+  drift     per-epoch churn observability (DESIGN.md §17): touched-tiles,
+            dirty fraction, tile-locality decay vs the epoch-0 build —
+            the signal the ROADMAP's re-anchoring policy will gate on
 
 Front-door plumbing: `Plan.apply_delta` (epoch-suffixed cache keys, stale
 pre-delta entries evicted), `SolveOptions.repair`, `Solver.update`, and the
 serve_mis `update` service op / CLI verb.
 """
 from repro.dyngraph.delta import EdgeDelta, random_delta
+from repro.dyngraph.drift import (
+    dirty_vertex_frac,
+    note_drift,
+    tile_occupancy,
+    touched_tile_count,
+)
 from repro.dyngraph.repair import dirty_mask, repair_mis, warm_state
 from repro.dyngraph.retile import apply_delta, apply_graph_delta
 from repro.dyngraph.stream import (
@@ -32,5 +41,6 @@ __all__ = [
     "EdgeDelta", "random_delta",
     "apply_delta", "apply_graph_delta",
     "dirty_mask", "repair_mis", "warm_state",
+    "dirty_vertex_frac", "note_drift", "tile_occupancy", "touched_tile_count",
     "iter_edges", "load_delta", "load_graph_stream", "parse_delta",
 ]

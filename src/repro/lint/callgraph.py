@@ -47,7 +47,20 @@ from repro.lint.analysis import (
 # The hot-path seed list (DESIGN.md §15): jitted entry points by leaf name,
 # engine round bodies by method name (restricted to RoundEngine subclasses),
 # and every Pallas kernel body by suffix.
-SEED_FUNCTIONS = frozenset({"_tc_mis_impl", "_run_phases_impl", "repair_mis"})
+SEED_FUNCTIONS = frozenset(
+    {
+        "_tc_mis_impl",
+        "_run_phases_impl",
+        "repair_mis",
+        # jitted helpers reached from the warm-start / validation paths —
+        # seeded so hot-path reachability covers them even when the round
+        # entry points are refactored (ISSUE 10).  The obs/ metrics layer is
+        # deliberately NOT seeded: it is eager-only by contract (§14/§17).
+        "warm_state",
+        "_covered",
+        "_covered_bits",
+    }
+)
 SEED_ENGINE_METHODS = frozenset(
     {
         "step",

@@ -1,16 +1,30 @@
-"""repro.obs — observability for the TC-MIS stack (DESIGN.md §14).
+"""repro.obs — observability for the TC-MIS stack (DESIGN.md §14, §17).
 
-Three legs, importable independently:
+Five legs, importable independently:
 
-* `rounds`  — on-device round-telemetry buffer layout + host `RoundTrace`
-              (numpy-only; `core.engine` imports its column constants)
-* `trace`   — `Trace` / `trace_span` span tracing + JSONL export
-* `metrics` — `MetricsRegistry` counters/gauges/histograms + the
-              process-wide `REGISTRY`
+* `rounds`   — on-device round-telemetry buffer layout + host `RoundTrace`
+               (numpy-only; `core.engine` imports its column constants)
+* `trace`    — `Trace` / `trace_span` span tracing + JSONL export
+* `metrics`  — `MetricsRegistry` counters/gauges/fixed-bucket histograms
+               (p50/p95/p99) + the process-wide `REGISTRY`
+* `bench`    — stamped bench snapshots, the append-only `BENCH_history/`
+               store, and the `bench-diff` regression gate
+* `promtext` — Prometheus text exposition over a metrics snapshot
 
-`python -m repro.obs report trace.jsonl` renders the JSONL stream.
+`python -m repro.obs report trace.jsonl` renders the JSONL stream;
+`python -m repro.obs bench-diff <base> <head>` gates perf regressions.
 """
-from .metrics import REGISTRY, Counter, Gauge, Histogram, MetricsRegistry
+from .bench import append_history, bench_env, diff, load_records, stamp, write_bench
+from .metrics import (
+    DEFAULT_BUCKETS,
+    QUANTILES,
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from .promtext import to_promtext, write_promtext
 from .rounds import (
     COL_ALIVE,
     COL_FRONTIER,
@@ -24,7 +38,17 @@ from .rounds import (
 from .trace import JsonlWriter, Span, Trace, trace_span
 
 __all__ = [
+    "DEFAULT_BUCKETS",
+    "QUANTILES",
     "REGISTRY",
+    "append_history",
+    "bench_env",
+    "diff",
+    "load_records",
+    "stamp",
+    "write_bench",
+    "to_promtext",
+    "write_promtext",
     "Counter",
     "Gauge",
     "Histogram",

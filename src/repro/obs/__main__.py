@@ -1,4 +1,6 @@
-"""`python -m repro.obs report <trace.jsonl>` — see report.py."""
+"""`python -m repro.obs report <trace.jsonl>` renders telemetry;
+`python -m repro.obs bench-diff <base> <head>` gates perf regressions —
+see report.py / bench.py."""
 import sys
 
 from .report import main

@@ -1,0 +1,107 @@
+"""Prometheus text exposition over a metrics snapshot (DESIGN.md §17).
+
+`to_promtext(snapshot)` renders the flat dict `MISService.metrics_snapshot()`
+(or any `MetricsRegistry.snapshot()`) returns into the Prometheus text
+format, version 0.0.4 — the format node_exporter's textfile collector and
+every Prometheus-compatible scraper ingest.  `write_promtext` is the
+textfile-export seam the serving CLI's ``--metrics-path`` flag drives:
+atomically replace one ``.prom`` file per process, point the collector's
+glob at it, done — no HTTP listener inside the solver process.
+
+Naming rules (stable — dashboards key on these):
+
+* every metric is prefixed ``repro_``; registry dots become underscores
+  (``service.queue_ms`` → ``repro_service_queue_ms``), any other
+  non-``[a-zA-Z0-9_]`` character becomes ``_`` too;
+* counters (int snapshots) get the conventional ``_total`` suffix;
+* gauges (float snapshots) export verbatim;
+* histograms (dict snapshots with ``buckets``) export the classic triplet —
+  cumulative ``_bucket{le="..."}`` series ending at ``le="+Inf"``, ``_sum``
+  and ``_count`` — PLUS ``{quantile="0.5|0.95|0.99"}`` gauge-style lines
+  from the snapshot's p50/p95/p99 upper-bound estimates, so SLO panels can
+  plot quantiles without a PromQL `histogram_quantile` round-trip.
+
+The kind is recovered from the snapshot VALUE SHAPE (int / float / dict):
+snapshots deliberately carry no side-channel type table, and the shape
+mapping is exact for the three instrument kinds `repro.obs.metrics` emits.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict
+
+PREFIX = "repro_"
+
+_INVALID = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def metric_name(name: str, prefix: str = PREFIX) -> str:
+    """Sanitised exposition name: prefix + dots/invalid chars → ``_``."""
+    out = prefix + _INVALID.sub("_", name)
+    if out[0].isdigit():
+        out = "_" + out
+    return out
+
+
+def _fmt(v) -> str:
+    """Prometheus number formatting (ints bare, floats via repr)."""
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    return repr(float(v))
+
+
+def _histogram_lines(name: str, snap: Dict) -> list:
+    lines = [f"# TYPE {name} histogram"]
+    for le, cum in snap.get("buckets", []):
+        le_s = le if isinstance(le, str) else _fmt(float(le))
+        lines.append(f'{name}_bucket{{le="{le_s}"}} {cum}')
+    if not snap.get("buckets"):
+        # empty histogram: still expose the +Inf bucket so the series exists
+        lines.append(f'{name}_bucket{{le="+Inf"}} 0')
+    lines.append(f"{name}_sum {_fmt(snap.get('total', 0.0))}")
+    lines.append(f"{name}_count {snap.get('count', 0)}")
+    for q, key in ((0.5, "p50"), (0.95, "p95"), (0.99, "p99")):
+        if snap.get(key) is not None:
+            lines.append(f'{name}{{quantile="{q}"}} {_fmt(snap[key])}')
+    return lines
+
+
+def to_promtext(snapshot: Dict[str, object], prefix: str = PREFIX) -> str:
+    """Render a metrics snapshot as Prometheus exposition text.
+
+    Deterministic output (names sorted) so repeated exports of the same
+    state are byte-identical — textfile collectors diff on mtime+content.
+    """
+    lines = []
+    for raw, val in sorted(snapshot.items()):
+        name = metric_name(raw, prefix)
+        if isinstance(val, dict):
+            lines += _histogram_lines(name, val)
+        elif isinstance(val, bool) or isinstance(val, int):
+            lines.append(f"# TYPE {name}_total counter")
+            lines.append(f"{name}_total {_fmt(val)}")
+        elif isinstance(val, float):
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name} {_fmt(val)}")
+        # non-numeric, non-dict values (shouldn't occur) are skipped: the
+        # exposition format has no string samples
+    return "\n".join(lines) + "\n" if lines else ""
+
+
+def write_promtext(
+    snapshot: Dict[str, object], path: str, prefix: str = PREFIX
+) -> None:
+    """Atomic textfile export: write to a temp sibling, `os.replace` into
+    place — a scraper never reads a half-written file."""
+    text = to_promtext(snapshot, prefix)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)

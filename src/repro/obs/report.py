@@ -1,4 +1,4 @@
-"""`python -m repro.obs report trace.jsonl` — render traces for humans.
+"""`python -m repro.obs report trace.jsonl` — render telemetry for humans.
 
 Three record kinds land in one JSONL stream (`JsonlWriter`):
 
@@ -6,11 +6,20 @@ Three record kinds land in one JSONL stream (`JsonlWriter`):
     {"kind": "rounds",  "rounds": R, "alive": [...], ...}
     {"kind": "metrics", "metrics": {...}}
 
+plus bench-history records (no ``kind`` — `repro.obs.bench` schema with
+``key``/``metric``/``value_us``), so ``report`` pointed at a
+``BENCH_history/*.jsonl`` file renders a bench section too.
+
 The report renders each in order: trace records as an indented span tree
 with durations, rounds records as a per-round table plus a sparkline of
-the alive series, metrics records as a name → value table.  Exit code 2
-when the file holds no renderable records — the CI smoke step relies on
-that to catch an empty pipe.
+the alive series, metrics records as a name → value table whose histogram
+entries form the *health* section (count/mean/p50/p95/p99), bench records
+as one timing line each.  ``--json`` swaps the human rendering for one
+machine-readable document.  Exit code 2 when the file holds no renderable
+records — the CI smoke step relies on that to catch an empty pipe.
+
+``python -m repro.obs bench-diff <base> <head>`` (the CI regression gate)
+dispatches to `repro.obs.bench`; see there for thresholds and exit codes.
 """
 from __future__ import annotations
 
@@ -25,12 +34,14 @@ _SPARK = "▁▂▃▄▅▆▇█"
 
 
 def _sparkline(values: List[int]) -> str:
+    """Unicode mini-chart; total-safe for empty, single-point, all-zero
+    and negative-valued series (negatives clamp to the bottom glyph)."""
     if not values:
         return ""
     hi = max(values)
     if hi <= 0:
         return _SPARK[0] * len(values)
-    return "".join(_SPARK[min(int(v * 8 / hi), 7)] for v in values)
+    return "".join(_SPARK[min(max(int(v * 8 / hi), 0), 7)] for v in values)
 
 
 def render_trace(d: Dict, out) -> None:
@@ -48,12 +59,17 @@ def render_trace(d: Dict, out) -> None:
 def render_rounds(d: Dict, out) -> None:
     rt = RoundTrace.from_dict(d)
     s = rt.summary()
+    if not rt.rounds:
+        # a 0-round trace is legal (empty graph / no-op update): summary()
+        # carries no per-round keys, so bail before indexing any
+        out.write("rounds 0  (empty trace)\n")
+        return
     out.write(
         f"rounds {rt.rounds}"
         f"  alive {s.get('alive0', 0)}→{s.get('alive_final', 0)}"
         f"  selected {s.get('selected_total', 0)}"
     )
-    if rt.tiles_total:
+    if rt.tiles_total and s.get("tiles_skipped_mean") is not None:
         out.write(f"  tiles_skipped {s['tiles_skipped_mean']}/{rt.tiles_total}")
     out.write("\n")
     out.write(f"  alive    {_sparkline(rt.alive)}\n")
@@ -66,19 +82,56 @@ def render_rounds(d: Dict, out) -> None:
         )
 
 
+def _fmt_histogram(val: Dict) -> str:
+    """Health-section one-liner for a histogram snapshot: the SLO view."""
+    if not val.get("count"):
+        return "n=0"
+    parts = [f"n={val['count']}"]
+    for k in ("mean", "p50", "p95", "p99", "max"):
+        if val.get(k) is not None:
+            parts.append(f"{k}={val[k]}")
+    return " ".join(parts)
+
+
 def render_metrics(d: Dict, out) -> None:
     metrics = d.get("metrics", {})
     out.write(f"metrics ({len(metrics)} instruments)\n")
     for name, val in sorted(metrics.items()):
         if isinstance(val, dict):
-            val = " ".join(f"{k}={v}" for k, v in val.items() if v is not None)
+            # histogram snapshot → the health line (quantiles, not the
+            # raw bucket vector — promtext carries that)
+            val = _fmt_histogram(val)
         out.write(f"  {name:<44} {val}\n")
 
 
-def report(path: str, out=None) -> int:
-    """Render every record in `path`; return the count rendered."""
-    out = out or sys.stdout
-    rendered = 0
+def render_bench(d: Dict, out) -> None:
+    """One bench-history record → one timing line."""
+    out.write(
+        f"bench {d.get('key', '?')} [{d.get('metric', '?')}]"
+        f" {d.get('value_us', 0.0)}us"
+        f"  @{d.get('git_sha', '?')} {d.get('timestamp', '?')}\n"
+    )
+
+
+def _classify(d: Dict) -> str:
+    kind = d.get("kind")
+    if kind in ("trace", "rounds", "metrics"):
+        return kind
+    if kind is None and "metric" in d and "value_us" in d:
+        return "bench"
+    return "unknown"
+
+
+_RENDERERS = {
+    "trace": render_trace,
+    "rounds": render_rounds,
+    "metrics": render_metrics,
+    "bench": render_bench,
+}
+
+
+def _load(path: str, out) -> List[Dict]:
+    records = []
     with open(path) as f:
         for lineno, line in enumerate(f, 1):
             line = line.strip()
@@ -89,32 +142,84 @@ def report(path: str, out=None) -> int:
             except json.JSONDecodeError as e:
                 out.write(f"! line {lineno}: bad JSON ({e})\n")
                 continue
-            kind = d.get("kind")
-            if kind == "trace":
-                render_trace(d, out)
-            elif kind == "rounds":
-                render_rounds(d, out)
-            elif kind == "metrics":
-                render_metrics(d, out)
-            else:
-                out.write(f"! line {lineno}: unknown kind {kind!r}\n")
+            if not isinstance(d, dict):
+                out.write(f"! line {lineno}: not an object\n")
                 continue
-            rendered += 1
+            records.append(d)
+    return records
+
+
+def report(path: str, out=None) -> int:
+    """Render every record in `path`; return the count rendered."""
+    out = out or sys.stdout
+    rendered = 0
+    for d in _load(path, out):
+        kind = _classify(d)
+        fn = _RENDERERS.get(kind)
+        if fn is None:
+            out.write(f"! unknown kind {d.get('kind')!r}\n")
+            continue
+        fn(d, out)
+        rendered += 1
     return rendered
 
 
+def report_json(path: str, out=None) -> Dict:
+    """Machine-readable digest: per-kind counts + the parsed records, with
+    rounds records augmented by their `RoundTrace.summary()` scalars."""
+    out = out or sys.stdout
+    counts: Dict[str, int] = {}
+    records = []
+    for d in _load(path, out=_NullOut()):
+        kind = _classify(d)
+        if kind == "unknown":
+            continue
+        counts[kind] = counts.get(kind, 0) + 1
+        if kind == "rounds":
+            try:
+                d = dict(d, summary=RoundTrace.from_dict(d).summary())
+            except (KeyError, ValueError, TypeError):
+                pass
+        records.append(d)
+    return dict(path=path, n_records=len(records), counts=counts,
+                records=records)
+
+
+class _NullOut:
+    def write(self, _s: str) -> None:
+        pass
+
+
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "bench-diff":
+        # the regression gate has its own argparse (thresholds, --json):
+        # hand the remaining argv straight over so its --help stays whole
+        from . import bench
+
+        return bench.main(argv[1:])
+
     p = argparse.ArgumentParser(
         prog="python -m repro.obs",
         description="render repro.obs JSONL telemetry (trace tree, "
-                    "per-round series, metrics tables)",
+                    "per-round series, metrics/health tables, bench "
+                    "history); `bench-diff` compares two history files",
     )
     sub = p.add_subparsers(dest="cmd", required=True)
     rp = sub.add_parser("report", help="render a JSONL telemetry file")
     rp.add_argument("path", help="JSONL file written by the service / solver")
+    rp.add_argument("--json", action="store_true",
+                    help="emit a machine-readable JSON digest instead")
+    sub.add_parser("bench-diff",
+                   help="compare two bench-history files (see bench-diff "
+                        "--help); exit 1 on regression")
     args = p.parse_args(argv)
 
     if args.cmd == "report":
+        if args.json:
+            doc = report_json(args.path)
+            print(json.dumps(doc, indent=2))
+            return 0 if doc["n_records"] else 2
         n = report(args.path)
         if n == 0:
             print(f"# no renderable records in {args.path}", file=sys.stderr)

@@ -7,11 +7,15 @@ from repro.perf.roofline import (
     dense_tile_cost_s,
     hybrid_density_threshold,
     parse_collective_bytes,
+    predicted_round_cost_s,
     roofline_from_compiled,
+    round_cost_attribution,
     sparse_edge_cost_s,
 )
 
 __all__ = [
+    "predicted_round_cost_s",
+    "round_cost_attribution",
     "HBM_BW",
     "ICI_BW",
     "PEAK_FLOPS",

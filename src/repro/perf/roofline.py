@@ -182,6 +182,61 @@ def sparse_edge_cost_s() -> float:
     return _SPARSE_BYTES_PER_EDGE / HBM_BW
 
 
+def predicted_round_cost_s(
+    dense_tiles: float,
+    sparse_edges: float = 0.0,
+    *,
+    tile_size: int,
+    storage: str = "int8",
+    lanes: int = 8,
+) -> float:
+    """Model-predicted cost of ONE solver round (seconds).
+
+    The same two primitives the hybrid router prices with, summed over a
+    round's actual dispatch mix: ``dense_tiles`` tiles through the dense
+    path (telemetry COL_TILES_DENSE, skip-gating already subtracted) plus
+    ``sparse_edges`` half-edges through the COO/segment tail.  Fractional
+    tile counts are fine — callers pass per-round means.
+    """
+    dense = max(float(dense_tiles), 0.0)
+    edges = max(float(sparse_edges), 0.0)
+    return (dense * dense_tile_cost_s(tile_size, storage, lanes)
+            + edges * sparse_edge_cost_s())
+
+
+def round_cost_attribution(
+    *,
+    dense_tiles: float,
+    sparse_edges: float,
+    tile_size: int,
+    storage: str,
+    measured_s: float,
+    lanes: int = 8,
+) -> Dict[str, float]:
+    """Predicted-vs-measured per-round cost: the model-error gauge.
+
+    Following HC-SpMM's practice of continuously scoring its hybrid-core
+    cost model, this closes the loop on the router's pricing: `error_pct`
+    = (measured − predicted) / predicted × 100.  Large positive error on
+    a CPU backend is EXPECTED (the constants model a TPU v5e roofline) —
+    the signal is the trend, not the absolute: a drifting error under
+    churn means the dispatch mix no longer matches what the plan priced.
+    """
+    predicted = predicted_round_cost_s(
+        dense_tiles, sparse_edges,
+        tile_size=tile_size, storage=storage, lanes=lanes,
+    )
+    measured = max(float(measured_s), 0.0)
+    error_pct = (
+        (measured - predicted) / predicted * 100.0 if predicted > 0 else 0.0
+    )
+    return dict(
+        predicted_us=round(predicted * 1e6, 3),
+        measured_us=round(measured * 1e6, 3),
+        error_pct=round(error_pct, 1),
+    )
+
+
 def hybrid_density_threshold(
     tile_size: int, storage: str = "int8", lanes: int = 8
 ) -> int:

@@ -73,6 +73,10 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--metrics", action="store_true",
                    help="print the merged metrics snapshot as JSON on stderr "
                         "at exit")
+    p.add_argument("--metrics-path", default=None, metavar="FILE",
+                   help="write the merged snapshot as Prometheus text to "
+                        "FILE at exit (atomic replace — point a textfile "
+                        "collector's glob at it; DESIGN.md §17)")
     return p
 
 
@@ -169,6 +173,11 @@ def main(argv=None) -> int:
     if args.metrics:
         print(json.dumps(service.metrics_snapshot(), sort_keys=True),
               file=sys.stderr)
+    if args.metrics_path:
+        from repro.obs.promtext import write_promtext
+
+        write_promtext(service.metrics_snapshot(), args.metrics_path)
+        print(f"# wrote promtext to {args.metrics_path}", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -297,21 +297,26 @@ class MISService:
         self._steps += 1
         self.metrics.counter("service.steps").inc()
         self.metrics.histogram("service.window").observe(len(reqs))
+        # health gauges (DESIGN.md §17), sampled once per worker step:
+        # what's still waiting behind this window, and what's in flight now
+        self.metrics.gauge("service.queue_depth").set(len(self._queue))
+        self.metrics.gauge("service.inflight").set(len(reqs))
         t_pop = time.perf_counter()
         solves = [r for r in reqs if isinstance(r, Request)]
-        with trace_span(tr, "service.batch", size=len(solves)):
-            results = dict(zip(
-                (r.id for r in solves),
-                self.solver.solve_many(
-                    [r.plan for r in solves], trace=tr
-                ),
-            ))
-        for r in reqs:
-            if isinstance(r, UpdateRequest):
-                try:
-                    results[r.id] = self._run_update(r, tr)
-                except (ValueError, KeyError) as e:
-                    results[r.id] = e
+        with trace_span(tr, "service.step", size=len(reqs)):
+            with trace_span(tr, "service.batch", size=len(solves)):
+                results = dict(zip(
+                    (r.id for r in solves),
+                    self.solver.solve_many(
+                        [r.plan for r in solves], trace=tr
+                    ),
+                ))
+            for r in reqs:
+                if isinstance(r, UpdateRequest):
+                    try:
+                        results[r.id] = self._run_update(r, tr)
+                    except (ValueError, KeyError) as e:
+                        results[r.id] = e
 
         responses = []
         for req, res in ((r, results[r.id]) for r in reqs):
@@ -361,6 +366,13 @@ class MISService:
             rt = getattr(res, "telemetry", None)
             if rt is not None:
                 stats["rounds_summary"] = rt.summary()
+            # per-op SLO latency (enqueue → response built): one fixed-
+            # bucket histogram per op, so p50/p95/p99 read per route
+            op = ("update" if is_update
+                  else "batched" if res.placement == "batched" else "solve")
+            self.metrics.histogram(f"service.latency_ms.{op}").observe(
+                round((time.perf_counter() - req.t_enqueue) * 1e3, 3)
+            )
             responses.append(Response(
                 id=req.id,
                 source=req.source,
@@ -375,6 +387,16 @@ class MISService:
             self._results[req.id] = res
             while len(self._results) > max(self.config.result_entries, 1):
                 self._results.popitem(last=False)
+        self.metrics.gauge("service.inflight").set(0)
+        if tr is not None:
+            # per-stage latency distributions over the span taxonomy
+            # (service.step ⊃ service.batch/validate; solver.solve ⊃
+            # plan/pack/compile/execute; solver.update) — traced steps
+            # only, so the untraced path records nothing extra
+            for s in tr.spans:
+                self.metrics.histogram(
+                    f"service.span_ms.{s.name}"
+                ).observe(round(s.dur_ms, 3))
         if self._trace_writer is not None:
             self._trace_writer.write_trace(tr)
             # one rounds record per distinct RoundTrace — batched members

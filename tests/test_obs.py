@@ -65,7 +65,14 @@ def test_metrics_registry_basics():
     snap = reg.snapshot()
     assert snap["a"] == 3
     assert snap["g"] == 7.0
-    assert snap["h"] == dict(count=2, total=4.0, min=1.0, max=3.0, mean=2.0)
+    h = snap["h"]
+    assert (h["count"], h["total"], h["min"], h["max"], h["mean"]) == (
+        2, 4.0, 1.0, 3.0, 2.0,
+    )
+    # quantiles are bucket upper edges clamped to the observed max
+    assert h["p50"] == 1.0 and h["p95"] == 3.0 and h["p99"] == 3.0
+    # cumulative bucket counts, +Inf last
+    assert h["buckets"][-1] == ["+Inf", 2]
     # first registration fixes the kind
     with pytest.raises(TypeError):
         reg.gauge("a")
@@ -363,3 +370,297 @@ def test_ci_guards_clean_on_repo():
     )
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "0 error(s)" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# §17: fixed-bucket histogram quantiles
+# --------------------------------------------------------------------------
+
+def test_histogram_quantiles_monotone_and_upper_bound():
+    from repro.obs.metrics import Histogram
+
+    vals = [0.2, 0.4, 0.9, 3.0, 7.0, 40.0, 90.0, 400.0, 2000.0, 9000.0,
+            20000.0]   # last one lands in the +Inf overflow bucket
+    h = Histogram("lat")
+    for v in vals:
+        h.observe(v)
+    # monotone in q
+    qs = [h.quantile(q) for q in (0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0)]
+    assert qs == sorted(qs)
+    # upper-bound property: never below the true q-th ranked observation
+    s = sorted(vals)
+    for q in (0.1, 0.5, 0.9, 0.95, 0.99):
+        rank = max(int(-(-q * len(s) // 1)), 1)
+        assert h.quantile(q) >= s[rank - 1], q
+    # ... and never above the observed max (overflow reports the max)
+    assert h.quantile(0.99) <= max(vals)
+    assert h.quantile(1.0) == max(vals)
+    # empty histogram: None quantiles, count-0 snapshot
+    empty = Histogram("e")
+    assert empty.quantile(0.5) is None
+    snap = empty.snapshot()
+    assert snap["count"] == 0 and snap["p99"] is None
+
+
+def test_histogram_merge_across_registries():
+    from repro.obs import MetricsRegistry
+    from repro.obs.metrics import Histogram
+
+    a, b = MetricsRegistry("a"), MetricsRegistry("b")
+    for v in (1.0, 2.0):
+        a.histogram("lat").observe(v)
+    for v in (300.0, 700.0):
+        b.histogram("lat").observe(v)
+    a.counter("n").inc(2)
+    b.counter("n").inc(3)
+    b.gauge("depth").set(9)
+    a.merge(b)
+    snap = a.snapshot()
+    assert snap["n"] == 5                       # counters add
+    assert snap["depth"] == 9.0                 # gauges take the last value
+    h = snap["lat"]
+    assert h["count"] == 4 and h["min"] == 1.0 and h["max"] == 700.0
+    assert h["p99"] == 700.0
+    # merging a different bucket scheme would silently mis-bin: refuse
+    other = Histogram("lat", buckets=(1.0, 10.0))
+    with pytest.raises(ValueError):
+        a.histogram("lat").merge(other)
+
+
+# --------------------------------------------------------------------------
+# §17: bench history + bench-diff
+# --------------------------------------------------------------------------
+
+def test_write_bench_stamps_and_appends_history(tmp_path):
+    from repro.obs.bench import load_records, write_bench
+
+    hist = str(tmp_path / "hist")
+    doc = dict(bench="t", backend="fake", results=[
+        dict(op="a", n=4, us_per_call=5.0, rounds=3),
+        dict(op="b", n=4, solve_ms=2.0, mis_size=7),
+    ])
+    out = write_bench(doc, str(tmp_path / "snap.json"), history_dir=hist)
+    # stamp fills the header but never overwrites the bench's own fields
+    assert out["schema_version"] == 1 and out["backend"] == "fake"
+    assert out["git_sha"] and out["timestamp"] and out["jax_version"]
+    snap = json.loads((tmp_path / "snap.json").read_text())
+    assert snap["bench"] == "t" and snap["git_sha"] == out["git_sha"]
+    recs = load_records(hist)
+    assert len(recs) == 2
+    by_metric = {r["metric"]: r for r in recs}
+    # values normalised to µs; outcome fields stay out of the identity key
+    assert by_metric["us_per_call"]["value_us"] == 5.0
+    assert by_metric["solve_ms"]["value_us"] == 2000.0
+    assert "rounds" not in by_metric["us_per_call"]["key"]
+    assert "op=a" in by_metric["us_per_call"]["key"]
+    # append-only: a second write grows the file
+    write_bench(doc, str(tmp_path / "snap.json"), history_dir=hist)
+    assert len(load_records(hist)) == 4
+    # empty history dir string disables the append, snapshot still written
+    write_bench(doc, str(tmp_path / "snap2.json"), history_dir="")
+    assert (tmp_path / "snap2.json").exists()
+
+
+def _bench_records(value_us, metric="us_per_call", key="bench=t op=a", k=1):
+    return [dict(schema=1, bench="t", key=key, metric=metric,
+                 value_us=v) for v in ([value_us] * k)]
+
+
+def test_bench_diff_verdicts_and_bars():
+    from repro.obs.bench import diff
+
+    base = _bench_records(1000.0)
+    # small drift: inside both bars -> same
+    assert diff(base, _bench_records(1100.0))["status"] == "ok"
+    # 2.5x slowdown: both bars trip -> regression
+    rep = diff(base, _bench_records(2500.0))
+    assert rep["status"] == "regression"
+    assert rep["regressions"][0]["ratio"] == 2.5
+    # mirrored improvement: reported, never failing
+    rep = diff(base, _bench_records(300.0))
+    assert rep["status"] == "ok" and len(rep["improvements"]) == 1
+    # micro-kernel jitter: 1.9x relative but under the 200us floor -> same
+    rep = diff(_bench_records(100.0), _bench_records(190.0))
+    assert rep["status"] == "ok" and not rep["regressions"]
+    # slow op drifting a few percent: over the floor, under the bar -> same
+    rep = diff(_bench_records(100000.0), _bench_records(110000.0))
+    assert rep["status"] == "ok" and not rep["regressions"]
+    # median-of-k: one noisy outlier run must not gate
+    noisy = (_bench_records(1000.0) + _bench_records(1000.0)
+             + _bench_records(5000.0))
+    rep = diff(noisy, _bench_records(1010.0))
+    assert rep["status"] == "ok"
+    assert rep["rows"][0]["base_us"] == 1000.0      # the median, not the max
+    # disjoint keys must fail loudly, not pass vacuously
+    rep = diff(base, _bench_records(1000.0, key="bench=t op=OTHER"))
+    assert rep["status"] == "no-overlap"
+
+
+def test_bench_diff_cli_exit_codes(tmp_path, capsys):
+    from repro.obs.bench import main as bench_main
+
+    def _write(name, records):
+        p = tmp_path / name
+        p.write_text("".join(json.dumps(r) + "\n" for r in records))
+        return str(p)
+
+    base = _write("base.jsonl", _bench_records(1000.0))
+    same = _write("same.jsonl", _bench_records(1050.0))
+    slow = _write("slow.jsonl", _bench_records(2000.0))
+    other = _write("other.jsonl", _bench_records(1000.0, key="bench=u op=z"))
+    assert bench_main([base, same]) == 0
+    assert bench_main([base, slow]) == 1           # synthetic 2x slowdown
+    assert bench_main([base, other]) == 2          # mis-pointed baseline
+    # the report CLI front door dispatches the subcommand too
+    assert report_main(["bench-diff", base, same]) == 0
+    assert report_main(["bench-diff", base, slow, "--json"]) == 1
+    out = capsys.readouterr().out
+    assert '"status": "regression"' in out
+    # raising the relative bar clears the 2x verdict
+    assert bench_main([base, slow, "--rel-bar", "1.5"]) == 0
+
+
+# --------------------------------------------------------------------------
+# §17: Prometheus text exposition
+# --------------------------------------------------------------------------
+
+def test_promtext_rendering_and_atomic_write(tmp_path):
+    from repro.obs import MetricsRegistry, to_promtext, write_promtext
+
+    reg = MetricsRegistry("t")
+    reg.counter("svc.requests").inc(3)
+    reg.gauge("svc.queue_depth").set(1.5)
+    reg.histogram("svc.latency_ms").observe(2.0)
+    txt = to_promtext(reg.snapshot())
+    assert "# TYPE repro_svc_requests_total counter" in txt
+    assert "repro_svc_requests_total 3" in txt
+    assert "repro_svc_queue_depth 1.5" in txt
+    assert 'repro_svc_latency_ms_bucket{le="2.5"} 1' in txt
+    assert 'repro_svc_latency_ms_bucket{le="+Inf"} 1' in txt
+    assert "repro_svc_latency_ms_sum 2.0" in txt
+    assert "repro_svc_latency_ms_count 1" in txt
+    assert 'repro_svc_latency_ms{quantile="0.99"} 2.0' in txt
+    assert txt.endswith("\n")
+    path = tmp_path / "metrics.prom"
+    write_promtext(reg.snapshot(), str(path))
+    assert path.read_text() == txt
+    assert list(tmp_path.iterdir()) == [path]      # no tmp file left behind
+
+
+# --------------------------------------------------------------------------
+# §17: service health (SLO histograms, gauges, span stages) + drift + roofline
+# --------------------------------------------------------------------------
+
+def test_service_health_drift_and_attribution(tmp_path):
+    from repro.dyngraph import random_delta
+
+    before_epochs = REGISTRY.snapshot().get("dyngraph.epochs", 0)
+    svc = MISService(ServeConfig(
+        engine="tiled_ref", max_batch=2, repair="incremental",
+        telemetry=True, trace_path=str(tmp_path / "trace.jsonl"),
+    ))
+    svc.submit(_graph(n=96, seed=21))
+    svc.submit(_graph(n=96, seed=22))
+    responses = svc.drain()
+    assert all(r.valid for r in responses)
+    # a chained delta stream: each update targets the previous one
+    target = responses[0].id
+    for step in (1, 2):
+        plan = svc._results[target].plan
+        delta = random_delta(plan.g, n_add=4, n_remove=4, seed=step)
+        target = svc.submit_update(target, delta)
+        (r,) = svc.drain()
+        assert r.valid
+
+    snap = svc.metrics_snapshot()
+    # per-op SLO latency histograms (enqueue -> response)
+    assert snap["service.latency_ms.batched"]["count"] == 2
+    assert snap["service.latency_ms.update"]["count"] == 2
+    for op in ("batched", "update"):
+        h = snap[f"service.latency_ms.{op}"]
+        assert h["p50"] <= h["p95"] <= h["p99"] <= h["max"] * 1.0 + 1e-9 \
+            or h["p99"] == h["max"]
+    # health gauges settle to empty after drain
+    assert snap["service.queue_depth"] == 0.0
+    assert snap["service.inflight"] == 0.0
+    # span-taxonomy stage histograms (traced steps only): one span per
+    # worker step — the solve batch plus each update's own window
+    assert snap["service.span_ms.service.step"]["count"] == 3
+    assert "service.span_ms.service.batch" in snap
+    assert "service.span_ms.solver.update" in snap
+    # drift metrics: one epoch recorded per applied delta, via patch_plan
+    assert snap["dyngraph.epochs"] == before_epochs + 2
+    assert snap["dyngraph.touched_tiles"]["count"] >= 2
+    assert snap["dyngraph.epoch"] == 2.0
+    assert snap["dyngraph.occupancy"] > 0.0
+    assert 0.0 < snap["dyngraph.dirty_frac"] <= 1.0
+    assert "dyngraph.locality_decay" in snap
+    # roofline attribution gauges fed from the measured solve
+    assert snap["perf.roofline_predicted_us"] > 0.0
+    assert snap["perf.roofline_measured_us"] > 0.0
+    assert "perf.roofline_error_pct" in snap
+
+
+def test_drift_helpers():
+    from repro.dyngraph.delta import EdgeDelta
+    from repro.dyngraph.drift import (
+        dirty_vertex_frac,
+        tile_occupancy,
+        touched_tile_count,
+    )
+
+    # (0,1) lives in tile (0,0); (40,41) in tile (1,1) of a 2x2 block grid
+    delta = EdgeDelta.make([0, 40], [1, 41], [], [])
+    assert touched_tile_count(delta, tile_size=32, n_block_cols=2) == 2
+    # a cross-block edge dirties both half-edge tiles
+    cross = EdgeDelta.make([0], [40], [], [])
+    assert touched_tile_count(cross, tile_size=32, n_block_cols=2) == 2
+    assert touched_tile_count(EdgeDelta.make(), 32, 2) == 0
+    assert dirty_vertex_frac(delta, 64) == pytest.approx(4 / 64)
+    assert dirty_vertex_frac(EdgeDelta.make(), 64) == 0.0
+    assert tile_occupancy(4, 4, 32) == pytest.approx(8 / (4 * 32 * 32))
+    assert tile_occupancy(0, 4, 32) == 0.0
+
+
+def test_plan_carries_occupancy0_through_patches():
+    from repro.dyngraph.delta import EdgeDelta
+
+    solver = Solver(_opts("tiled_ref", "int8", "auto", False,
+                          repair="incremental"))
+    g = _graph(n=96, seed=23)
+    res = solver.solve(g)
+    occ0 = res.plan.occupancy0
+    assert occ0 > 0.0
+    res2 = solver.update(res, EdgeDelta.make([0, 7], [5, 9], [], []))
+    # the epoch-0 baseline rides through the patch lineage unchanged
+    assert res2.plan.occupancy0 == occ0
+    assert res2.plan.epoch == 1
+
+
+# --------------------------------------------------------------------------
+# §17: report CLI — degenerate traces and --json
+# --------------------------------------------------------------------------
+
+def test_report_handles_degenerate_traces_and_json(tmp_path, capsys):
+    from repro.obs.report import report_json
+
+    # 1-round trace with 0 alive everywhere: no div-by-zero sparklines
+    rt1 = RoundTrace.from_buffer(_fake_buffer([(0, 0, 0, 0)]), 1,
+                                 tiles_total=0)
+    path = tmp_path / "degenerate.jsonl"
+    path.write_text(rt1.to_jsonl_line() + "\n")
+    assert report_main(["report", str(path)]) == 0
+    capsys.readouterr()
+    assert report_main(["report", "--json", str(path)]) == 0
+    d = json.loads(capsys.readouterr().out)
+    assert d["n_records"] == 1 and d["counts"] == {"rounds": 1}
+    doc = report_json(str(path))
+    assert doc["records"][0]["summary"]["rounds"] == 1
+    # bench-history records render through the report CLI too
+    hist = tmp_path / "hist.jsonl"
+    hist.write_text("".join(
+        json.dumps(r) + "\n" for r in _bench_records(123.0)
+    ))
+    assert report_main(["report", str(hist)]) == 0
+    out = capsys.readouterr().out
+    assert "us_per_call" in out
